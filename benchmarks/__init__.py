@@ -1,0 +1,4 @@
+"""Benchmark harness: one module per paper table/figure, plus kernel
+microbenches and the roofline reader.  All runnable on CPU with reduced
+models; SLO comparisons use the shared virtual-clock cost model so relative
+claims reproduce deterministically."""

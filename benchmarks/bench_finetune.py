@@ -1,0 +1,42 @@
+"""Figure 3 — fine-tuning-only: FTPS for single and concurrent multi-LoRA.
+PEFT can only fine-tune one adapter at a time (cumulative time); Loquetier
+shares one backward pass across trainers."""
+from __future__ import annotations
+
+from benchmarks.common import (PeftLikeServer, build_engine, build_model,
+                               csv)
+from repro.data import datasets
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+
+def main(n_rows: int = 32, epochs: int = 1):
+    for label, n_tr in (("single", 1), ("multi", 2)):
+        model = build_model(n_adapters=max(2, n_tr))
+        eng = build_engine(model, capacity=2)
+        rows_by_tr = []
+        for i in range(n_tr):
+            rows, ev = datasets.split_eval(
+                datasets.gsm8k_like(n_rows, vocab=model.cfg.vocab, seed=i))
+            rows_by_tr.append(rows)
+            # paper Table 5: per_device_train_batch_size=2 (1 when multi)
+            eng.add_trainer(MixedLoraTrainer(
+                f"lora{i}", model.store.slot_of(f"lora{i}"), rows, ev,
+                TrainerConfig(rows_per_micro=2 if n_tr == 1 else 1,
+                              accum_steps=4, epochs=epochs)))
+        m = eng.run(max_ticks=500000)
+        rates = m.rates()
+        losses = {n: (t.train_losses[0], t.train_losses[-1])
+                  for n, t in eng.trainers.items()}
+        csv(f"finetune/loquetier_{label}", 0.0,
+            f"FTPS={rates['FTPS']:.1f};ETPS={rates['ETPS']:.1f};"
+            f"loss0={losses['lora0'][0]:.3f};lossN={losses['lora0'][1]:.3f}")
+        # PEFT: serial per adapter -> cumulative time (same microbatch=2)
+        ftps = PeftLikeServer(batch_size=2).finetune_tokens_per_s(
+            rows_by_tr[0] * epochs, adapters_serial=n_tr)
+        ftps_eff = ftps / n_tr if n_tr > 1 else ftps
+        csv(f"finetune/peft_like_{label}", 0.0,
+            f"FTPS={ftps_eff:.1f} (serial x{n_tr})")
+
+
+if __name__ == "__main__":
+    main()

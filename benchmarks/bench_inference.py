@@ -1,0 +1,32 @@
+"""Figure 2 — inference-only: SLO attainment + decode throughput vs request
+rate, single- and multi-LoRA, Loquetier vs the PEFT-like baseline."""
+from __future__ import annotations
+
+from benchmarks.common import (PeftLikeServer, build_model, csv,
+                               make_requests, run_engine_inference,
+                               slo_attainment, SLO)
+
+
+def main(rates=(1.0, 2.0, 3.0, 4.0), n_per_rps: int = 15, max_new: int = 48):
+    model = build_model(n_adapters=4)
+    vocab = model.cfg.vocab
+    for multi, n_ad in (("single", 1), ("multi", 4)):
+        for rps in rates:
+            n = int(n_per_rps * rps)
+            reqs = make_requests(n, rps, vocab, n_ad, max_new=max_new,
+                                 seed=int(rps * 10))
+            res = run_engine_inference(model, reqs, capacity=16)
+            csv(f"inference/loquetier_{multi}_rps{rps:g}",
+                res["wall"] / max(res["finished"], 1) * 1e6,
+                f"SLO={res['slo']:.3f};DTPS={res['DTPS']:.1f}")
+            # PEFT-like baseline on the identical request stream
+            reqs2 = make_requests(n, rps, vocab, n_ad, max_new=max_new,
+                                  seed=int(rps * 10))
+            done, stats = PeftLikeServer().serve(reqs2)
+            csv(f"inference/peft_like_{multi}_rps{rps:g}", 0.0,
+                f"SLO={slo_attainment(done, SLO):.3f};"
+                f"DTPS={stats['DTPS']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

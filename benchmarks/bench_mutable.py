@@ -1,0 +1,60 @@
+"""Figure 5 — mutable capacity allocation: fine-tuning concedes to inference
+load spikes and recovers, per the Table 7 phase schedule (scaled)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import SLO, build_engine, build_model, csv, slo_attainment
+from repro.data import datasets, workload
+from repro.serving.request import Request
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+
+def main(time_scale: float = 0.1, max_new: int = 8):
+    """time_scale compresses the 420 s schedule for CPU runs."""
+    model = build_model(n_adapters=4)
+    vocab = model.cfg.vocab
+    eng = build_engine(model)
+    arrivals = workload.phased_arrivals(workload.MUTABLE_PHASES, seed=0)
+    prompts = datasets.sharegpt_prompts(len(arrivals), vocab=vocab, seed=0)
+    for i, ((t, ad), p) in enumerate(zip(arrivals, prompts)):
+        eng.submit(Request(rid=i, prompt=p, adapter=f"lora{ad}",
+                           max_new_tokens=max_new,
+                           arrival=float(t) * time_scale))
+    rows, ev = datasets.split_eval(datasets.alpaca_like(400, vocab=vocab))
+    eng.add_trainer(MixedLoraTrainer("lora0", model.store.slot_of("lora0"),
+                                     rows, ev,
+                                     TrainerConfig(rows_per_micro=2,
+                                                   accum_steps=4, epochs=4)))
+    # sample FTPS/DTPS over time windows while running
+    window = 60.0 * time_scale
+    samples = []
+    last = (0, 0, 0.0)
+    while True:
+        busy = eng.tick()
+        now = eng.clock.now()
+        if now - last[2] >= window:
+            d_ft = eng.metrics.finetune_tokens - last[0]
+            d_dec = eng.metrics.decode_tokens - last[1]
+            dt = now - last[2]
+            samples.append((now, d_ft / dt, d_dec / dt))
+            last = (eng.metrics.finetune_tokens, eng.metrics.decode_tokens,
+                    now)
+        drained = (not eng.waiting and not eng.active and not eng.future)
+        if drained or len(samples) > 60:
+            break
+    att = slo_attainment(eng.finished, SLO)
+    csv("mutable/slo", 0.0, f"SLO={att:.3f};finished={len(eng.finished)}")
+    ftps = [s[1] for s in samples]
+    if ftps:
+        lo_idx = int(np.argmin(ftps))
+        csv("mutable/concession", 0.0,
+            f"ftps_min={min(ftps):.0f}@t={samples[lo_idx][0]:.1f};"
+            f"ftps_max={max(ftps):.0f};"
+            f"recovers={'yes' if ftps[-1] > min(ftps) else 'no'}")
+    for t, f, d in samples:
+        csv("mutable/timeline", 0.0, f"t={t:.1f};FTPS={f:.0f};DTPS={d:.0f}")
+
+
+if __name__ == "__main__":
+    main()

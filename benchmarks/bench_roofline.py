@@ -1,0 +1,34 @@
+"""Roofline table reader: summarises the dry-run artifacts
+(experiments/dryrun/*.json) into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv
+
+DEFAULT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+
+def main(art_dir: str = DEFAULT_DIR, mesh: str = "16x16"):
+    files = sorted(glob.glob(os.path.join(art_dir, f"*__{mesh}.json")))
+    if not files:
+        csv("roofline/missing", 0.0, f"no artifacts in {art_dir}")
+        return
+    for f in files:
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            csv(f"roofline/{r['arch']}__{r['shape']}", 0.0, "FAILED")
+            continue
+        ro = r["roofline"]
+        mem = r["memory"]["peak_estimate_bytes"] / 2**30
+        csv(f"roofline/{r['arch']}__{r['shape']}", 0.0,
+            f"dom={ro['dominant']};c={ro['compute_s']:.4f}s;"
+            f"m={ro['memory_s']:.4f}s;n={ro['collective_s']:.4f}s;"
+            f"useful={ro['useful_flops_ratio']:.2f};peakGiB={mem:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+"""Shared benchmark plumbing: model/engine builders and the baseline systems
+the paper compares against, all running the SAME substrate and the SAME
+virtual-clock cost model, differing only in the behaviours the paper
+attributes to them:
+
+* ``peft_like``  — HF Transformers+PEFT: FIFO padded batches (costs charged
+  on PADDED tokens), one adapter per pass (multi-LoRA inference is serial),
+  fine-tuning and inference cannot share a step, no continuous batching —
+  a batch must fully finish before the next starts.
+* ``slora_like`` — S-LoRA+PEFT: multi-LoRA continuous-batching INFERENCE
+  (same engine as ours) but fine-tuning runs in a separate runtime that gets
+  the device only while no inference work exists (coarse time-slicing).
+* ``static_merge`` — FlexLLM-flavoured axis we can express: one adapter
+  merged into the base weights; fast single-adapter serving, but adapter
+  swap = re-merge (downtime) and no concurrent multi-adapter path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.data import datasets
+from repro.models.schema import init_params
+from repro.serving.clock import CostModel, VirtualClock
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request, State
+from repro.serving.slo import SLOConfig, slo_attainment
+
+LCFG = LoRAConfig(n_slots=4, r=8)
+SLO = SLOConfig()
+
+
+def build_model(arch: str = "llama3-8b", n_adapters: int = 2, seed: int = 0
+                ) -> MixedLoraModel:
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    for i in range(n_adapters):
+        store.load_random(f"lora{i}", jax.random.PRNGKey(100 + i))
+    return MixedLoraModel(cfg, params, store)
+
+
+def build_engine(model: MixedLoraModel, capacity: int = 8,
+                 s_max: int = 192) -> UnifiedEngine:
+    return UnifiedEngine(model, EngineConfig(capacity=capacity,
+                                             pf_capacity=4, s_max=s_max,
+                                             virtual_time=True))
+
+
+def make_requests(n: int, rps: float, vocab: int, n_adapters: int,
+                  max_new: int = 16, seed: int = 0) -> List[Request]:
+    from repro.data import workload
+    prompts = datasets.sharegpt_prompts(n, vocab=vocab, seed=seed)
+    arr = workload.poisson_arrivals(rps, n, seed=seed)
+    return [Request(rid=i, prompt=p, adapter=f"lora{i % n_adapters}",
+                    max_new_tokens=max_new, arrival=float(t))
+            for i, (p, t) in enumerate(zip(prompts, arr))]
+
+
+# ---------------------------------------------------------------------------
+# PEFT-like baseline (cost-model simulation over the same request stream)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PeftLikeServer:
+    """FIFO padded batching, serial per-adapter, run-to-completion batches.
+    Charged on the shared CostModel; SLO accounting identical to ours."""
+    cost: CostModel = dataclasses.field(default_factory=CostModel)
+    batch_size: int = 4          # paper: PEFT's batch is memory-constrained
+
+    def serve(self, requests: List[Request], start_at: float = 0.0
+              ) -> Tuple[List[Request], Dict]:
+        clock = VirtualClock(self.cost)
+        clock.advance_to(start_at)       # e.g. blocked behind a fine-tune job
+        pending = sorted(requests, key=lambda r: r.arrival)
+        done: List[Request] = []
+        dec_tokens = 0
+        while pending:
+            now = max(clock.now(), pending[0].arrival)
+            clock.advance_to(now)
+            # one adapter per pass (serial multi-LoRA)
+            adapter = pending[0].adapter
+            batch = [r for r in pending if r.adapter == adapter
+                     and r.arrival <= now][:self.batch_size]
+            if not batch:
+                batch = [pending[0]]
+            for r in batch:
+                pending.remove(r)
+            s_pad = max(r.prompt_len for r in batch)
+            b = len(batch)
+            # padded prefill
+            clock.charge(self.cost.fixed + self.cost.prefill_per_tok
+                         * b * s_pad)
+            for r in batch:
+                r.t_first_token = clock.now()
+                r.token_times.append(clock.now())
+                r.output.append(0)
+            # padded decode: every row steps until the LONGEST finishes
+            steps = max(r.max_new_tokens for r in batch) - 1
+            for _ in range(steps):
+                clock.charge(self.cost.fixed + self.cost.decode_per_row * b)
+                for r in batch:
+                    if len(r.output) < r.max_new_tokens:
+                        r.output.append(0)
+                        r.token_times.append(clock.now())
+                        dec_tokens += 1
+            for r in batch:
+                r.state = State.DONE
+                r.t_finish = clock.now()
+                done.append(r)
+        elapsed = max(clock.now(), 1e-9)
+        return done, {"DTPS": dec_tokens / elapsed, "elapsed": elapsed}
+
+    def finetune_tokens_per_s(self, rows, adapters_serial: int = 1) -> float:
+        """PEFT fine-tunes one adapter at a time: cumulative cost."""
+        clock = VirtualClock(self.cost)
+        total = 0
+        for _ in range(adapters_serial):
+            for i in range(0, len(rows), self.batch_size):
+                batch = rows[i:i + self.batch_size]
+                s_pad = max(len(t) for t, _ in batch)
+                clock.charge(self.cost.fixed
+                             + self.cost.ft_per_tok * len(batch) * s_pad)
+                total += sum(len(t) for t, _ in batch)
+        return total / max(clock.now(), 1e-9)
+
+
+def run_engine_inference(model: MixedLoraModel, requests: List[Request],
+                         trainer=None, capacity: int = 8) -> Dict:
+    eng = build_engine(model, capacity=capacity)
+    for r in requests:
+        eng.submit(r)
+    if trainer is not None:
+        eng.add_trainer(trainer)
+    t0 = time.monotonic()
+    m = eng.run(max_ticks=500000)
+    wall = time.monotonic() - t0
+    rates = m.rates()
+    return {"slo": slo_attainment(eng.finished, SLO),
+            "finished": len(eng.finished), "DTPS": rates["DTPS"],
+            "FTPS": rates["FTPS"], "ETPS": rates["ETPS"],
+            "elapsed_virtual": m.elapsed, "wall": wall,
+            "engine": eng}
+
+
+def csv(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_finetune, bench_inference, bench_kernels,
+                        bench_loading, bench_mutable, bench_realworld,
+                        bench_roofline, bench_unified)
+
+TABLES = [
+    ("table2_loading", bench_loading.main),
+    ("fig2_inference", bench_inference.main),
+    ("fig3_finetune", bench_finetune.main),
+    ("fig4_unified", bench_unified.main),
+    ("fig5_mutable", bench_mutable.main),
+    ("fig6_realworld", bench_realworld.main),
+    ("kernels_micro", bench_kernels.main),
+    ("roofline_table", bench_roofline.main),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in TABLES:
+        t0 = time.monotonic()
+        print(f"# --- {name} ---")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR={type(e).__name__}")
+        print(f"# {name} took {time.monotonic() - t0:.1f}s")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

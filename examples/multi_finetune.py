@@ -1,0 +1,46 @@
+"""Concurrent multi-LoRA fine-tuning: two trainers, one shared backward pass
+per unified step, isolated masked optimizer updates (paper Figure 3's
+multi-LoRA setting, which PEFT cannot run concurrently).
+
+    PYTHONPATH=src python examples/multi_finetune.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.data import datasets
+from repro.models.schema import init_params
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+
+def main():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LoRAConfig(n_slots=4, r=8), jax.random.PRNGKey(1))
+    store.load_random("alpaca", jax.random.PRNGKey(2))
+    store.load_random("gsm8k", jax.random.PRNGKey(3))
+    eng = UnifiedEngine(MixedLoraModel(cfg, params, store),
+                        EngineConfig(capacity=2, pf_capacity=2, s_max=64))
+
+    a_rows, a_ev = datasets.split_eval(datasets.alpaca_like(48, vocab=cfg.vocab))
+    g_rows, g_ev = datasets.split_eval(datasets.gsm8k_like(48, vocab=cfg.vocab))
+    tcfg = TrainerConfig(rows_per_micro=2, accum_steps=4, epochs=2)
+    eng.add_trainer(MixedLoraTrainer("alpaca", store.slot_of("alpaca"),
+                                     a_rows, a_ev, tcfg))
+    eng.add_trainer(MixedLoraTrainer("gsm8k", store.slot_of("gsm8k"),
+                                     g_rows, g_ev, tcfg))
+
+    m = eng.run(max_ticks=200000)
+    print(f"throughput: {m.rates()}")
+    for name, tr in eng.trainers.items():
+        print(f"{name}: loss {np.mean(tr.train_losses[:6]):.3f} -> "
+              f"{np.mean(tr.train_losses[-6:]):.3f}, eval "
+              f"{np.mean(tr.eval_losses[-6:]):.3f}, "
+              f"opt_steps={tr.optimizer_steps}")
+
+
+if __name__ == "__main__":
+    main()

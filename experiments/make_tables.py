@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from the artifacts."""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def fmt(v, nd=3):
+    return f"{v:.{nd}f}"
+
+
+def main():
+    rows = {}
+    for f in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        r = json.load(open(f))
+        rows[(r["arch"], r["shape"], r["mesh"])] = r
+
+    archs = sorted({k[0] for k in rows})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    print("### §Dry-run — 10 archs x 4 shapes x {16x16, 2x16x16}: "
+          f"{len(rows)} combos, "
+          f"{sum(1 for r in rows.values() if r['status'] == 'ok')} compile OK\n")
+    print("| arch | shape | mesh | compile s | args GiB/dev | peak GiB/dev | "
+          "HLO coll scaled GB/dev |")
+    print("|---|---|---|---|---|---|---|")
+    for a in archs:
+        for s in shapes:
+            for m in ("16x16", "2x16x16"):
+                r = rows.get((a, s, m))
+                if not r:
+                    continue
+                if r["status"] != "ok":
+                    print(f"| {a} | {s} | {m} | FAIL | | | |")
+                    continue
+                mem = r["memory"]
+                coll = sum(r["collectives_hlo"]["scaled"].values()) / 1e9
+                print(f"| {a} | {s} | {m} | {r['compile_s']} | "
+                      f"{mem['argument_size_in_bytes']/2**30:.2f} | "
+                      f"{mem['peak_estimate_bytes']/2**30:.2f} | "
+                      f"{coll:.1f} |")
+
+    print("\n### §Roofline — single-pod 16x16 (terms in seconds/step, "
+          "v5e: 197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant | "
+          "useful-FLOPs ratio | one-line lever |")
+    print("|---|---|---|---|---|---|---|---|")
+    LEVERS = {
+        "compute": "raise MXU utilisation: larger per-device tile / fewer "
+                   "replicated-head archs / fused kernels",
+        "memory": "shrink resident+streamed bytes: cache layout, quantised "
+                  "weights, better remat policy",
+        "collective": "cut wire bytes: seq-sharded caches, fewer weight "
+                      "re-gathers, bf16->int8 gathers, AG/compute overlap",
+    }
+    for a in archs:
+        for s in shapes:
+            r = rows.get((a, s, "16x16"))
+            if not r or r["status"] != "ok":
+                continue
+            ro = r["roofline"]
+            print(f"| {a} | {s} | {fmt(ro['compute_s'],4)} | "
+                  f"{fmt(ro['memory_s'],4)} | {fmt(ro['collective_s'],4)} | "
+                  f"{ro['dominant']} | {fmt(ro['useful_flops_ratio'],2)} | "
+                  f"{LEVERS[ro['dominant']]} |")
+
+
+if __name__ == "__main__":
+    main()

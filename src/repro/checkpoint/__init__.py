@@ -1,0 +1,1 @@
+"""Checkpointing: pytree <-> npz, adapter-only checkpoints, migration blobs."""

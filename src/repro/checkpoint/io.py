@@ -1,0 +1,77 @@
+"""Checkpoint I/O: flatten pytrees to path-keyed npz archives.
+
+Adapter checkpoints hold ONLY the LoRA leaves (plus optimizer moments when
+requested) — the paper's "0 B additional storage" property: the base model is
+never duplicated on disk per adapter.
+"""
+from __future__ import annotations
+
+import io
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_pytree(path: str, tree) -> int:
+    """Write tree to ``path`` (npz).  Returns bytes written."""
+    flat = _flatten_with_paths(tree)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+    return os.path.getsize(path)
+
+
+def load_pytree(path: str, like) -> Any:
+    """Load into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(_path_str(p) for p in path_k)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)
+
+
+def serialize_pytree(tree) -> bytes:
+    """In-memory blob (migration payloads)."""
+    flat = _flatten_with_paths(tree)
+    buf = io.BytesIO()
+    np.savez(buf, **flat)
+    return buf.getvalue()
+
+
+def deserialize_pytree(blob: bytes, like) -> Any:
+    buf = io.BytesIO(blob)
+    with np.load(buf) as z:
+        flat = {k: z[k] for k in z.files}
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(_path_str(p) for p in path_k)
+        out.append(jnp.asarray(flat[key], dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)

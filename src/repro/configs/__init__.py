@@ -1,0 +1,45 @@
+"""Assigned-architecture registry.
+
+Each module defines ``CONFIG`` (the exact full-size assigned config, citing its
+source) and ``REDUCED`` (a tiny same-family variant for CPU smoke tests).
+``get_config(name)`` / ``get_reduced(name)`` look them up; ``ARCH_IDS`` lists
+all selectable ``--arch`` ids.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "mamba2-1.3b",
+    "phi3-medium-14b",
+    "qwen1.5-110b",
+    "deepseek-7b",
+    "llama4-maverick-400b-a17b",
+    "deepseek-v2-236b",
+    "whisper-base",
+    "command-r-35b",
+    "jamba-1.5-large-398b",
+    "llama-3.2-vision-90b",
+    # the paper's own base model
+    "llama3-8b",
+]
+
+_MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def _load(name: str):
+    if name not in _MOD:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MOD[name]}")
+
+
+def get_config(name: str):
+    cfg = _load(name).CONFIG
+    cfg.validate()
+    return cfg
+
+
+def get_reduced(name: str):
+    cfg = _load(name).REDUCED
+    cfg.validate()
+    return cfg

@@ -1,0 +1,2 @@
+"""Loquetier core: multi-LoRA adapter algebra, the Virtualized Module, and the
+unified fine-tuning/inference computation flow (the paper's contribution)."""

@@ -1,0 +1,169 @@
+"""Unified computation-flow planning (host side of Algorithms 1–2).
+
+The planner turns heterogeneous pending work — fine-tuning microbatch rows,
+evaluation rows, prefill requests, decode slots — into ONE ``UnifiedBatch``
+with static bucket shapes:
+
+* shapes snap to bucket grids so each (Bf,Sf,Bp,Sp,Bd) combination compiles
+  once (the TPU-idiomatic replacement for dynamic kernel launches);
+* every row's sequence is padded to a multiple of ``block_t`` so all token
+  segments are SMLM-tile aligned (property-tested);
+* padding rows carry ``adapter=-1`` (base-only, zero LoRA) and zero loss
+  weight, so they are numerically inert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.stream import DECBatch, FTBatch, PFBatch, UnifiedBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class FlowConfig:
+    block_t: int = 8                 # SMLM token-tile size (128 on real TPU)
+    row_buckets: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64, 128)
+    seq_buckets: Tuple[int, ...] = (16, 32, 64, 128, 256, 512, 1024, 2048,
+                                    4096, 8192, 16384, 32768)
+
+
+@dataclasses.dataclass
+class FTRow:
+    tokens: np.ndarray               # [L] int
+    labels: np.ndarray               # [L] int (-100 ignore)
+    slot: int                        # adapter slot (-1 = base)
+    weight: float = 1.0              # per-row loss scale (1/accum etc.)
+    trainer: Optional[str] = None    # owning trainer (loss bookkeeping)
+    is_eval: bool = False
+    aux_embed: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass
+class PFReq:
+    tokens: np.ndarray               # [L] prompt
+    slot: int
+    rid: int = -1                    # request id (engine bookkeeping)
+    aux_embed: Optional[np.ndarray] = None
+
+
+def bucket(n: int, buckets: Sequence[int]) -> int:
+    for b in buckets:
+        if b >= n:
+            return b
+    return buckets[-1] if n <= buckets[-1] else n
+
+
+def _pad_seq(n: int, fcfg: FlowConfig) -> int:
+    b = bucket(n, fcfg.seq_buckets)
+    return ((b + fcfg.block_t - 1) // fcfg.block_t) * fcfg.block_t
+
+
+def plan_ft(rows: List[FTRow], fcfg: FlowConfig,
+            d_model: int = 0) -> Optional[FTBatch]:
+    if not rows:
+        return None
+    Bf = bucket(len(rows), fcfg.row_buckets)
+    Sf = _pad_seq(max(len(r.tokens) for r in rows), fcfg)
+    toks = np.zeros((Bf, Sf), np.int32)
+    mask = np.zeros((Bf, Sf), bool)
+    labels = np.full((Bf, Sf), -100, np.int32)
+    adapter = np.full((Bf,), -1, np.int32)
+    weight = np.zeros((Bf,), np.float32)
+    aux = None
+    if rows[0].aux_embed is not None:
+        F, D = rows[0].aux_embed.shape
+        aux = np.zeros((Bf, F, D), np.float32)
+    for i, r in enumerate(rows):
+        L = len(r.tokens)
+        toks[i, :L] = r.tokens
+        mask[i, :L] = True
+        labels[i, :L] = r.labels
+        adapter[i] = r.slot
+        weight[i] = 0.0 if r.is_eval else r.weight
+        if aux is not None:
+            aux[i] = r.aux_embed
+    return FTBatch(tokens=jnp.asarray(toks), mask=jnp.asarray(mask),
+                   labels=jnp.asarray(labels), adapter=jnp.asarray(adapter),
+                   weight=jnp.asarray(weight),
+                   aux_embed=jnp.asarray(aux) if aux is not None else None)
+
+
+def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
+    if not reqs:
+        return None
+    Bp = bucket(len(reqs), fcfg.row_buckets)
+    Sp = _pad_seq(max(len(r.tokens) for r in reqs), fcfg)
+    toks = np.zeros((Bp, Sp), np.int32)
+    length = np.zeros((Bp,), np.int32)
+    adapter = np.full((Bp,), -1, np.int32)
+    aux = None
+    if reqs[0].aux_embed is not None:
+        F, D = reqs[0].aux_embed.shape
+        aux = np.zeros((Bp, F, D), np.float32)
+    for i, r in enumerate(reqs):
+        L = len(r.tokens)
+        toks[i, :L] = r.tokens
+        length[i] = L
+        adapter[i] = r.slot
+        if aux is not None:
+            aux[i] = r.aux_embed
+    return PFBatch(tokens=jnp.asarray(toks), length=jnp.asarray(length),
+                   adapter=jnp.asarray(adapter),
+                   aux_embed=jnp.asarray(aux) if aux is not None else None)
+
+
+def plan_dec(tokens: np.ndarray, pos: np.ndarray,
+             slots: np.ndarray) -> Optional[DECBatch]:
+    if len(tokens) == 0:
+        return None
+    return DECBatch(tokens=jnp.asarray(tokens, jnp.int32),
+                    pos=jnp.asarray(pos, jnp.int32),
+                    adapter=jnp.asarray(slots, jnp.int32))
+
+
+def assemble(ft_rows: List[FTRow], pf_reqs: List[PFReq],
+             dec_tokens: np.ndarray, dec_pos: np.ndarray,
+             dec_slots: np.ndarray, fcfg: FlowConfig) -> UnifiedBatch:
+    return UnifiedBatch(ft=plan_ft(ft_rows, fcfg),
+                        pf=plan_pf(pf_reqs, fcfg),
+                        dec=plan_dec(dec_tokens, dec_pos, dec_slots))
+
+
+def token_adapter_ids(batch: UnifiedBatch) -> np.ndarray:
+    """Per-token adapter ids of the flattened stream (mirrors model._Plan)."""
+    ids = []
+    if batch.ft is not None:
+        Bf, Sf = batch.ft.tokens.shape
+        ids.append(np.repeat(np.asarray(batch.ft.adapter), Sf))
+    if batch.pf is not None:
+        Bp, Sp = batch.pf.tokens.shape
+        ids.append(np.repeat(np.asarray(batch.pf.adapter), Sp))
+    if batch.dec is not None:
+        ids.append(np.asarray(batch.dec.adapter))
+    return np.concatenate(ids) if ids else np.zeros((0,), np.int32)
+
+
+def smlm_tile_aligned(batch: UnifiedBatch, block_t: int) -> bool:
+    """The SMLM contract: within the ft+pf portion of the stream, every
+    ``block_t`` token tile is adapter-uniform.  (The decode tail uses the
+    per-token BGMV kernel, so it is exempt.)"""
+    ids = []
+    if batch.ft is not None:
+        Bf, Sf = batch.ft.tokens.shape
+        if Sf % block_t:
+            return False
+        ids.append(np.repeat(np.asarray(batch.ft.adapter), Sf))
+    if batch.pf is not None:
+        Bp, Sp = batch.pf.tokens.shape
+        if Sp % block_t:
+            return False
+        ids.append(np.repeat(np.asarray(batch.pf.adapter), Sp))
+    if not ids:
+        return True
+    flat = np.concatenate(ids)
+    tiles = flat.reshape(-1, block_t)
+    return bool((tiles == tiles[:, :1]).all())

@@ -1,0 +1,132 @@
+"""Step builders: the jit-compiled units the runtime executes.
+
+All steps share the SAME unified forward (paper Section 3.3); training steps
+differentiate it w.r.t. the LoRA bank only.  Because the scalar loss depends
+solely on fine-tune/eval rows, XLA prunes the backward of inference segments
+— the analogue of the paper's FlashInfer-forward / Autograd-backward split
+with zero code duplication.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.model import unified_forward
+from repro.models.stream import ModelOut, UnifiedBatch
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_apply
+
+
+def scalar_loss(out: ModelOut, batch: UnifiedBatch) -> jax.Array:
+    """Algorithm 2: per-row mean CE, scaled by the row weight (which encodes
+    1/accumulation-steps per trainer), summed — one shared backward."""
+    loss = out.aux_loss
+    if out.ft_loss_sum is not None:
+        per_row = out.ft_loss_sum / jnp.maximum(out.ft_tok_count, 1.0)
+        loss = loss + jnp.sum(per_row * batch.ft.weight)
+    return loss
+
+
+class StepOut(NamedTuple):
+    out: ModelOut
+    loss: jax.Array
+    grads: Optional[Any]
+
+
+# Step-function cache: ModelConfig is a frozen dataclass (hashable), so
+# engines/benchmarks built around the same config share ONE jitted callable
+# — and therefore one XLA compile cache — instead of recompiling per engine.
+_STEP_CACHE: dict = {}
+
+
+def _cached(kind, key, build):
+    full = (kind, *key)
+    if full not in _STEP_CACHE:
+        _STEP_CACHE[full] = build()
+    return _STEP_CACHE[full]
+
+
+def make_forward_step(cfg: ModelConfig, *, remat: bool = False,
+                      attn_chunk: int = 0, donate_cache: bool = False,
+                      return_ft_logits: bool = False,
+                      jit: bool = True, _jit_now: bool = False) -> Callable:
+    """Inference-only unified step (serve/prefill/decode/eval)."""
+    if jit:
+        return _cached("fwd", (cfg, remat, attn_chunk, donate_cache,
+                               return_ft_logits),
+                       lambda: make_forward_step(
+                           cfg, remat=remat, attn_chunk=attn_chunk,
+                           donate_cache=donate_cache,
+                           return_ft_logits=return_ft_logits, jit=False,
+                           _jit_now=True))
+
+    def step(base, bank, scale, batch: UnifiedBatch, cache):
+        out = unified_forward(cfg, base, batch, cache, loras=bank,
+                              lora_scale=scale, remat=remat,
+                              attn_chunk=attn_chunk,
+                              return_ft_logits=return_ft_logits)
+        return out
+
+    if not _jit_now:
+        return step
+    return jax.jit(step, donate_argnums=(4,) if donate_cache else ())
+
+
+def make_grad_step(cfg: ModelConfig, *, remat: bool = False,
+                   attn_chunk: int = 0) -> Callable:
+    """Unified step with gradients w.r.t. the LoRA bank (no update) — used by
+    the engine's accumulation loop."""
+    key = ("grad", cfg, remat, attn_chunk)
+    if key in _STEP_CACHE:
+        return _STEP_CACHE[key]
+
+    def _loss(bank, base, scale, batch, cache):
+        out = unified_forward(cfg, base, batch, cache, loras=bank,
+                              lora_scale=scale, remat=remat,
+                              attn_chunk=attn_chunk)
+        return scalar_loss(out, batch), out
+
+    def step(base, bank, scale, batch: UnifiedBatch, cache) -> StepOut:
+        (loss, out), grads = jax.value_and_grad(_loss, has_aux=True)(
+            bank, base, scale, batch, cache)
+        return StepOut(out=out, loss=loss, grads=grads)
+
+    _STEP_CACHE[key] = jax.jit(step)
+    return _STEP_CACHE[key]
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig, *,
+                    remat: bool = False, attn_chunk: int = 0,
+                    act_constraint=None, jit: bool = True) -> Callable:
+    """Fused fine-tuning step: unified forward + backward + masked AdamW.
+    This is what the dry-run lowers for the ``train_4k`` shape."""
+
+    def _loss(bank, base, scale, batch, cache):
+        out = unified_forward(cfg, base, batch, cache, loras=bank,
+                              lora_scale=scale, remat=remat,
+                              attn_chunk=attn_chunk,
+                              act_constraint=act_constraint)
+        return scalar_loss(out, batch), out
+
+    def step(base, bank, scale, opt_state: AdamWState, batch: UnifiedBatch,
+             slot_mask, cache=None):
+        (loss, out), grads = jax.value_and_grad(_loss, has_aux=True)(
+            bank, base, scale, batch, cache)
+        new_bank, new_state = adamw_apply(opt, grads, opt_state, bank,
+                                          slot_mask)
+        return loss, new_bank, new_state, out.aux_loss
+
+    return jax.jit(step) if jit else step
+
+
+def make_apply_step(opt: AdamWConfig) -> Callable:
+    """Masked optimizer apply for accumulated gradients (engine path)."""
+
+    @jax.jit
+    def apply(grads, opt_state: AdamWState, bank, slot_mask):
+        return adamw_apply(opt, grads, opt_state, bank, slot_mask)
+
+    return apply

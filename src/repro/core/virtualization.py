@@ -1,0 +1,172 @@
+"""Virtualized Module — base-model sharing, adapter slots, and migration.
+
+The paper virtualizes torch ``nn.Module``s by synthesising proxy classes at
+runtime.  JAX is functional, so virtualization is structural instead:
+
+* the **base model** is one immutable pytree of arrays, shared by reference
+  across every virtual model (zero extra weight memory — Table 2's "0 B");
+* an **AdapterStore** owns the stacked LoRA bank (``n_slots`` resident
+  adapters) plus the name->slot map; loading an adapter writes one slot,
+  unloading frees it — no kernel restart, no base-weight touch;
+* a **VirtualModel** is a named view ``(base, store, slot, mode)``.  The
+  paper's ``void``/``unvoid`` migration maps to detaching the adapter leaves
+  to host memory (serializable, base excluded) and re-binding them on a new
+  device/mesh.
+
+``MixedLoraModel`` mirrors the paper's class of the same name: the object the
+unified computation flow executes, carrying every resident adapter at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lora import LoRAConfig, init_lora_bank
+from repro.models.configs import ModelConfig
+from repro.models.schema import lora_targets
+
+
+def _slot_take(bank, slot: int):
+    """Extract one adapter's params from the stacked bank."""
+    return jax.tree_util.tree_map(lambda x: x[..., slot, :, :], bank)
+
+
+def _slot_put(bank, slot: int, adapter):
+    return jax.tree_util.tree_map(
+        lambda full, one: full.at[..., slot, :, :].set(one.astype(full.dtype)),
+        bank, adapter)
+
+
+def _slot_zero(bank, slot: int):
+    return jax.tree_util.tree_map(
+        lambda x: x.at[..., slot, :, :].set(0.0), bank)
+
+
+@dataclasses.dataclass
+class VoidedModel:
+    """A voided virtual model: adapter weights detached to host numpy, ready
+    for serialization / cross-device migration.  The base model is NOT
+    included (that is the whole point)."""
+    name: str
+    cfg_name: str
+    adapter: Any                     # pytree of np.ndarray
+    scale: float
+
+
+class AdapterStore:
+    """Owns the stacked LoRA bank and the name->slot mapping."""
+
+    def __init__(self, cfg: ModelConfig, lcfg: LoRAConfig,
+                 key: Optional[jax.Array] = None, dtype=None):
+        self.cfg, self.lcfg = cfg, lcfg
+        dtype = dtype or jnp.dtype(cfg.dtype)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        targets = lora_targets(cfg, lcfg.targets)
+        self.bank = init_lora_bank(key, targets, lcfg, dtype=dtype)
+        # every slot starts empty (zero adapters): id -1 semantics aside,
+        # a zero adapter is exactly "no adapter".
+        self.bank = jax.tree_util.tree_map(jnp.zeros_like, self.bank)
+        self.scale = jnp.ones((lcfg.n_slots,), jnp.float32)
+        self._slots: Dict[str, int] = {}
+
+    # -- slot management ---------------------------------------------------
+    def slot_of(self, name: str) -> int:
+        return self._slots[name]
+
+    @property
+    def resident(self) -> List[str]:
+        return list(self._slots)
+
+    def _alloc(self) -> int:
+        used = set(self._slots.values())
+        for i in range(self.lcfg.n_slots):
+            if i not in used:
+                return i
+        raise RuntimeError("no free adapter slot; unload one first")
+
+    def load(self, name: str, adapter, scale: float = 1.0) -> int:
+        """Load (or hot-swap in) an adapter pytree into a free slot —
+        no recompilation, no base-model copy."""
+        if name in self._slots:
+            raise ValueError(f"adapter {name!r} already resident")
+        slot = self._alloc()
+        self.bank = _slot_put(self.bank, slot, adapter)
+        self.scale = self.scale.at[slot].set(scale)
+        self._slots[name] = slot
+        return slot
+
+    def load_random(self, name: str, key: jax.Array, scale: float = 1.0,
+                    gaussian_b: bool = True) -> int:
+        targets = lora_targets(self.cfg, self.lcfg.targets)
+        fresh = init_lora_bank(key, targets, self.lcfg, gaussian_b=gaussian_b)
+        return self.load(name, _slot_take(fresh, 0), scale)
+
+    def unload(self, name: str):
+        slot = self._slots.pop(name)
+        self.bank = _slot_zero(self.bank, slot)
+
+    def get_adapter(self, name: str):
+        return _slot_take(self.bank, self._slots[name])
+
+    def set_bank(self, bank):
+        """Replace the bank wholesale (after an optimizer update)."""
+        self.bank = bank
+
+    def slot_mask(self, names: List[str]) -> jax.Array:
+        m = np.zeros((self.lcfg.n_slots,), np.float32)
+        for n in names:
+            m[self._slots[n]] = 1.0
+        return jnp.asarray(m)
+
+
+class VirtualModel:
+    """An isolated adapter view over a shared base model (one per tenant /
+    fine-tuning job).  Compatible with any PEFT that keeps the base weights
+    untouched (the Virtualized-Module contract)."""
+
+    def __init__(self, name: str, base_params, store: AdapterStore,
+                 mode: str = "infer"):
+        assert mode in ("infer", "train")
+        self.name, self.base, self.store, self.mode = name, base_params, store, mode
+
+    @property
+    def slot(self) -> int:
+        return self.store.slot_of(self.name)
+
+    # -- migration (the paper's void / unvoid) ------------------------------
+    def void(self) -> VoidedModel:
+        adapter = jax.tree_util.tree_map(
+            lambda x: np.asarray(x), self.store.get_adapter(self.name))
+        return VoidedModel(name=self.name, cfg_name=self.store.cfg.name,
+                           adapter=adapter,
+                           scale=float(self.store.scale[self.slot]))
+
+    @staticmethod
+    def unvoid(voided: VoidedModel, base_params, store: AdapterStore,
+               device=None, mode: str = "infer") -> "VirtualModel":
+        assert store.cfg.name == voided.cfg_name, "config mismatch on migration"
+        adapter = jax.tree_util.tree_map(
+            lambda x: jax.device_put(jnp.asarray(x), device), voided.adapter)
+        store.load(voided.name, adapter, voided.scale)
+        return VirtualModel(voided.name, base_params, store, mode)
+
+
+class MixedLoraModel:
+    """The executable unit of the unified flow: shared base + resident
+    adapter bank (paper Section 3.3)."""
+
+    def __init__(self, cfg: ModelConfig, base_params, store: AdapterStore):
+        self.cfg, self.base, self.store = cfg, base_params, store
+
+    def virtual(self, name: str, mode: str = "infer") -> VirtualModel:
+        return VirtualModel(name, self.base, self.store, mode)
+
+    def forward(self, batch, cache=None, **kw):
+        from repro.models.model import unified_forward
+        return unified_forward(self.cfg, self.base, batch, cache,
+                               loras=self.store.bank,
+                               lora_scale=self.store.scale, **kw)

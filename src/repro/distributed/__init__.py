@@ -1,0 +1,2 @@
+"""Distribution: logical-axis sharding rules for params, LoRA banks, batches
+and caches."""

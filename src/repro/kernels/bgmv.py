@@ -1,0 +1,56 @@
+"""BGMV — batched-gather multi-LoRA matmul for the decode bucket.
+
+Each decode token belongs to its own request and therefore its own adapter,
+so segments degenerate to single tokens.  The grid runs one program per
+(token, output tile); the token's adapter id arrives via scalar prefetch and
+selects the A/B blocks the BlockSpec DMAs into VMEM.  This is the TPU
+analogue of Punica's BGMV: throughput is DMA-bound (one [d_in, r] + [r, bo]
+weight fetch per token), which is the right trade at decode batch sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bgmv_kernel(ids_ref, scale_ref, x_ref, a_ref, b_ref, o_ref):
+    t = pl.program_id(0)
+    xa = jnp.dot(x_ref[...], a_ref[0],
+                 preferred_element_type=jnp.float32)        # [1, r]
+    y = jnp.dot(xa, b_ref[0].astype(jnp.float32),
+                preferred_element_type=jnp.float32)         # [1, bo]
+    o_ref[...] = (y * scale_ref[t]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_o", "interpret"))
+def bgmv(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
+         scale: jax.Array, *, block_o: int = 128,
+         interpret: bool = False) -> jax.Array:
+    """x: [T, d_in]; a: [n, d_in, r]; b: [n, r, d_out]; ids: [T] int32
+    (clipped); scale: [T] f32 (0.0 disables).  Returns [T, d_out]."""
+    T, d_in = x.shape
+    n, _, r = a.shape
+    d_out = b.shape[-1]
+    assert d_out % block_o == 0, (d_out, block_o)
+    no = d_out // block_o
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(T, no),
+        in_specs=[
+            pl.BlockSpec((1, d_in), lambda t, j, ids, sc: (t, 0)),
+            pl.BlockSpec((1, d_in, r), lambda t, j, ids, sc: (ids[t], 0, 0)),
+            pl.BlockSpec((1, r, block_o), lambda t, j, ids, sc: (ids[t], 0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_o), lambda t, j, ids, sc: (t, j)),
+    )
+    return pl.pallas_call(
+        _bgmv_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d_out), x.dtype),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), scale.astype(jnp.float32), x, a, b)

@@ -1,0 +1,108 @@
+"""Batch-decode attention Pallas kernel — the TPU analogue of FlashInfer's
+batch-decode path (one query token per request over a long KV cache).
+
+Grid (B, h, nk): the KV cache streams through VMEM in blocks along the
+sequence axis with an online softmax; per-request valid lengths arrive via
+scalar prefetch.  GQA maps query head -> kv head in the BlockSpec index map,
+so the cache is read once per kv head group.  Optional rolling-buffer
+support: positions are reconstructed from ``lengths`` exactly like the model
+does (slot j holds absolute position j + W*floor((pos - j)/W)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, block_k: int, nk: int, scale: float,
+                   window: int, sc: int):
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :]                                         # [hd]
+    k = k_ref[0, :, 0, :]                                      # [bk, hd]
+    v = v_ref[0, :, 0, :]
+    pos = pos_ref[b]                                           # query position
+    j = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)[0]
+    # absolute position held by rolling slot j (== j for a linear cache)
+    if window > 0:
+        k_pos = j + sc * jax.lax.div(pos - j, sc)
+    else:
+        k_pos = j
+    mask = (k_pos <= pos) & (k_pos >= 0)
+    if window > 0:
+        mask = mask & (pos - k_pos < window)
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [bk]
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[0] = l_prev * corr + p.sum()
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)[None]
+    m_ref[0] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "window",
+                                              "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, block_k: int = 512, window: int = 0,
+                     interpret: bool = False) -> jax.Array:
+    """q: [B, h, hd] (the current token's query);
+    k/v: [B, S, g, hd] cache (rolling buffer when window > 0);
+    pos: [B] int32 current positions (cache holds <= pos tokens).
+    Returns [B, h, hd]."""
+    B, h, hd = q.shape
+    S, g = k.shape[1], k.shape[2]
+    m = h // g
+    pad = (-S) % block_k
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = k.shape[1] // block_k
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, h, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, hq, ik, P_: (b, hq, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hq, ik, P_: (b, ik, hq // m, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hq, ik, P_: (b, ik, hq // m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, hq, ik, P_: (b, hq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_decode_kernel, block_k=block_k, nk=nk,
+                             scale=scale, window=window, sc=S)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, hd), q.dtype),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)

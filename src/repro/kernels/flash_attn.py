@@ -1,0 +1,115 @@
+"""Causal flash-attention (prefill) Pallas kernel — the TPU replacement for
+the paper's FlashInfer batch-prefill path.
+
+Online-softmax over KV blocks streamed HBM->VMEM; running (max, sum, acc)
+live in VMEM scratch; blocks strictly above the causal diagonal are skipped
+at grid level.  GQA is handled in the BlockSpec index map (query head ->
+kv head = hq // (h // kv)), so K/V are never replicated in memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+                  *, block_q: int, block_k: int, nk: int, scale: float,
+                  causal: bool):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_last = iq * block_q + block_q - 1
+    live = (ik * block_k <= q_last) if causal else True
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :]                                   # [bq, hd]
+        k = k_ref[0, :, 0, :]                                   # [bk, hd]
+        v = v_ref[0, :, 0, :]
+        qpos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos < len_ref[b]
+        if causal:
+            mask = mask & (kpos <= qpos)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        # fully-masked rows: m_new = NEG_INF would make exp(s - m_new) = 1
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+        l_ref[...] = l_prev * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "causal",
+                                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: jax.Array, *, block_q: int = 128,
+                    block_k: int = 128, causal: bool = True,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, S, h, hd]; k/v: [B, T, g, hd]; lengths: [B] valid KV lengths.
+    Assumes q position i attends to kv positions <= i (prefill layout).
+    Returns [B, S, h, hd]."""
+    B, S, h, hd = q.shape
+    T, g = k.shape[1], k.shape[2]
+    m = h // g
+    pad_q, pad_k = (-S) % block_q, (-T) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq, Tk = S + pad_q, T + pad_k
+    nq, nk = Sq // block_q, Tk // block_k
+    scale = hd ** -0.5
+
+    from jax.experimental.pallas import tpu as pltpu
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, h, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd),
+                         lambda b, hq, iq, ik, L: (b, iq, hq, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hq, iq, ik, L: (b, ik, hq // m, 0)),
+            pl.BlockSpec((1, block_k, 1, hd),
+                         lambda b, hq, iq, ik, L: (b, ik, hq // m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, hq, iq, ik, L: (b, iq, hq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                             nk=nk, scale=scale, causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, h, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)
+    return out[:, :S]

@@ -1,0 +1,88 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU the real kernels run compiled; on CPU (this container) they run in
+``interpret=True`` mode, and callers that only need numerics (the model's
+default path) use the jnp oracles in ``ref.py`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.bgmv import bgmv as _bgmv_kernel
+from repro.kernels.decode_attn import decode_attention as _decode_kernel
+from repro.kernels.flash_attn import flash_attention as _flash_kernel
+from repro.kernels.smlm import smlm as _smlm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def smlm(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
+         scale_t: Optional[jax.Array] = None, *, block_t: int = 128,
+         block_o: int = 128, interpret: Optional[bool] = None) -> jax.Array:
+    """Segmented multi-LoRA matmul over a tile-aligned token stream.
+
+    ``ids``/``scale_t`` are PER-TOKEN; the flow planner guarantees each
+    ``block_t`` tile is adapter-uniform, so the wrapper derives per-tile
+    scalars by striding.
+    """
+    T = x.shape[0]
+    n = a.shape[0]
+    if T % block_t != 0 or b.shape[-1] % block_o != 0:
+        sc = scale_t if scale_t is not None else jnp.ones((T,), jnp.float32)
+        return _ref.bgmv_ref(x, a, b, ids, sc)
+    tile_ids = ids[::block_t]
+    valid = (tile_ids >= 0) & (tile_ids < n)
+    if scale_t is None:
+        tile_scale = valid.astype(jnp.float32)
+    else:
+        tile_scale = jnp.where(valid, scale_t[::block_t], 0.0)
+    tile_ids = jnp.clip(tile_ids, 0, n - 1)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _smlm_kernel(x, a, b, tile_ids, tile_scale,
+                        block_t=block_t, block_o=block_o, interpret=interpret)
+
+
+def bgmv(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
+         scale_t: Optional[jax.Array] = None, *, block_o: int = 128,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Per-token multi-LoRA matmul (decode bucket)."""
+    T = x.shape[0]
+    n = a.shape[0]
+    valid = (ids >= 0) & (ids < n)
+    if scale_t is None:
+        scale = valid.astype(jnp.float32)
+    else:
+        scale = jnp.where(valid, scale_t, 0.0)
+    ids = jnp.clip(ids, 0, n - 1)
+    if b.shape[-1] % block_o != 0:
+        return _ref.bgmv_ref(x, a, b, ids, scale)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _bgmv_kernel(x, a, b, ids, scale, block_o=block_o,
+                        interpret=interpret)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lengths: jax.Array, *, causal: bool = True,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Flash attention (prefill).  Falls back to the oracle off-TPU unless
+    ``interpret`` is forced (tests)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _flash_kernel(q, k, v, lengths, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=interpret)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, window: int = 0,
+                     block_k: int = 512,
+                     interpret: Optional[bool] = None) -> jax.Array:
+    """Batch-decode attention (one token per request over a long cache)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _decode_kernel(q, k, v, pos, block_k=block_k, window=window,
+                          interpret=interpret)

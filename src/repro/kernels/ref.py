@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def smlm_ref(x: jax.Array, a: jax.Array, b: jax.Array, tile_ids: jax.Array,
+             tile_scale: jax.Array, block_t: int) -> jax.Array:
+    """Tile-segmented multi-LoRA matmul oracle."""
+    ids = jnp.repeat(tile_ids, block_t)
+    scale = jnp.repeat(tile_scale, block_t)
+    return bgmv_ref(x, a, b, ids, scale)
+
+
+def bgmv_ref(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
+             scale: jax.Array) -> jax.Array:
+    """Per-token multi-LoRA matmul oracle (one-hot form)."""
+    n = a.shape[0]
+    onehot = jax.nn.one_hot(ids, n, dtype=jnp.float32) * scale[:, None]
+    xa = jnp.einsum("td,ndr->tnr", x.astype(jnp.float32),
+                    a.astype(jnp.float32))
+    xa = xa * onehot[:, :, None]
+    y = jnp.einsum("tnr,nro->to", xa, b.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        lengths: jax.Array, causal: bool = True) -> jax.Array:
+    """Masked GQA attention oracle (full-scores form)."""
+    from repro.models.layers import attention
+    B, S = q.shape[:2]
+    T = k.shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    k_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    k_valid = k_pos < lengths[:, None]
+    return attention(q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
+                     causal=causal, window=0)

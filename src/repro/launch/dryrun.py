@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+# The two lines above MUST stay first: jax locks the device count on first
+# init, and the dry-run needs 512 placeholder host devices for the
+# 2 x 16 x 16 production mesh.  Do NOT set this flag anywhere global —
+# smoke tests and benchmarks run on 1 device.
+#
+# Multi-pod dry-run: lower + compile every (architecture x input shape) on
+# the production mesh, print memory/cost analyses, and emit roofline terms.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --both-meshes [--out DIR]
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core.unified import make_forward_step, make_train_step
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import (DRYRUN_LORA, SHAPES, InputShape,
+                                 abstract_model_state, adapt_config,
+                                 input_specs)
+from repro.models import costs
+from repro.roofline import analysis as ra
+from repro.training.optimizer import AdamWConfig, adamw_init
+
+ASSIGNED_ARCHS = [a for a in ARCH_IDS if a != "llama3-8b"]
+DEFAULT_CHUNK = 1024
+
+
+def model_flops(cfg, shape: InputShape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D for inference (N active)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch              # one token per row
+    return 2.0 * n * d
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
+              strategy: str = "fsdp_tp", attn_chunk: int = DEFAULT_CHUNK,
+              seq_act_shard: bool = True, cache_strategy: str = "auto",
+              quant_int8: bool = False, verbose: bool = True) -> Dict:
+    shape = SHAPES[shape_name]
+    cfg = adapt_config(get_config(arch), shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+
+    params_abs, bank_abs, scale_abs = abstract_model_state(cfg)
+    ins = input_specs(cfg, shape)
+    batch_abs, cache_abs = ins["batch"], ins["cache"]
+
+    if quant_int8:
+        from repro.models import quant
+        params_abs = quant.abstract_quantized(cfg)
+        p_shard = quant.quant_shardings(cfg, mesh, strategy)
+    else:
+        p_shard = sh.param_shardings(cfg, mesh, strategy)
+    bank_shard = sh.lora_shardings(bank_abs, mesh)
+    scale_shard = sh.replicated(mesh)
+    batch_shard = sh.batch_shardings(batch_abs, mesh)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt = AdamWConfig()
+            act = sh.act_constraint_fn(mesh) if seq_act_shard else None
+            step = make_train_step(cfg, opt, remat=True,
+                                   attn_chunk=attn_chunk,
+                                   act_constraint=act, jit=False)
+            opt_abs = jax.eval_shape(
+                lambda b: adamw_init(b, DRYRUN_LORA.n_slots), bank_abs)
+            opt_shard = sh.opt_shardings(opt_abs, mesh)
+            mask_abs = jax.ShapeDtypeStruct((DRYRUN_LORA.n_slots,),
+                                            jnp.float32)
+            # donate bank + optimizer state: updated values alias inputs
+            jitted = jax.jit(step, in_shardings=(
+                p_shard, bank_shard, scale_shard, opt_shard, batch_shard,
+                scale_shard), donate_argnums=(1, 3))
+            lowered = jitted.lower(params_abs, bank_abs, scale_abs, opt_abs,
+                                   batch_abs, mask_abs)
+        else:
+            chunk = attn_chunk if shape.kind == "prefill" else 0
+            step = make_forward_step(cfg, attn_chunk=chunk, jit=False)
+            cache_shard = sh.cache_shardings(cfg, cache_abs, mesh,
+                                             strategy=cache_strategy)
+            # donate the cache: the updated cache aliases the input buffer
+            # (decode would otherwise double its HBM footprint)
+            jitted = jax.jit(step, in_shardings=(
+                p_shard, bank_shard, scale_shard, batch_shard, cache_shard),
+                donate_argnums=(4,))
+            lowered = jitted.lower(params_abs, bank_abs, scale_abs,
+                                   batch_abs, cache_abs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = ra.memory_summary(compiled)
+    hlo = compiled.as_text()
+    hcost = ra.hlo_cost(compiled)
+    # inner chunk loops (q-map / kv-scan) nest under the layer scan
+    inner = max(shape.seq_len // max(attn_chunk, 1), 1)
+    coll = ra.collective_bytes(hlo, loop_trips=(cfg.n_periods, inner, inner))
+    dp = chips // mesh.shape["model"]
+    acost = costs.step_cost(cfg, shape.kind, shape.seq_len,
+                            shape.global_batch, dp=dp,
+                            tp=mesh.shape["model"], strategy=strategy,
+                            attn_chunk=attn_chunk)
+    roof = ra.Roofline(flops=acost.flops, hbm_bytes=acost.hbm_bytes,
+                       coll_bytes=max(acost.coll_bytes,
+                                      float(sum(coll["scaled"].values()))),
+                       chips=chips, model_flops=model_flops(cfg, shape))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "strategy": strategy,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "collectives_hlo": coll,
+        "hlo_cost_raw": hcost,
+        "analytic_detail": {k: round(v, 3) for k, v in acost.detail.items()},
+        "roofline": roof.as_dict(),
+        "status": "ok",
+    }
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']}: "
+              f"compile {t_compile:.0f}s  "
+              f"per-dev peak ~{mem['peak_estimate_bytes']/2**30:.2f} GiB  "
+              f"dominant={roof.dominant}  "
+              f"terms(c/m/n)={roof.compute_s:.4f}/{roof.memory_s:.4f}/"
+              f"{roof.collective_s:.4f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost: analytic flops/dev={roof.flops:.3e} "
+              f"hbm/dev={roof.hbm_bytes:.3e} coll/dev={roof.coll_bytes:.3e} "
+              f"| hlo raw flops={hcost['flops']:.3e} "
+              f"useful_ratio={roof.useful_flops_ratio:.3f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default="all")
+    ap.add_argument("--shape", choices=list(SHAPES) + ["all"], default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--strategy", default="fsdp_tp",
+                    choices=["fsdp_tp", "tp"])
+    ap.add_argument("--attn-chunk", type=int, default=DEFAULT_CHUNK)
+    ap.add_argument("--no-seq-act-shard", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shp}__{'2x16x16' if mp else '16x16'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] skip {tag} (exists)")
+                    continue
+                try:
+                    rec = lower_one(arch, shp, multi_pod=mp,
+                                    strategy=args.strategy,
+                                    attn_chunk=args.attn_chunk,
+                                    seq_act_shard=not args.no_seq_act_shard)
+                except Exception as e:  # noqa: BLE001 — record, keep going
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shp,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+    print(f"[dryrun] done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

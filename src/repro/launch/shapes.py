@@ -1,0 +1,101 @@
+"""Assigned input shapes and abstract input construction for the dry-run.
+
+Decode shapes lower ``serve_step`` — ONE new token against a ``seq_len``
+cache.  ``long_500k`` switches attention architectures to the sliding-window
+decode variant (rolling-buffer cache, window 8192) so the step is
+sub-quadratic; SSM/hybrid layers use their native O(1)/chunked paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lora import LoRAConfig, abstract_lora_bank
+from repro.models.configs import ModelConfig
+from repro.models.model import abstract_cache
+from repro.models.schema import abstract_params, lora_targets
+from repro.models.stream import DECBatch, FTBatch, PFBatch, UnifiedBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str           # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+LONG_CONTEXT_WINDOW = 8192       # sliding-window for attention archs @500k
+DRYRUN_LORA = LoRAConfig(n_slots=4, r=8)   # the paper's r=8
+
+
+def has_attention(cfg: ModelConfig) -> bool:
+    return any(k == "attn" for k in cfg.pattern)
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-driven config adaptation (bf16 compute; windowed long decode)."""
+    cfg = cfg.replace(dtype="bfloat16")
+    if shape.name == "long_500k" and has_attention(cfg):
+        cfg = cfg.replace(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _f(shape, dtype=jnp.bfloat16):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _bool(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.bool_)
+
+
+def _aux_spec(cfg: ModelConfig, b: int) -> Optional[jax.ShapeDtypeStruct]:
+    """Modality-frontend STUB: precomputed frame/patch embeddings."""
+    if cfg.encoder is not None:
+        return _f((b, cfg.encoder.n_frames, cfg.d_model))
+    if cfg.cross_attn_every:
+        return _f((b, cfg.n_img_tokens, cfg.d_model))
+    return None
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Abstract (ShapeDtypeStruct) inputs for jit lowering — no allocation."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        ft = FTBatch(tokens=_i32((b, s)), mask=_bool((b, s)),
+                     labels=_i32((b, s)), adapter=_i32((b,)),
+                     weight=_f((b,), jnp.float32),
+                     aux_embed=_aux_spec(cfg, b))
+        return {"batch": UnifiedBatch(ft=ft), "cache": None}
+    if shape.kind == "prefill":
+        pf = PFBatch(tokens=_i32((b, s)), length=_i32((b,)),
+                     adapter=_i32((b,)), aux_embed=_aux_spec(cfg, b))
+        cache = abstract_cache(cfg, b, s)
+        return {"batch": UnifiedBatch(pf=pf), "cache": cache}
+    # decode: ONE token per row over a seq_len cache
+    dec = DECBatch(tokens=_i32((b,)), pos=_i32((b,)), adapter=_i32((b,)))
+    cache = abstract_cache(cfg, b, s)
+    return {"batch": UnifiedBatch(dec=dec), "cache": cache}
+
+
+def abstract_model_state(cfg: ModelConfig, lcfg: LoRAConfig = DRYRUN_LORA):
+    """(params, lora bank, scale) as ShapeDtypeStructs."""
+    params = abstract_params(cfg)
+    bank = abstract_lora_bank(lora_targets(cfg, lcfg.targets), lcfg,
+                              dtype=jnp.dtype(cfg.dtype))
+    scale = jax.ShapeDtypeStruct((lcfg.n_slots,), jnp.float32)
+    return params, bank, scale

@@ -1,0 +1,2 @@
+"""Model substrate: configs, layers, and the generic scanned decoder that
+serves every assigned architecture family."""

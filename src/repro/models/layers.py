@@ -1,0 +1,255 @@
+"""Shared layer math: RMSNorm, RoPE, masked/chunked attention, SwiGLU.
+
+Attention is one generic routine covering every bucket of the unified flow:
+fine-tune/eval (differentiable causal self-attention), prefill (causal with
+cache write), decode (one query over a cache), cross-attention (no causal
+mask), and sliding-window variants.  The mask is always expressed through
+explicit per-token positions, so rolling-buffer caches work transparently.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * w.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: [..., n_heads, hd]; pos broadcastable to x's
+    leading dims (e.g. [B, S] for [B, S, h, hd])."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs      # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, wg: jax.Array, wu: jax.Array, wd: jax.Array
+           ) -> jax.Array:
+    return (jax.nn.silu(x @ wg.astype(x.dtype)) * (x @ wu.astype(x.dtype))
+            ) @ wd.astype(x.dtype)
+
+
+def _build_mask(q_pos: jax.Array, k_pos: jax.Array, k_valid: jax.Array,
+                causal: bool, window: int) -> jax.Array:
+    """[B, S, T] boolean mask from per-token positions."""
+    m = k_valid[:, None, :]
+    if causal:
+        m = m & (k_pos[:, None, :] <= q_pos[:, :, None])
+    if window > 0:
+        m = m & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+    return m
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_pos: jax.Array, k_pos: jax.Array, k_valid: jax.Array,
+              causal: bool = True, window: int = 0, chunk: int = 0,
+              scale: Optional[float] = None) -> jax.Array:
+    """Generic GQA attention.
+
+    q: [B, S, h, hd]; k/v: [B, T, g, hd] with h % g == 0.
+    q_pos: [B, S]; k_pos/k_valid: [B, T].
+    chunk > 0 streams the KV axis in blocks with an online softmax
+    (flash-attention schedule in pure jnp — the differentiable oracle of the
+    Pallas kernel, and the memory-bounded path used by big dry-run configs).
+    """
+    B, S, h, hd = q.shape
+    T, g = k.shape[1], k.shape[2]
+    m = h // g
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, S, g, m, hd)
+    if chunk and chunk < T:
+        if S > chunk:
+            # q-chunked outer loop (memory-bounded both ways): serial map
+            # over query blocks, online-softmax scan over KV blocks inside.
+            pad = (-S) % chunk
+            if pad:
+                qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+                q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)))
+            nqb = qg.shape[1] // chunk
+            qb = qg.reshape(B, nqb, chunk, g, m, hd).transpose(1, 0, 2, 3, 4, 5)
+            pb = q_pos.reshape(B, nqb, chunk).transpose(1, 0, 2)
+
+            def one(args):
+                qblk, posblk = args
+                return _attention_chunked(qblk, k, v, posblk, k_pos, k_valid,
+                                          causal, window, chunk, scale)
+
+            # rematerialise per query block: backward recomputes instead of
+            # saving per-block score matrices (flash-attention semantics)
+            out = jax.lax.map(jax.checkpoint(one), (qb, pb))
+            out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, S + pad, h, hd)
+            return out[:, :S]
+        return _attention_chunked(qg, k, v, q_pos, k_pos, k_valid, causal,
+                                  window, chunk, scale).reshape(B, S, h, hd)
+    mask = _build_mask(q_pos, k_pos, k_valid, causal, window)    # [B, S, T]
+    scores = jnp.einsum("bsgmd,btgd->bgmst", qg, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgmst,btgd->bsgmd", probs, v)
+    # fully-masked queries (pad rows) are defined as 0 — matches the
+    # online-softmax paths, whose l stays 0 there
+    out = jnp.where(mask.any(-1)[:, :, None, None, None], out, 0.0)
+    return out.reshape(B, S, h, hd)
+
+
+def _attention_chunked(qg, k, v, q_pos, k_pos, k_valid, causal, window,
+                       chunk, scale):
+    B, S, g, m, hd = qg.shape
+    T = k.shape[1]
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, pad)))
+    nc = k.shape[1] // chunk
+    kc = k.reshape(B, nc, chunk, g, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nc, chunk, g, hd).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(B, nc, chunk).transpose(1, 0, 2)
+    kvc = k_valid.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        acc, m_run, l_run = carry
+        kb, vb, kp, kv_ = xs                                     # [B,c,g,hd]...
+        mask = kv_[:, None, :]
+        if causal:
+            mask = mask & (kp[:, None, :] <= q_pos[:, :, None])
+        if window > 0:
+            mask = mask & (q_pos[:, :, None] - kp[:, None, :] < window)
+        s = jnp.einsum("bsgmd,bcgd->bgmsc", qg, kb).astype(jnp.float32) * scale
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        # mask p explicitly: for fully-masked rows m_new = NEG_INF and
+        # exp(s - m_new) would be exp(0) = 1 on masked entries
+        p = jnp.where(mask[:, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(jnp.minimum(m_run - m_new, 0.0))
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bgmsc,bcgd->bgmsd", p.astype(qg.dtype), vb).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, g, m, S, hd), jnp.float32)
+    m0 = jnp.full((B, g, m, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, g, m, S), jnp.float32)
+    (acc, _, l), _ = jax.lax.scan(jax.checkpoint(body), (acc0, m0, l0),
+                                  (kc, vc, kpc, kvc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 3, 1, 2, 4).astype(qg.dtype)         # [B,S,g,m,hd]
+
+
+def mla_attention_chunked(q_nope, q_pe, ckv, kpe, w_uk, w_uv, *,
+                          q_pos, k_pos, k_valid, causal=True, window=0,
+                          chunk=1024) -> jax.Array:
+    """Memory-bounded MLA for long prefill/training (FlashMLA-style):
+    K/V are expanded from the compressed latent one KV block at a time inside
+    an online-softmax scan; the full K/V are never materialised.  Outer
+    serial map over query blocks bounds the score tile to [chunk, chunk]."""
+    B, S, h, dn = q_nope.shape
+    dr = q_pe.shape[-1]
+    dv = w_uv.shape[-1]
+    T = ckv.shape[1]
+    scale = (dn + dr) ** -0.5
+    padk = (-T) % chunk
+    if padk:
+        ckv = jnp.pad(ckv, ((0, 0), (0, padk), (0, 0)))
+        kpe = jnp.pad(kpe, ((0, 0), (0, padk), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, padk)))
+        k_valid = jnp.pad(k_valid, ((0, 0), (0, padk)))
+    nk = ckv.shape[1] // chunk
+    ckv_b = ckv.reshape(B, nk, chunk, -1).transpose(1, 0, 2, 3)
+    kpe_b = kpe.reshape(B, nk, chunk, -1).transpose(1, 0, 2, 3)
+    kp_b = k_pos.reshape(B, nk, chunk).transpose(1, 0, 2)
+    kv_b = k_valid.reshape(B, nk, chunk).transpose(1, 0, 2)
+
+    padq = (-S) % chunk
+    if padq:
+        q_nope = jnp.pad(q_nope, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        q_pe = jnp.pad(q_pe, ((0, 0), (0, padq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, padq)))
+    nq = q_nope.shape[1] // chunk
+    qn_b = q_nope.reshape(B, nq, chunk, h, dn).transpose(1, 0, 2, 3, 4)
+    qp_b = q_pe.reshape(B, nq, chunk, h, dr).transpose(1, 0, 2, 3, 4)
+    pos_b = q_pos.reshape(B, nq, chunk).transpose(1, 0, 2)
+
+    def q_block(args):
+        qn, qp, qpos = args                       # [B,c,h,dn], ..., [B,c]
+
+        def body(carry, xs):
+            acc, m_run, l_run = carry
+            cb, pb, kp, kv_ = xs
+            kn = jnp.einsum("btc,chd->bthd", cb, w_uk.astype(cb.dtype))
+            vv = jnp.einsum("btc,chd->bthd", cb, w_uv.astype(cb.dtype))
+            s = jnp.einsum("bshd,bthd->bhst", qn, kn).astype(jnp.float32)
+            s = s + jnp.einsum("bshd,btd->bhst", qp, pb).astype(jnp.float32)
+            s = s * scale
+            mask = kv_[:, None, :]
+            if causal:
+                mask = mask & (kp[:, None, :] <= qpos[:, :, None])
+            if window > 0:
+                mask = mask & (qpos[:, :, None] - kp[:, None, :] < window)
+            s = jnp.where(mask[:, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.where(mask[:, None], jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(jnp.minimum(m_run - m_new, 0.0))
+            l_new = l_run * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhst,bthd->bhsd", p.astype(vv.dtype), vv).astype(jnp.float32)
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, h, chunk, dv), jnp.float32)
+        m0 = jnp.full((B, h, chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, h, chunk), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(jax.checkpoint(body), (acc0, m0, l0),
+                                      (ckv_b, kpe_b, kp_b, kv_b))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 2, 1, 3).astype(q_nope.dtype)   # [B,c,h,dv]
+
+    out = jax.lax.map(jax.checkpoint(q_block), (qn_b, qp_b, pos_b))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, S + padq, h, dv)
+    return out[:, :S]
+
+
+def mla_attention(q_nope: jax.Array, q_pe: jax.Array, ckv: jax.Array,
+                  kpe: jax.Array, w_uk: jax.Array, w_uv: jax.Array, *,
+                  q_pos: jax.Array, k_pos: jax.Array, k_valid: jax.Array,
+                  causal: bool = True, window: int = 0,
+                  chunk: int = 0) -> jax.Array:
+    """Absorbed-form MLA attention (DeepSeek-V2) — the TPU-native adaptation:
+    K/V are never materialised; scores and outputs are computed against the
+    compressed latent cache directly.
+
+    q_nope: [B, S, h, dn]; q_pe: [B, S, h, dr] (already roped)
+    ckv: [B, T, c]; kpe: [B, T, dr] (already roped)
+    w_uk: [c, h, dn]; w_uv: [c, h, dv]
+    """
+    B, S, h, dn = q_nope.shape
+    dr = q_pe.shape[-1]
+    T = ckv.shape[1]
+    if chunk and (S > chunk or T > chunk):
+        return mla_attention_chunked(q_nope, q_pe, ckv, kpe, w_uk, w_uv,
+                                     q_pos=q_pos, k_pos=k_pos,
+                                     k_valid=k_valid, causal=causal,
+                                     window=window, chunk=chunk)
+    scale = (dn + dr) ** -0.5
+    q_lat = jnp.einsum("bshd,chd->bshc", q_nope, w_uk.astype(q_nope.dtype))
+    s = jnp.einsum("bshc,btc->bhst", q_lat, ckv).astype(jnp.float32)
+    s = s + jnp.einsum("bshd,btd->bhst", q_pe, kpe).astype(jnp.float32)
+    s = s * scale
+    mask = _build_mask(q_pos, k_pos, k_valid, causal, window)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q_nope.dtype)
+    o_lat = jnp.einsum("bhst,btc->bshc", p, ckv)
+    return jnp.einsum("bshc,chd->bshd", o_lat, w_uv.astype(q_nope.dtype))

@@ -1,0 +1,127 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Training/prefill use the chunked SSD algorithm (intra-chunk attention-like
+form + inter-chunk state recurrence carried by ``lax.scan``); decode is the
+O(1) single-step recurrence.  Padding is handled by forcing ``dt = 0`` on pad
+tokens, which makes the recurrence a no-op (decay 1, update 0).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [K, C]; state: [B, K-1, C].
+    Returns (y [B,S,C], new_state [B,K-1,C])."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)                     # [B, S+K-1, C]
+    S = x.shape[1]
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x:  [B, S, nh, hd]   inputs per head
+    dt: [B, S, nh]       softplus'd step sizes (0 on pad tokens)
+    A:  [nh]             negative per-head decay rates
+    Bm/Cm: [B, S, nh, ds] input/output projections (groups pre-expanded)
+    h0: [B, nh, hd, ds]  initial state
+    Returns (y [B,S,nh,hd], h_final [B,nh,hd,ds]).
+    """
+    Bsz, S, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+    # [B, nc, Q, ...]
+    xq = x.reshape(Bsz, nc, chunk, nh, hd)
+    dtq = dt.reshape(Bsz, nc, chunk, nh).astype(jnp.float32)
+    Bq = Bm.reshape(Bsz, nc, chunk, nh, ds)
+    Cq = Cm.reshape(Bsz, nc, chunk, nh, ds)
+
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, hd, ds), x.dtype)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    # One chunk per scan step; intra-chunk work happens INSIDE the
+    # (checkpointed) body so the [Q, Q] decay matrix never materialises for
+    # more than one chunk at a time — bounding both forward transients and
+    # backward residuals.
+    def body(h, xs):
+        xc, dtc, Bc, Cc = xs               # [B,Q,nh,hd], [B,Q,nh], [B,Q,nh,ds]
+        dA = dtc * A.astype(jnp.float32)                         # [B,Q,nh]
+        cs = jnp.cumsum(dA, axis=1)                              # inclusive
+        total = cs[:, -1, :]                                     # [B,nh]
+        # intra: M[t,s] = exp(cs_t - cs_s) * dt_s * (C_t . B_s), s <= t
+        cb = jnp.einsum("bqhd,bkhd->bhqk", Cc, Bc).astype(jnp.float32)
+        delta = cs.transpose(0, 2, 1)[:, :, :, None] \
+            - cs.transpose(0, 2, 1)[:, :, None, :]               # [B,nh,q,k]
+        M = jnp.where(causal, jnp.exp(delta)
+                      * dtc.transpose(0, 2, 1)[:, :, None, :], 0.0) * cb
+        y_c = jnp.einsum("bhqk,bkhd->bqhd", M.astype(xc.dtype), xc)
+        # inter: y_t += C_t . (exp(cs_t) * h_start)
+        w_out = jnp.exp(cs)                                      # [B,Q,nh]
+        y_c = y_c + jnp.einsum("bqhd,bhpd,bqh->bqhp", Cc, h,
+                               w_out.astype(xc.dtype))
+        # state update: h' = exp(total) h + sum_s exp(total - cs_s) dt_s B_s x_s
+        w_in = (jnp.exp(total[:, None, :] - cs) * dtc).astype(xc.dtype)
+        ingest = jnp.einsum("bkh,bkhd,bkhp->bhpd", w_in, Bc, xc)
+        h_new = h * jnp.exp(total).astype(h.dtype)[:, :, None, None] + ingest
+        return h_new, y_c
+
+    xs = (xq.transpose(1, 0, 2, 3, 4), dtq.transpose(1, 0, 2, 3),
+          Bq.transpose(1, 0, 2, 3, 4), Cq.transpose(1, 0, 2, 3, 4))
+    h_final, ys = jax.lax.scan(jax.checkpoint(body), h0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, Sp, nh, hd)[:, :S]
+    return y, h_final
+
+
+def ssd_step(h: jax.Array, x_t: jax.Array, dt_t: jax.Array, A: jax.Array,
+             B_t: jax.Array, C_t: jax.Array
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Single decode step.  h: [B,nh,hd,ds]; x_t: [B,nh,hd]; dt_t: [B,nh];
+    B_t/C_t: [B,nh,ds].  Returns (y [B,nh,hd], h_new)."""
+    dA = dt_t.astype(jnp.float32) * A.astype(jnp.float32)        # [B,nh]
+    decay = jnp.exp(dA).astype(h.dtype)[:, :, None, None]
+    update = jnp.einsum("bh,bhp,bhd->bhpd",
+                        dt_t.astype(x_t.dtype), x_t, B_t)
+    h_new = h * decay + update
+    y = jnp.einsum("bhpd,bhd->bhp", h_new, C_t)
+    return y, h_new
+
+
+def split_zxbcdt(cfg: ModelConfig, zxbcdt: jax.Array):
+    """Split the fused in-projection output along its last axis."""
+    s = cfg.ssm
+    di = cfg.d_inner
+    gds = s.n_groups * s.d_state
+    nh = cfg.n_ssm_heads
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + gds, 2 * di + 2 * gds], axis=-1)
+    return z, xs, b, c, dt
+
+
+def expand_groups(t: jax.Array, nh: int) -> jax.Array:
+    """[..., g, ds] -> [..., nh, ds] by repeating each group nh//g times."""
+    g = t.shape[-2]
+    return jnp.repeat(t, nh // g, axis=-2)

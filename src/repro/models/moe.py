@@ -1,0 +1,126 @@
+"""Mixture-of-Experts layer with sort-based (scatter/gather) dispatch.
+
+Tokens are routed top-k, sorted by expert, and packed into a static-capacity
+buffer [E, C, d]; expert FFNs run as one batched einsum so the ``experts``
+axis shards cleanly over the mesh "model" axis (expert parallelism).  Tokens
+over capacity are dropped (standard capacity-factor semantics); the router
+aux loss balances load during fine-tuning.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import MoEConfig
+
+
+def router_topk(logits: jax.Array, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Softmax-then-top-k routing (DeepSeek/Jamba style), gates renormalised."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, idx
+
+
+def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int
+                      ) -> jax.Array:
+    """Switch-style aux loss: E * sum_e f_e * p_e."""
+    assign = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)    # [T,k,E]
+    f = assign.sum(axis=(0, 1)) / jnp.maximum(assign.sum(), 1.0)
+    p = probs.mean(axis=0)
+    return n_experts * jnp.sum(f * p)
+
+
+GROUP_TOKENS = 4096      # dispatch group size (capacity is per group)
+
+
+def _group_dispatch(xg: jax.Array, idx: jax.Array, gates: jax.Array,
+                    params: dict, cap: int, E: int, k: int):
+    """Per-group sort-based pack -> expert einsum -> unpack.
+
+    xg: [S, d]; idx/gates: [S, k].  vmapped over groups, so all scatter /
+    gather indices are group-LOCAL — the batched ops keep their group dim
+    shardable over the data axes (a global-index gather would force GSPMD to
+    replicate the full activation tensor).
+    """
+    S, d = xg.shape
+    flat_e = idx.reshape(S * k)
+    tok_of = jnp.arange(S * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=sorted_e.dtype))
+    pos_sorted = jnp.arange(S * k, dtype=jnp.int32) - seg_start[sorted_e]
+    pos = jnp.zeros((S * k,), jnp.int32).at[order].set(pos_sorted)
+
+    buf = jnp.zeros((E, cap, d), xg.dtype)
+    # scatter-ADD, not set: (expert, pos) pairs are injective by
+    # construction, so add==set — but add's VJP is a plain gather, while
+    # set's VJP materialises u32 duplicate-winner buffers of the full
+    # [E, C, d] operand shape (hundreds of GiB at 1M-token batches).
+    buf = buf.at[flat_e, pos].add(xg[tok_of], mode="drop")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf,
+                               params["w_gate"].astype(xg.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(xg.dtype))
+    out = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(xg.dtype))
+
+    kept = (pos < cap)
+    y_tok = out[flat_e, jnp.minimum(pos, cap - 1)]                # [Sk, d]
+    y_tok = jnp.where(kept[:, None], y_tok, 0.0)
+    return jnp.einsum("tkd,tk->td", y_tok.reshape(S, k, d), gates)
+
+
+def moe_apply(x: jax.Array, params: dict, mcfg: MoEConfig
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [T, d] -> (y: [T, d], aux_loss scalar).
+
+    params: router [d,E]; w_gate/w_up [E,d,f]; w_down [E,f,d].
+    Tokens are split into dispatch groups of ~GROUP_TOKENS; groups shard
+    over the data axes, experts over "model" (expert parallelism) — GSPMD
+    inserts the all-to-all at the group/expert resharding boundary.
+    """
+    T, d = x.shape
+    E, k = mcfg.num_experts, mcfg.top_k
+    logits = x @ params["router"].astype(x.dtype)                 # [T, E]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)
+    gates = (gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+             ).astype(x.dtype)
+    aux = load_balance_loss(probs, idx, E) * mcfg.router_aux_weight
+
+    G = max(T // GROUP_TOKENS, 1)
+    while T % G:
+        G -= 1
+    S = T // G
+    cap = max(int(math.ceil(S * k / E * mcfg.capacity_factor)), 1)
+    from repro.distributed.sharding import maybe_constrain
+    xg = x.reshape(G, S, d)
+    wts = {kk: params[kk] for kk in ("w_gate", "w_up", "w_down")}
+    y = jax.vmap(lambda xb, ib, gb: _group_dispatch(xb, ib, gb, wts,
+                                                    cap, E, k)
+                 )(xg, idx.reshape(G, S, k), gates.reshape(G, S, k))
+    y = y.reshape(T, d)
+    return y, aux.astype(jnp.float32)
+
+
+def moe_apply_dense_ref(x: jax.Array, params: dict, mcfg: MoEConfig
+                        ) -> jax.Array:
+    """Capacity-free oracle: every expert computed for every token, combined
+    with routing gates.  Used by tests to bound the dispatch drop error."""
+    T, d = x.shape
+    E, k = mcfg.num_experts, mcfg.top_k
+    logits = x @ params["router"].astype(x.dtype)
+    gates, idx = router_topk(logits, k)
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", x, params["w_gate"].astype(x.dtype)))
+    h = h * jnp.einsum("td,edf->tef", x, params["w_up"].astype(x.dtype))
+    out = jnp.einsum("tef,efd->ted", h, params["w_down"].astype(x.dtype))
+    comb = jnp.zeros((T, E), x.dtype)
+    comb = comb.at[jnp.arange(T)[:, None], idx].set(gates.astype(x.dtype))
+    y = jnp.einsum("ted,te->td", out, comb)
+    if "shared_wg" in params:
+        y = y + (jax.nn.silu(x @ params["shared_wg"].astype(x.dtype))
+                 * (x @ params["shared_wu"].astype(x.dtype))
+                 ) @ params["shared_wd"].astype(x.dtype)
+    return y

@@ -1,0 +1,168 @@
+"""Weight-only int8 quantization for serving (beyond-paper, §Perf HC1-iter3).
+
+Decode at 100B scale is bound by weight traffic (HBM reads + FSDP gathers),
+not FLOPs — storing matrix weights as per-output-channel symmetric int8
+halves both.  Dequantization happens INSIDE the layer scan on the current
+period's slice only, so HBM holds int8 and only one layer's bf16 weights
+exist transiently.
+
+A quantized leaf is a dict ``{"_q8": int8[..., d_in, d_out],
+"_qs": f32[..., 1, d_out]}``; everything else (norms, biases, small vectors)
+stays in the original dtype.  Training keeps bf16 — this is a serving
+feature (the LoRA bank is never quantized: adapters must stay trainable and
+hot-swappable).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.configs import ModelConfig
+from repro.models.schema import P, _is_p, build_schema
+
+
+def _eligible(p: P) -> bool:
+    """Quantize big matmul weights only (gaussian-init, >=2D, wide)."""
+    return (p.init == "normal" and len(p.shape) >= 2
+            and p.shape[-1] >= 64 and p.shape[-2] >= 64)
+
+
+def is_q8(node) -> bool:
+    return isinstance(node, dict) and "_q8" in node
+
+
+def quantize_leaf(w: jax.Array) -> Dict[str, jax.Array]:
+    s = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2, keepdims=True) / 127.0
+    s = jnp.maximum(s, 1e-8)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / s), -127, 127
+                 ).astype(jnp.int8)
+    return {"_q8": q, "_qs": s.astype(jnp.float32)}
+
+
+def dequant_leaf(node, dtype=jnp.bfloat16) -> jax.Array:
+    return (node["_q8"].astype(jnp.float32) * node["_qs"]).astype(dtype)
+
+
+def quantize_params(cfg: ModelConfig, params) -> Any:
+    """Quantize eligible leaves of a materialised param tree."""
+    schema = build_schema(cfg)
+
+    def walk(node, spec):
+        if _is_p(spec):
+            return quantize_leaf(node) if _eligible(spec) else node
+        if isinstance(spec, dict):
+            return {k: walk(node[k], v) for k, v in spec.items()}
+        if isinstance(spec, tuple):
+            return tuple(walk(n, v) for n, v in zip(node, spec))
+        return node
+
+    return walk(params, schema)
+
+
+def abstract_quantized(cfg: ModelConfig, dtype=jnp.bfloat16) -> Any:
+    """ShapeDtypeStruct tree of the quantized layout (for the dry-run)."""
+    schema = build_schema(cfg)
+
+    def leaf(p: P):
+        if _eligible(p):
+            return {"_q8": jax.ShapeDtypeStruct(p.shape, jnp.int8),
+                    "_qs": jax.ShapeDtypeStruct((*p.shape[:-2], 1, p.shape[-1]),
+                                                jnp.float32)}
+        return jax.ShapeDtypeStruct(p.shape, dtype)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=_is_p)
+
+
+def quant_shardings(cfg: ModelConfig, mesh, strategy: str = "fsdp_tp") -> Any:
+    """Shardings matching ``abstract_quantized``: int8 payload inherits the
+    bf16 leaf's spec; scales inherit it minus the (reduced) input dim."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.distributed.sharding import _spec_for
+    schema = build_schema(cfg)
+
+    def leaf(p: P):
+        spec = _spec_for(cfg, mesh, strategy, p.shape, p.logical)
+        if _eligible(p):
+            parts = list(spec) + [None] * (len(p.shape) - len(spec))
+            s_parts = parts[:-2] + [None, parts[-1]]
+            return {"_q8": NamedSharding(mesh, PartitionSpec(*parts)),
+                    "_qs": NamedSharding(mesh, PartitionSpec(*s_parts))}
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(leaf, schema, is_leaf=_is_p)
+
+
+def dequant_tree(node, dtype=jnp.bfloat16, specs=None):
+    """Dequantize every _q8 leaf in a (sub)tree; identity on bf16 trees.
+    ``specs`` (optional, same structure with PartitionSpec leaves) constrains
+    the INT8 payload to its post-gather sharding before the convert — so the
+    FSDP all-gather moves int8 bytes, not the dequantized bf16 (2x wire
+    saving; GSPMD otherwise sinks the gather below the convert)."""
+    if is_q8(node):
+        if specs is not None:
+            q8 = jax.lax.with_sharding_constraint(node["_q8"], specs)
+            node = {"_q8": q8, "_qs": node["_qs"]}
+        return dequant_leaf(node, dtype)
+    if isinstance(node, dict):
+        return {k: dequant_tree(v, dtype,
+                                specs.get(k) if isinstance(specs, dict)
+                                else None)
+                for k, v in node.items()}
+    if isinstance(node, (tuple, list)):
+        return type(node)(dequant_tree(v, dtype,
+                                       specs[i] if specs is not None else None)
+                          for i, v in enumerate(node))
+    return node
+
+
+def block_gather_specs(cfg: ModelConfig):
+    """Per-pattern-position {leaf: PartitionSpec} for the period-sliced int8
+    payloads: the parameter spec with the leading periods axis dropped and
+    every "data" entry removed (keep TP, gather FSDP as int8).  Returns None
+    when no mesh is in scope (CPU tests)."""
+    from jax.sharding import PartitionSpec
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or am.empty or "model" not in am.axis_names:
+        return None
+    from repro.distributed.sharding import _spec_for
+
+    class _M:
+        shape = {a: am.shape[a] for a in am.axis_names}
+    schema = build_schema(cfg)
+
+    def walk(node):
+        if _is_p(node):
+            if not _eligible(node):
+                return None
+            spec = _spec_for(cfg, _M(), "fsdp_tp", node.shape, node.logical)
+            parts = [None if a == "data" else a for a in list(spec)[1:]]
+            parts += [None] * (len(node.shape) - 1 - len(parts))
+            return PartitionSpec(*parts)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return None
+
+    return walk(schema["blocks"])
+
+
+def has_q8(tree) -> bool:
+    found = False
+
+    def walk(node):
+        nonlocal found
+        if is_q8(node):
+            found = True
+            return
+        if isinstance(node, dict):
+            for v in node.values():
+                walk(v)
+        elif isinstance(node, (tuple, list)):
+            for v in node:
+                walk(v)
+
+    walk(tree)
+    return found

@@ -1,0 +1,52 @@
+"""Unified token-stream batch types (the paper's four request kinds).
+
+Fine-tune and evaluation requests share ``FTBatch`` (the paper notes they are
+structurally identical; evaluation rows simply carry no gradient — the trainer
+controls that).  Buckets are optional: any subset of (ft, pf, dec) may be
+present, each with static shapes so every bucket combination compiles once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+
+Array = jax.Array
+
+
+class FTBatch(NamedTuple):
+    tokens: Array                    # [Bf, Sf] int32 (right-padded)
+    mask: Array                      # [Bf, Sf] bool  valid tokens
+    labels: Array                    # [Bf, Sf] int32 (-100 = ignore)
+    adapter: Array                   # [Bf] int32 (-1 = base only)
+    weight: Array                    # [Bf] f32 per-row loss scale (1/accum)
+    aux_embed: Optional[Array] = None  # [Bf, F, d] modality stub embeddings
+
+
+class PFBatch(NamedTuple):
+    tokens: Array                    # [Bp, Sp] int32 (right-padded)
+    length: Array                    # [Bp] int32 true lengths
+    adapter: Array                   # [Bp] int32
+    aux_embed: Optional[Array] = None  # [Bp, F, d]
+
+
+class DECBatch(NamedTuple):
+    tokens: Array                    # [Bd] int32 current tokens
+    pos: Array                       # [Bd] int32 positions (= cache length)
+    adapter: Array                   # [Bd] int32
+
+
+class UnifiedBatch(NamedTuple):
+    ft: Optional[FTBatch] = None
+    pf: Optional[PFBatch] = None
+    dec: Optional[DECBatch] = None
+
+
+class ModelOut(NamedTuple):
+    ft_loss_sum: Optional[Array]     # [Bf] f32 summed token CE (shifted)
+    ft_tok_count: Optional[Array]    # [Bf] f32 valid target tokens
+    ft_logits: Optional[Array]       # [Bf, Sf, V] (only if requested)
+    pf_logits: Optional[Array]       # [Bp, V] logits at last valid position
+    dec_logits: Optional[Array]      # [Bd, V]
+    cache: Optional[dict]
+    aux_loss: Array                  # scalar (MoE load-balance etc.)

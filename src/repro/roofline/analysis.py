@@ -1,0 +1,156 @@
+"""Roofline terms from compiled XLA artifacts (no real hardware needed).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM per chip,
+~50 GB/s per ICI link.  ``cost_analysis`` supplies per-device HLO FLOPs and
+bytes; collective bytes are NOT in cost_analysis, so we parse the
+post-optimization HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link (conservative: 1 link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def collective_bytes(hlo_text: str, loop_trips=()) -> Dict[str, Dict[str, int]]:
+    """Per-collective-kind operand bytes summed over the per-device program.
+
+    XLA lists each while-loop body computation ONCE; an op whose op_name
+    metadata sits inside k nested ``/while`` scopes executes
+    prod(loop_trips[:k]) times.  Returns {"raw": {...}, "scaled": {...}} —
+    raw is the body-once sum, scaled multiplies by the enclosing trip counts
+    (loop_trips = (n_periods, inner, ...); missing entries count as 1).
+    """
+    raw = {k: 0 for k in _COLLECTIVES}
+    scaled = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        for kind in _COLLECTIVES:
+            # match the opcode invocation, not tuple-element accessors;
+            # XLA prints operands WITHOUT types, so measure the RESULT
+            # shapes on the lhs (== operand bytes for all-reduce /
+            # all-to-all / collective-permute; == gathered bytes for
+            # all-gather; *n for reduce-scatter — close enough for a
+            # wire-traffic roofline).
+            idx = stripped.find(f" {kind}(")
+            if idx < 0:
+                idx = stripped.find(f" {kind}-start(")
+            if idx < 0:
+                continue
+            lhs = stripped[:idx]
+            total = sum(_shape_bytes(dt, dims)
+                        for dt, dims in _SHAPE_RE.findall(lhs))
+            m = _OPNAME_RE.search(stripped)
+            depth = m.group(1).count("/while") if m else 0
+            mult = 1
+            for i in range(depth):
+                mult *= loop_trips[i] if i < len(loop_trips) else 1
+            raw[kind] += total
+            scaled[kind] += total * mult
+            break
+    return {"raw": raw, "scaled": scaled}
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device HLO FLOPs
+    hbm_bytes: float             # per-device bytes accessed
+    coll_bytes: float            # per-device collective operand bytes
+    chips: int
+    model_flops: float = 0.0     # 6*N*D (train) / 2*N*D (inference), global
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (per-device HLO FLOPs x chips)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "hbm_bytes_per_device": self.hbm_bytes,
+            "collective_bytes_per_device": self.coll_bytes,
+            "chips": self.chips,
+            "model_flops_global": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+        }
+
+
+def hlo_cost(compiled) -> Dict[str, float]:
+    """Raw cost_analysis numbers (NOTE: while-loop bodies counted once)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+
+
+def memory_summary(compiled) -> Dict:
+    ma = compiled.memory_analysis()
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    tot = (out.get("argument_size_in_bytes", 0)
+           + out.get("output_size_in_bytes", 0)
+           + out.get("temp_size_in_bytes", 0)
+           - out.get("alias_size_in_bytes", 0))
+    out["peak_estimate_bytes"] = tot
+    return out

@@ -1,0 +1,3 @@
+"""Serving substrate: requests, KV-cache management, SLO tracking, the
+continuous-batching scheduler with mutable capacity allocation, and the
+unified fine-tuning/serving engine."""

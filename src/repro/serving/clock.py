@@ -1,0 +1,60 @@
+"""Time sources for the engine.
+
+``WallClock`` charges real elapsed time (the default when benchmarking the
+actual CPU runtime).  ``VirtualClock`` charges a token-based cost model so
+SLO experiments replay deterministically and can emulate the paper's GPU
+timescales on this CPU-only container (constants calibrated in DESIGN.md /
+benchmarks)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+class WallClock:
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def charge(self, cost: float):                 # real time already passed
+        pass
+
+    def advance_to(self, t: float):
+        pass                                        # cannot time-travel
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Step latency model: fixed overhead + per-token costs (seconds).
+    Defaults emulate an A6000-class device serving an 8B model (paper Fig.2
+    scale): ~35 ms fixed step overhead, prefill ~9 us/tok, decode ~1.5
+    ms/tok-row, fine-tune ~28 us/tok (fwd+bwd)."""
+    fixed: float = 0.035
+    prefill_per_tok: float = 9e-6
+    decode_per_row: float = 1.5e-3
+    ft_per_tok: float = 28e-6
+
+
+class VirtualClock:
+    def __init__(self, cost: Optional[CostModel] = None):
+        self._t = 0.0
+        self.cost = cost or CostModel()
+
+    def now(self) -> float:
+        return self._t
+
+    def charge(self, cost: float):
+        self._t += cost
+
+    def advance_to(self, t: float):
+        self._t = max(self._t, t)
+
+    def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int) -> float:
+        c = self.cost
+        if pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0:
+            return 0.0
+        return (c.fixed + c.prefill_per_tok * pf_tokens
+                + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens)

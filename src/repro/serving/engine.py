@@ -1,0 +1,273 @@
+"""UnifiedEngine — the Loquetier runtime: one loop, four request kinds.
+
+Every tick assembles ONE unified batch (fine-tune + eval + prefill + decode),
+executes ONE jit'd step (with a shared backward pass when fine-tune rows are
+present), then scatters results back: sampled tokens to inference requests,
+per-row losses to their trainers, accumulated gradients to the masked
+optimizer on each trainer's accumulation boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import flow
+from repro.core.unified import make_apply_step, make_forward_step, make_grad_step
+from repro.core.virtualization import MixedLoraModel
+from repro.models.stream import UnifiedBatch
+from repro.serving.clock import VirtualClock, WallClock
+from repro.serving.kvcache import CacheManager
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.slo import Metrics, SLOConfig
+from repro.training.optimizer import (AdamWConfig, adamw_init, tree_add,
+                                      tree_mask_slots, tree_zeros_like)
+from repro.training.trainer import MixedLoraTrainer
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    capacity: int = 8                 # decode-table rows
+    pf_capacity: int = 4              # prefill scratch rows
+    s_max: int = 256                  # cache sequence capacity
+    scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+    slo: SLOConfig = dataclasses.field(default_factory=SLOConfig)
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    flow: flow.FlowConfig = dataclasses.field(default_factory=flow.FlowConfig)
+    attn_chunk: int = 0
+    virtual_time: bool = False        # deterministic trace replay
+
+
+class UnifiedEngine:
+    def __init__(self, model: MixedLoraModel, ecfg: Optional[EngineConfig] = None):
+        self.model = model
+        self.ecfg = ecfg or EngineConfig()
+        self.cfg = model.cfg
+        e = self.ecfg
+        self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity, e.s_max)
+        self.sched = Scheduler(e.scheduler, e.capacity)
+        self.clock = VirtualClock() if e.virtual_time else WallClock()
+        self.metrics = Metrics()
+
+        self.forward_step = make_forward_step(self.cfg, attn_chunk=e.attn_chunk)
+        self.grad_step = make_grad_step(self.cfg, attn_chunk=e.attn_chunk)
+        self.apply_step = make_apply_step(e.opt)
+        self.opt_state = adamw_init(model.store.bank,
+                                    model.store.lcfg.n_slots)
+        self.grad_accum = tree_zeros_like(model.store.bank)
+
+        self.future: List[Request] = []       # arrival-sorted
+        self.waiting: List[Request] = []
+        self.active: Dict[int, Request] = {}  # decode slot -> request
+        self.finished: List[Request] = []
+        self.trainers: Dict[str, MixedLoraTrainer] = {}
+        self._last_tokens = np.zeros((e.capacity,), np.int64)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        if req.arrival > self.clock.now():
+            self.future.append(req)
+            self.future.sort(key=lambda r: r.arrival)
+        else:
+            self.waiting.append(req)
+
+    def add_trainer(self, tr: MixedLoraTrainer):
+        self.trainers[tr.name] = tr
+
+    def trainers_pending(self) -> bool:
+        return any(t.pending() for t in self.trainers.values())
+
+    def _pull_arrivals(self):
+        now = self.clock.now()
+        while self.future and self.future[0].arrival <= now:
+            self.waiting.append(self.future.pop(0))
+
+    # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One scheduling + execution round; returns False when idle."""
+        self._pull_arrivals()
+        e = self.ecfg
+        decision = self.sched.decide(self.waiting, len(self.active),
+                                     self.cachemgr.n_free, e.pf_capacity,
+                                     self.trainers_pending())
+
+        # fine-tuning rows (round-robin over trainers)
+        ft_rows: List[flow.FTRow] = []
+        budget = decision.ft_rows
+        for tr in self.trainers.values():
+            if budget <= 0:
+                break
+            got = tr.next_rows(budget)
+            ft_rows.extend(got)
+            budget -= len(got)
+
+        # prefill admissions
+        pf_reqs: List[flow.PFReq] = []
+        admitted: List[Request] = []
+        for r in decision.admit:
+            slot = self.cachemgr.alloc()
+            if slot is None:
+                break
+            r.dec_slot = slot
+            r.state = State.PREFILL
+            self.waiting.remove(r)
+            admitted.append(r)
+            pf_reqs.append(flow.PFReq(
+                tokens=r.prompt, rid=r.rid,
+                slot=self.model.store.slot_of(r.adapter) if r.adapter else -1,
+                aux_embed=r.aux_embed))
+
+        # decode bucket (static: full table when any request is active)
+        use_dec = bool(self.active)
+        if use_dec:
+            dec_tokens = np.zeros((e.capacity,), np.int64)
+            dec_pos = np.zeros((e.capacity,), np.int64)
+            dec_slots = np.full((e.capacity,), -1, np.int64)
+            for slot, r in self.active.items():
+                dec_tokens[slot] = self._last_tokens[slot]
+                dec_pos[slot] = self.cachemgr.lens[slot]
+                dec_slots[slot] = (self.model.store.slot_of(r.adapter)
+                                   if r.adapter else -1)
+        else:
+            dec_tokens = dec_pos = dec_slots = np.zeros((0,), np.int64)
+
+        if not ft_rows and not pf_reqs and not use_dec:
+            # idle: jump to next arrival if replaying a trace
+            if self.future:
+                self.clock.advance_to(self.future[0].arrival)
+                return True
+            return False
+
+        batch = flow.assemble(ft_rows, pf_reqs, dec_tokens, dec_pos,
+                              dec_slots, e.flow)
+        cache = self.cachemgr.step_cache() if (pf_reqs or use_dec) else None
+
+        store = self.model.store
+        if ft_rows:
+            res = self.grad_step(self.model.base, store.bank, store.scale,
+                                 batch, cache)
+            out, grads = res.out, res.grads
+        else:
+            out = self.forward_step(self.model.base, store.bank, store.scale,
+                                    batch, cache)
+            grads = None
+        jax.block_until_ready(out.dec_logits if out.dec_logits is not None
+                              else (out.pf_logits if out.pf_logits is not None
+                                    else out.ft_loss_sum))
+
+        # ---- time accounting ----
+        pf_tok = int(sum(r.prompt_len for r in admitted))
+        ft_tok = int(sum(len(r.tokens) for r in ft_rows))
+        if isinstance(self.clock, VirtualClock):
+            cost = self.clock.step_cost(pf_tok, len(self.active), ft_tok)
+            self.clock.charge(cost)
+            self.metrics.busy_time += cost
+        now = self.clock.now()
+
+        # ---- scatter results back ----
+        if out.cache is not None:
+            self.cachemgr.update(out.cache)
+        if admitted:
+            pf_logits = np.asarray(out.pf_logits)
+            assignments, lengths = [], []
+            for i, r in enumerate(admitted):
+                tok = int(pf_logits[i].argmax())
+                r.output.append(tok)
+                r.t_first_token = now
+                r.token_times.append(now)
+                r.state = State.DECODE
+                self._last_tokens[r.dec_slot] = tok
+                self.active[r.dec_slot] = r
+                assignments.append((i, r.dec_slot))
+                lengths.append(r.prompt_len)
+            self.cachemgr.commit_prefill(assignments, lengths)
+            self.metrics.prefill_tokens += pf_tok
+            for r in admitted:
+                self._maybe_finish(r, now)
+        if use_dec:
+            dec_logits = np.asarray(out.dec_logits)
+            for slot, r in list(self.active.items()):
+                if r.state is not State.DECODE or r.t_first_token == now:
+                    continue                      # just prefilled this tick
+                tok = int(dec_logits[slot].argmax())
+                r.output.append(tok)
+                r.token_times.append(now)
+                self.cachemgr.lens[slot] += 1
+                self._last_tokens[slot] = tok
+                self.metrics.decode_tokens += 1
+                self._maybe_finish(r, now)
+
+        if ft_rows:
+            losses = np.asarray(out.ft_loss_sum)
+            counts = np.asarray(out.ft_tok_count)
+            per_row = losses / np.maximum(counts, 1.0)
+            self.grad_accum = tree_add(self.grad_accum, grads)
+            by_trainer: Dict[str, List] = {}
+            for i, row in enumerate(ft_rows):
+                by_trainer.setdefault(row.trainer, []).append(
+                    (row, float(per_row[i]), float(counts[i])))
+            for name, items in by_trainer.items():
+                tr = self.trainers[name]
+                rows = [it[0] for it in items]
+                ls = [it[1] for it in items]
+                cs = [it[2] for it in items]
+                if tr.record(rows, ls, cs):
+                    self._apply_trainer(tr)
+            self.metrics.finetune_tokens += int(
+                sum(c for r, l, c in
+                    [(it[0], it[1], it[2]) for its in by_trainer.values()
+                     for it in its] if not r.is_eval))
+            self.metrics.eval_tokens += int(
+                sum(c for its in by_trainer.values()
+                    for (r, l, c) in its if r.is_eval))
+
+        self.metrics.steps += 1
+        self.metrics.elapsed = self.clock.now()
+        return True
+
+    def _apply_trainer(self, tr: MixedLoraTrainer):
+        store = self.model.store
+        mask = store.slot_mask([tr.name])
+        new_bank, self.opt_state = self.apply_step(self.grad_accum,
+                                                   self.opt_state,
+                                                   store.bank, mask)
+        store.set_bank(new_bank)
+        inv = 1.0 - mask
+        self.grad_accum = tree_mask_slots(self.grad_accum, inv)
+
+    def _maybe_finish(self, r: Request, now: float):
+        done_len = len(r.output) >= r.max_new_tokens
+        eos = r.eos_token >= 0 and r.output and r.output[-1] == r.eos_token
+        ctx_full = self.cachemgr.lens[r.dec_slot] + 1 >= self.ecfg.s_max
+        if done_len or eos or ctx_full:
+            r.state = State.DONE
+            r.t_finish = now
+            self.active.pop(r.dec_slot, None)
+            self.cachemgr.free(r.dec_slot)
+            self.finished.append(r)
+
+    # ------------------------------------------------------------------
+    def run(self, max_ticks: int = 100000, until_drained: bool = True):
+        """Run until all inference requests finish and trainers complete."""
+        for _ in range(max_ticks):
+            busy = self.tick()
+            drained = (not self.waiting and not self.active and not self.future
+                       and not self.trainers_pending())
+            if until_drained and drained:
+                break
+            if not busy and not until_drained:
+                break
+        for tr in self.trainers.values():
+            if tr.force_apply_pending():
+                self._apply_trainer(tr)
+        self.metrics.elapsed = self.clock.now()
+        return self.metrics
+
+    @property
+    def all_requests(self) -> List[Request]:
+        return self.finished + list(self.active.values()) + self.waiting \
+            + self.future

@@ -1,0 +1,77 @@
+"""Engine-side cache management.
+
+Layout contract with the model (``repro.models.model``): the cache pytree has
+``capacity + pf_capacity`` rows; rows ``[0, capacity)`` are the persistent
+decode table, rows ``[capacity, capacity + Bp)`` receive each step's prefill
+writes.  After a step, ``commit_prefill`` copies freshly-prefilled rows into
+their assigned decode-table slots (one fused jit'd gather/scatter).
+
+This is the static-shape TPU replacement for GPU paged attention: slots are
+fixed-size rows, admission is slot allocation, eviction is slot release.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.configs import ModelConfig
+from repro.models.model import init_cache
+
+
+@jax.jit
+def _commit(tree, src_rows: jax.Array, dst_rows: jax.Array):
+    def mv(x):
+        return x.at[dst_rows].set(x[src_rows])
+    return jax.tree_util.tree_map(mv, tree)
+
+
+@jax.jit
+def _zero_rows(tree, rows: jax.Array):
+    def z(x):
+        return x.at[rows].set(0.0)
+    return jax.tree_util.tree_map(z, tree)
+
+
+class CacheManager:
+    def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
+                 s_max: int, dtype=None):
+        self.cfg = cfg
+        self.capacity = capacity          # decode-table rows
+        self.pf_capacity = pf_capacity    # scratch rows for prefill buckets
+        self.s_max = s_max
+        self.cache = init_cache(cfg, capacity + pf_capacity, s_max, dtype)
+        self._free: List[int] = list(range(capacity))
+        self.lens = np.zeros((capacity,), np.int64)   # absolute positions
+
+    # -- slot lifecycle ------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        return self._free.pop(0) if self._free else None
+
+    def free(self, slot: int):
+        self.lens[slot] = 0
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    # -- step plumbing ---------------------------------------------------------
+    def step_cache(self):
+        return self.cache
+
+    def update(self, new_cache):
+        self.cache = new_cache
+
+    def commit_prefill(self, assignments: List[Tuple[int, int]],
+                       lengths: List[int]):
+        """assignments: (pf_row_index_within_bucket, decode_slot)."""
+        if not assignments:
+            return
+        src = jnp.asarray([self.capacity + i for i, _ in assignments])
+        dst = jnp.asarray([s for _, s in assignments])
+        self.cache = _commit(self.cache, src, dst)
+        for (_, slot), ln in zip(assignments, lengths):
+            self.lens[slot] = ln

@@ -1,0 +1,52 @@
+"""Inference request lifecycle."""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import List, Optional
+
+import numpy as np
+
+
+class State(enum.Enum):
+    WAITING = "waiting"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+    FAILED = "failed"       # dropped (e.g. SLO-expired before admission)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [L] int32
+    adapter: str                       # adapter name ("" = base model)
+    max_new_tokens: int = 64
+    arrival: float = 0.0               # submit time (clock units)
+    eos_token: int = -1                # -1 = never stop early
+    aux_embed: Optional[np.ndarray] = None
+
+    state: State = State.WAITING
+    output: List[int] = dataclasses.field(default_factory=list)
+    t_first_token: Optional[float] = None
+    t_finish: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+    dec_slot: int = -1                 # decode-table row while active
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+    @property
+    def done(self) -> bool:
+        return self.state in (State.DONE, State.FAILED)
+
+    def waiting_time(self) -> Optional[float]:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival
+
+    def decode_latencies(self) -> np.ndarray:
+        if len(self.token_times) < 2:
+            return np.zeros((0,))
+        return np.diff(np.asarray(self.token_times))

@@ -1,0 +1,62 @@
+"""Continuous-batching scheduler with mutable capacity allocation.
+
+Each tick the scheduler decides (a) how many waiting requests to admit into
+the prefill bucket and (b) how many fine-tuning microbatch rows to co-run.
+The fine-tuning budget shrinks as inference load rises (decode occupancy +
+queue pressure) and recovers when load drops — the paper's Figure-5
+behaviour ("the fine-tuning task makes concessions for the inference task").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    max_prefill_per_tick: int = 4
+    max_prefill_tokens: int = 4096     # token budget per prefill bucket
+    ft_rows_max: int = 4               # fine-tuning rows when idle
+    ft_token_budget: int = 2048        # cap ft tokens per tick
+    concede_at_queue: int = 1          # waiting reqs at which ft fully yields
+
+
+@dataclasses.dataclass
+class Decision:
+    admit: List[Request]
+    ft_rows: int
+    load: float
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig, capacity: int):
+        self.cfg, self.capacity = cfg, capacity
+
+    def decide(self, waiting: List[Request], n_active: int,
+               n_free_slots: int, pf_capacity: int,
+               trainers_pending: bool) -> Decision:
+        c = self.cfg
+        admit: List[Request] = []
+        budget = c.max_prefill_tokens
+        for r in waiting:
+            if len(admit) >= min(c.max_prefill_per_tick, n_free_slots,
+                                 pf_capacity):
+                break
+            if r.prompt_len > budget and admit:
+                break
+            admit.append(r)
+            budget -= r.prompt_len
+
+        occupancy = n_active / max(self.capacity, 1)
+        queue_pressure = min(1.0, (len(waiting) - len(admit))
+                             / max(c.concede_at_queue, 1))
+        load = max(occupancy, queue_pressure)
+        if not trainers_pending:
+            ft_rows = 0
+        else:
+            ft_rows = int(round(c.ft_rows_max * (1.0 - load)))
+            if len(waiting) - len(admit) >= c.concede_at_queue:
+                ft_rows = 0
+        return Decision(admit=admit, ft_rows=ft_rows, load=load)

@@ -1,0 +1,61 @@
+"""SLO definitions and attainment accounting (paper Appendix C/D: max waiting
+time 6 s, mean decode latency 200 ms, max decode latency 1000 ms)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOConfig:
+    max_waiting_s: float = 6.0
+    mean_decode_ms: float = 200.0
+    max_decode_ms: float = 1000.0
+
+
+def request_meets_slo(r: Request, slo: SLOConfig) -> bool:
+    if r.state is not State.DONE:
+        return False
+    w = r.waiting_time()
+    if w is None or w > slo.max_waiting_s:
+        return False
+    lats = r.decode_latencies()
+    if lats.size:
+        if lats.mean() * 1e3 > slo.mean_decode_ms:
+            return False
+        if lats.max() * 1e3 > slo.max_decode_ms:
+            return False
+    return True
+
+
+def slo_attainment(requests: Iterable[Request], slo: SLOConfig) -> float:
+    rs = list(requests)
+    if not rs:
+        return 1.0
+    return sum(request_meets_slo(r, slo) for r in rs) / len(rs)
+
+
+@dataclasses.dataclass
+class Metrics:
+    """Aggregate throughput metrics (paper Appendix C)."""
+    decode_tokens: int = 0
+    prefill_tokens: int = 0
+    finetune_tokens: int = 0
+    eval_tokens: int = 0
+    steps: int = 0
+    elapsed: float = 0.0
+    busy_time: float = 0.0       # virtual-clock time spent executing steps
+
+    def rates(self):
+        e = max(self.elapsed, 1e-9)
+        return {
+            "DTPS": self.decode_tokens / e,
+            "PTPS": self.prefill_tokens / e,
+            "FTPS": self.finetune_tokens / e,
+            "ETPS": self.eval_tokens / e,
+            "steps_per_s": self.steps / e,
+        }

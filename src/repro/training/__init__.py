@@ -1,0 +1,1 @@
+"""Training substrate: optimizer and interruptible multi-LoRA trainers."""

@@ -1,0 +1,106 @@
+"""AdamW in pure JAX with per-adapter-slot masking.
+
+Every LoRA bank leaf has an adapter axis at ``-3`` (``[..., n_slots, d_in, r]``
+/ ``[..., n_slots, r, d_out]``).  ``slot_mask`` gates both the moment update
+and the parameter step so concurrent trainers touch only their own slot —
+the functional form of the paper's ``MixedLoRAModelForTrainer`` parameter
+masking.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 2e-5                 # the paper's fine-tuning LR
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0           # global-norm clip (0 = off)
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    t: jax.Array                     # [n_slots] per-slot step counters
+
+
+def adamw_init(params, n_slots: int) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(m=jax.tree_util.tree_map(z, params),
+                      v=jax.tree_util.tree_map(z, params),
+                      t=jnp.zeros((n_slots,), jnp.int32))
+
+
+def _mask_like(leaf: jax.Array, slot_mask: jax.Array) -> jax.Array:
+    """Broadcast [n_slots] over the adapter axis at -3."""
+    shape = [1] * leaf.ndim
+    shape[-3] = slot_mask.shape[0]
+    return slot_mask.reshape(shape).astype(jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_apply(cfg: AdamWConfig, grads, state: AdamWState, params,
+                slot_mask: jax.Array):
+    """Masked AdamW step.  Only slots with mask=1 are updated (their moments,
+    their counters, their params); everything else passes through untouched.
+    Returns (new_params, new_state)."""
+    if cfg.grad_clip > 0:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gn, 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    t_new = state.t + slot_mask.astype(jnp.int32)
+
+    def upd(p, g, m, v):
+        msk = _mask_like(p, slot_mask)
+        g32 = g.astype(jnp.float32)
+        m_new = jnp.where(msk > 0, cfg.b1 * m + (1 - cfg.b1) * g32, m)
+        v_new = jnp.where(msk > 0, cfg.b2 * v + (1 - cfg.b2) * g32 * g32, v)
+        # per-slot bias correction
+        shape = [1] * p.ndim
+        shape[-3] = t_new.shape[0]
+        t_b = jnp.maximum(t_new, 1).reshape(shape).astype(jnp.float32)
+        mhat = m_new / (1 - cfg.b1 ** t_b)
+        vhat = v_new / (1 - cfg.b2 ** t_b)
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - cfg.lr * step * msk
+        return p_new.astype(p.dtype), m_new, v_new
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_p, AdamWState(m=new_m, v=new_v, t=t_new)
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_mask_slots(tree, slot_mask: jax.Array):
+    """Zero every slot not in the mask (used to retire one trainer's
+    accumulated gradients after its apply)."""
+    return jax.tree_util.tree_map(
+        lambda x: x * _mask_like(x, slot_mask).astype(x.dtype), tree)

@@ -1,0 +1,110 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _mk(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 6e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,d,r,n,o,bt,bo", [
+    (16, 8, 2, 2, 8, 8, 8),
+    (32, 24, 4, 3, 16, 8, 8),
+    (64, 33, 8, 5, 24, 16, 8),
+    (128, 64, 16, 4, 64, 32, 16),
+])
+def test_smlm_sweep(dtype, T, d, r, n, o, bt, bo):
+    ks = jax.random.split(jax.random.PRNGKey(T + d), 4)
+    x = _mk(ks[0], (T, d), dtype)
+    a = _mk(ks[1], (n, d, r), dtype)
+    b = _mk(ks[2], (n, r, o), dtype)
+    # tile-uniform ids incl. out-of-range (-1 = base only)
+    tiles = T // bt
+    tile_ids = jax.random.randint(ks[3], (tiles,), -1, n)
+    ids = jnp.repeat(tile_ids, bt)
+    y = ops.smlm(x, a, b, ids, block_t=bt, block_o=bo, interpret=True)
+    scale = ((ids >= 0) & (ids < n)).astype(jnp.float32)
+    yr = ref.bgmv_ref(x, a, b, ids, scale)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=TOLS[dtype] * max(1.0, float(jnp.abs(yr).max())),
+                               rtol=TOLS[dtype])
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,d,r,n,o,bo", [
+    (8, 16, 4, 3, 8, 8),
+    (33, 24, 8, 4, 16, 16),
+    (64, 40, 2, 6, 32, 8),
+])
+def test_bgmv_sweep(dtype, T, d, r, n, o, bo):
+    ks = jax.random.split(jax.random.PRNGKey(T * d), 4)
+    x = _mk(ks[0], (T, d), dtype)
+    a = _mk(ks[1], (n, d, r), dtype)
+    b = _mk(ks[2], (n, r, o), dtype)
+    ids = jax.random.randint(ks[3], (T,), -1, n)
+    y = ops.bgmv(x, a, b, ids, block_o=bo, interpret=True)
+    scale = ((ids >= 0) & (ids < n)).astype(jnp.float32)
+    yr = ref.bgmv_ref(x, a, b, ids, scale)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=TOLS[dtype] * max(1.0, float(jnp.abs(yr).max())),
+                               rtol=TOLS[dtype])
+
+
+def test_smlm_dynamic_scale():
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    T, d, r, n, o, bt = 32, 16, 4, 3, 16, 8
+    x = _mk(ks[0], (T, d), jnp.float32)
+    a = _mk(ks[1], (n, d, r), jnp.float32)
+    b = _mk(ks[2], (n, r, o), jnp.float32)
+    ids = jnp.repeat(jnp.array([0, 1, 2, 0]), bt)
+    scale_t = jnp.repeat(jnp.array([0.5, 2.0, 0.0, 1.0]), bt)
+    y = ops.smlm(x, a, b, ids, scale_t, block_t=bt, block_o=8, interpret=True)
+    yr = ref.bgmv_ref(x, a, b, ids, scale_t)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,h,g,hd,bq,bk", [
+    (1, 8, 8, 2, 2, 8, 8, 8),
+    (2, 20, 20, 4, 2, 16, 8, 8),
+    (2, 17, 33, 8, 8, 32, 8, 16),   # MHA, ragged sizes -> padding paths
+    (3, 40, 40, 8, 2, 16, 16, 8),
+])
+def test_flash_attention_sweep(dtype, B, S, T, h, g, hd, bq, bk):
+    ks = jax.random.split(jax.random.PRNGKey(B * S + T), 4)
+    q = _mk(ks[0], (B, S, h, hd), dtype)
+    k = _mk(ks[1], (B, T, g, hd), dtype)
+    v = _mk(ks[2], (B, T, g, hd), dtype)
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    y = ops.flash_attention(q, k, v, lens, block_q=bq, block_k=bk,
+                            interpret=True)
+    yr = ref.flash_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               atol=TOLS[dtype] * 2, rtol=TOLS[dtype] * 2)
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    B, S, T, h, g, hd = 2, 12, 16, 4, 4, 16
+    q = _mk(ks[0], (B, S, h, hd), jnp.float32)
+    k = _mk(ks[1], (B, T, g, hd), jnp.float32)
+    v = _mk(ks[2], (B, T, g, hd), jnp.float32)
+    lens = jnp.array([16, 9])
+    y = ops.flash_attention(q, k, v, lens, block_q=8, block_k=8,
+                            causal=False, interpret=True)
+    yr = ref.flash_attention_ref(q, k, v, lens, causal=False)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=3e-5,
+                               atol=3e-5)

@@ -1,0 +1,95 @@
+"""Layer math: chunked attention == full attention, windows, MLA forms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _attn_inputs(seed, B, S, T, h, g, hd, q_off=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (B, S, h, hd))
+    k = jax.random.normal(ks[1], (B, T, g, hd))
+    v = jax.random.normal(ks[2], (B, T, g, hd))
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S)) + q_off
+    k_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    lens = jax.random.randint(ks[3], (B,), 1, T + 1)
+    k_valid = k_pos < lens[:, None]
+    return q, k, v, q_pos, k_pos, k_valid
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("window", [0, 8])
+def test_chunked_vs_full(chunk, window):
+    q, k, v, qp, kp, kv = _attn_inputs(1, 2, 37, 53, 8, 2, 16, q_off=16)
+    full = L.attention(q, k, v, q_pos=qp, k_pos=kp, k_valid=kv,
+                       causal=True, window=window)
+    ck = L.attention(q, k, v, q_pos=qp, k_pos=kp, k_valid=kv,
+                     causal=True, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(ck),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_chunked_grad_matches_full():
+    q, k, v, qp, kp, kv = _attn_inputs(2, 1, 24, 24, 4, 2, 8)
+    f_full = lambda q_: L.attention(q_, k, v, q_pos=qp, k_pos=kp,
+                                    k_valid=kv, causal=True).sum()
+    f_ck = lambda q_: L.attention(q_, k, v, q_pos=qp, k_pos=kp, k_valid=kv,
+                                  causal=True, chunk=8).sum()
+    np.testing.assert_allclose(np.asarray(jax.grad(f_full)(q)),
+                               np.asarray(jax.grad(f_ck)(q)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mla_chunked_vs_absorbed():
+    ks = jax.random.split(jax.random.PRNGKey(3), 9)
+    B, S, T, h, c, dn, dr, dv = 2, 19, 29, 4, 24, 16, 8, 16
+    qn = jax.random.normal(ks[0], (B, S, h, dn))
+    qp = jax.random.normal(ks[1], (B, S, h, dr))
+    ckv = jax.random.normal(ks[2], (B, T, c))
+    kpe = jax.random.normal(ks[3], (B, T, dr))
+    wuk = jax.random.normal(ks[4], (c, h, dn)) * 0.2
+    wuv = jax.random.normal(ks[5], (c, h, dv)) * 0.2
+    q_pos = jnp.broadcast_to(jnp.arange(S), (B, S)) + 10
+    k_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    k_valid = k_pos < jnp.array([[29], [20]])
+    a = L.mla_attention(qn, qp, ckv, kpe, wuk, wuv, q_pos=q_pos, k_pos=k_pos,
+                        k_valid=k_valid, causal=True)
+    b = L.mla_attention(qn, qp, ckv, kpe, wuk, wuv, q_pos=q_pos, k_pos=k_pos,
+                        k_valid=k_valid, causal=True, chunk=8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    q = jax.random.normal(ks[0], (1, 4, 2, 16))
+    k = jax.random.normal(ks[1], (1, 4, 2, 16))
+    def scores(off):
+        pos = jnp.arange(4)[None, :] + off
+        qr, kr = L.rope(q, pos, 1e4), L.rope(k, pos, 1e4)
+        return jnp.einsum("bshd,bthd->bhst", qr, kr)
+    np.testing.assert_allclose(np.asarray(scores(0)), np.asarray(scores(100)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rms_norm():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 16)) * 5
+    y = L.rms_norm(x, jnp.ones((16,)))
+    rms = np.sqrt((np.asarray(y) ** 2).mean(-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_window_masks_old_tokens():
+    """With window W, attention output must be independent of keys older
+    than W positions."""
+    q, k, v, qp, kp, kv = _attn_inputs(5, 1, 1, 32, 4, 4, 8)
+    qp = jnp.full((1, 1), 31)
+    kv = jnp.ones((1, 32), bool)
+    out1 = L.attention(q, k, v, q_pos=qp, k_pos=kp, k_valid=kv, window=8)
+    k2 = k.at[:, :20].set(99.0)   # mutate tokens far outside the window
+    v2 = v.at[:, :20].set(99.0)
+    out2 = L.attention(q, k2, v2, q_pos=qp, k_pos=kp, k_valid=kv, window=8)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))

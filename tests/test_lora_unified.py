@@ -1,0 +1,156 @@
+"""LoRA core + unified-flow semantics (the paper's Section 3.3 invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core.lora import (LoRAConfig, dense, lora_apply_ref,
+                             merge_adapter)
+from repro.core.virtualization import AdapterStore
+from repro.models.model import init_cache, unified_forward
+from repro.models.schema import init_params
+from repro.models.stream import DECBatch, FTBatch, PFBatch, UnifiedBatch
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), T=st.integers(1, 40))
+def test_lora_ref_matches_per_token_loop(seed, T):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    d, r, n, o = 8, 2, 3, 6
+    x = jax.random.normal(ks[0], (T, d))
+    a = jax.random.normal(ks[1], (n, d, r))
+    b = jax.random.normal(ks[2], (n, r, o))
+    ids = jax.random.randint(ks[3], (T,), -2, n + 1)   # incl invalid both ways
+    y = lora_apply_ref(x, a, b, ids)
+    for t in range(T):
+        i = int(ids[t])
+        exp = (x[t] @ a[i] @ b[i]) if 0 <= i < n else jnp.zeros((o,))
+        np.testing.assert_allclose(np.asarray(y[t]), np.asarray(exp),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_single_adapter_equals_merged_weights():
+    """Multi-LoRA path with one adapter == statically merged base weight
+    (the static_merge baseline equivalence)."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    T, d, o, r, n = 12, 16, 8, 4, 3
+    x = jax.random.normal(ks[0], (T, d))
+    w = jax.random.normal(ks[1], (d, o)) * 0.2
+    a = jax.random.normal(ks[2], (n, d, r)) * 0.2
+    b = jax.random.normal(ks[3], (n, r, o)) * 0.2
+    ids = jnp.full((T,), 1)
+    y_multi = dense(x, w, None, {"a": a, "b": b}, ids)
+    w_merged = merge_adapter(w, a, b, 1)
+    np.testing.assert_allclose(np.asarray(y_multi), np.asarray(x @ w_merged),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_adapter_isolation_in_unified_batch():
+    """Changing adapter k's weights must not change outputs of rows served by
+    adapter j or by the base model (the Virtualized-Module isolation)."""
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("j", jax.random.PRNGKey(2))
+    store.load_random("k", jax.random.PRNGKey(3))
+    toks = jax.random.randint(jax.random.PRNGKey(4), (3, 8), 0, cfg.vocab)
+    pf = PFBatch(tokens=toks, length=jnp.full((3,), 8),
+                 adapter=jnp.array([store.slot_of("j"), store.slot_of("k"),
+                                    -1]))
+    out1 = unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                           cache=init_cache(cfg, 3, 16), loras=store.bank,
+                           lora_scale=store.scale)
+    # perturb adapter k
+    store.unload("k")
+    store.load_random("k", jax.random.PRNGKey(99))
+    out2 = unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                           cache=init_cache(cfg, 3, 16), loras=store.bank,
+                           lora_scale=store.scale)
+    np.testing.assert_allclose(np.asarray(out1.pf_logits[0]),
+                               np.asarray(out2.pf_logits[0]), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out1.pf_logits[2]),
+                               np.asarray(out2.pf_logits[2]), rtol=1e-5,
+                               atol=1e-5)
+    assert float(jnp.abs(out1.pf_logits[1] - out2.pf_logits[1]).max()) > 1e-4
+
+
+def test_unified_batch_equals_separate_passes():
+    """One unified step == running ft, pf and dec buckets in separate steps
+    (Algorithm 1's joint projections change nothing numerically)."""
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("x", jax.random.PRNGKey(2))
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    ft = FTBatch(tokens=jax.random.randint(ks[0], (2, 12), 0, cfg.vocab),
+                 mask=jnp.ones((2, 12), bool),
+                 labels=jax.random.randint(ks[1], (2, 12), 0, cfg.vocab),
+                 adapter=jnp.array([0, -1]), weight=jnp.ones((2,)))
+    pf = PFBatch(tokens=jax.random.randint(ks[2], (2, 8), 0, cfg.vocab),
+                 length=jnp.array([8, 6]), adapter=jnp.array([0, -1]))
+    # seed a decode row by prefilling first
+    cache0 = init_cache(cfg, 1, 32)
+    seed_pf = PFBatch(tokens=jax.random.randint(ks[3], (1, 8), 0, cfg.vocab),
+                      length=jnp.array([8]), adapter=jnp.array([0]))
+    seeded = unified_forward(cfg, params, UnifiedBatch(pf=seed_pf),
+                             cache=cache0, loras=store.bank,
+                             lora_scale=store.scale)
+    dec = DECBatch(tokens=jnp.array([5]), pos=jnp.array([8]),
+                   adapter=jnp.array([0]))
+
+    # separate passes
+    sep_ft = unified_forward(cfg, params, UnifiedBatch(ft=ft),
+                             loras=store.bank, lora_scale=store.scale)
+    cache_pf = init_cache(cfg, 2, 32)
+    sep_pf = unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                             cache=cache_pf, loras=store.bank,
+                             lora_scale=store.scale)
+    sep_dec = unified_forward(cfg, params, UnifiedBatch(dec=dec),
+                              cache=seeded.cache, loras=store.bank,
+                              lora_scale=store.scale)
+
+    # one unified pass (dec rows first, then pf rows in the cache)
+    cache_u = jax.tree_util.tree_map(
+        lambda a, b: jnp.concatenate([a, b], axis=1),
+        seeded.cache, init_cache(cfg, 2, 32))
+    uni = unified_forward(cfg, params, UnifiedBatch(ft=ft, pf=pf, dec=dec),
+                          cache=cache_u, loras=store.bank,
+                          lora_scale=store.scale)
+    np.testing.assert_allclose(np.asarray(uni.ft_loss_sum),
+                               np.asarray(sep_ft.ft_loss_sum),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(uni.pf_logits),
+                               np.asarray(sep_pf.pf_logits),
+                               rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(uni.dec_logits),
+                               np.asarray(sep_dec.dec_logits),
+                               rtol=5e-4, atol=5e-4)
+
+
+def test_grad_only_on_ft_rows():
+    """Inference rows contribute nothing to the LoRA gradient: grads with and
+    without pf/dec buckets are identical (XLA prunes inference backward)."""
+    from repro.core.unified import make_grad_step
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("x", jax.random.PRNGKey(2))
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    ft = FTBatch(tokens=jax.random.randint(ks[0], (2, 8), 0, cfg.vocab),
+                 mask=jnp.ones((2, 8), bool),
+                 labels=jax.random.randint(ks[1], (2, 8), 0, cfg.vocab),
+                 adapter=jnp.array([0, 0]), weight=jnp.ones((2,)))
+    pf = PFBatch(tokens=jnp.ones((1, 8), jnp.int32), length=jnp.array([8]),
+                 adapter=jnp.array([0]))
+    step = make_grad_step(cfg)
+    g1 = step(params, store.bank, store.scale, UnifiedBatch(ft=ft), None)
+    g2 = step(params, store.bank, store.scale, UnifiedBatch(ft=ft, pf=pf),
+              init_cache(cfg, 1, 16))
+    d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                               g1.grads, g2.grads)
+    assert max(jax.tree_util.tree_leaves(d)) < 5e-4

@@ -1,0 +1,217 @@
+"""Runtime substrates: engine, scheduler, trainers, optimizer, virtualization,
+checkpointing, flow planner (with hypothesis properties)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.core import flow
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel, VirtualModel
+from repro.checkpoint import io
+from repro.data import datasets, workload
+from repro.models.schema import init_params
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.serving.slo import SLOConfig, slo_attainment
+from repro.training.optimizer import (AdamWConfig, adamw_apply, adamw_init)
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+# ---------------------------------------------------------------- flow planner
+@settings(max_examples=30, deadline=None)
+@given(lens=st.lists(st.integers(1, 60), min_size=1, max_size=9),
+       block_t=st.sampled_from([4, 8, 16]), seed=st.integers(0, 99))
+def test_flow_planner_alignment_property(lens, block_t, seed):
+    rng = np.random.default_rng(seed)
+    fcfg = flow.FlowConfig(block_t=block_t)
+    rows = [flow.FTRow(tokens=rng.integers(0, 50, L),
+                       labels=rng.integers(0, 50, L),
+                       slot=int(rng.integers(-1, 4)))
+            for L in lens]
+    pfs = [flow.PFReq(tokens=rng.integers(0, 50, L),
+                      slot=int(rng.integers(-1, 4))) for L in lens[:3]]
+    batch = flow.assemble(rows, pfs, np.array([1, 2]), np.array([0, 5]),
+                          np.array([0, -1]), fcfg)
+    assert flow.smlm_tile_aligned(batch, block_t)
+    # padding rows are inert: weight 0, adapter -1
+    Bf = batch.ft.tokens.shape[0]
+    for i in range(len(rows), Bf):
+        assert float(batch.ft.weight[i]) == 0.0
+        assert int(batch.ft.adapter[i]) == -1
+    # payload recoverable
+    for i, r in enumerate(rows):
+        L = len(r.tokens)
+        np.testing.assert_array_equal(np.asarray(batch.ft.tokens[i, :L]),
+                                      r.tokens)
+        assert bool(batch.ft.mask[i, :L].all())
+        assert not bool(batch.ft.mask[i, L:].any())
+
+
+# ------------------------------------------------------------------ optimizer
+def test_masked_adamw_isolation_and_correctness():
+    key = jax.random.PRNGKey(0)
+    params = {"w": {"a": jax.random.normal(key, (2, 3, 8, 4))}}  # slot axis -3
+    grads = jax.tree_util.tree_map(jnp.ones_like, params)
+    state = adamw_init(params, 3)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=0.0)
+    mask = jnp.array([1.0, 0.0, 1.0])
+    new_p, new_s = adamw_apply(cfg, grads, state, params, mask)
+    dp = np.asarray(new_p["w"]["a"] - params["w"]["a"])
+    assert np.abs(dp[:, 1]).max() == 0.0          # masked slot frozen
+    # unmasked slots take ~lr-sized first Adam step
+    np.testing.assert_allclose(np.abs(dp[:, 0]), 0.1, rtol=1e-3)
+    assert list(np.asarray(new_s.t)) == [1, 0, 1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_adamw_sequential_masks_commute(seed):
+    """Updating slot A then slot B == updating both with separate masks, when
+    gradients are identical (per-slot moments are independent)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    params = {"a": jax.random.normal(ks[0], (4, 6, 2))}
+    grads = {"a": jax.random.normal(ks[1], (4, 6, 2))}
+    cfg = AdamWConfig(lr=0.01, grad_clip=0.0)
+    s0 = adamw_init(params, 4)
+    pA, sA = adamw_apply(cfg, grads, s0, params, jnp.array([1., 0, 0, 0]))
+    pAB, _ = adamw_apply(cfg, grads, sA, pA, jnp.array([0., 1, 0, 0]))
+    pBoth, _ = adamw_apply(cfg, grads, s0, params, jnp.array([1., 1, 0, 0]))
+    np.testing.assert_allclose(np.asarray(pAB["a"]), np.asarray(pBoth["a"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# -------------------------------------------------------------- virtualization
+def test_store_lifecycle_and_base_immutability():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    leaf_before = np.asarray(params["embed"]).copy()
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    for i in range(LCFG.n_slots):
+        store.load_random(f"a{i}", jax.random.PRNGKey(i))
+    with pytest.raises(RuntimeError):
+        store.load_random("overflow", jax.random.PRNGKey(99))
+    store.unload("a1")
+    slot = store.load_random("fresh", jax.random.PRNGKey(50))
+    assert slot == 1                                 # freed slot reused
+    np.testing.assert_array_equal(np.asarray(params["embed"]), leaf_before)
+
+
+def test_void_unvoid_roundtrip_and_blob():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("m", jax.random.PRNGKey(2), scale=1.5)
+    vm = VirtualModel("m", params, store)
+    voided = vm.void()
+    blob = io.serialize_pytree(voided.adapter)
+    voided.adapter = io.deserialize_pytree(blob, voided.adapter)
+    store2 = AdapterStore(cfg, LCFG, jax.random.PRNGKey(3))
+    vm2 = VirtualModel.unvoid(voided, params, store2)
+    a1, a2 = store.get_adapter("m"), store2.get_adapter("m")
+    d = jax.tree_util.tree_map(lambda x, y: float(jnp.abs(x - y).max()), a1, a2)
+    assert max(jax.tree_util.tree_leaves(d)) == 0.0
+    assert float(store2.scale[vm2.slot]) == 1.5
+
+
+def test_checkpoint_roundtrip():
+    cfg = get_reduced("phi3-medium-14b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    import tempfile, os
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "ckpt.npz")
+        n = io.save_pytree(path, params)
+        assert n > 0
+        loaded = io.load_pytree(path, params)
+        d = jax.tree_util.tree_map(lambda a, b: float(jnp.abs(a - b).max()),
+                                   params, loaded)
+        assert max(jax.tree_util.tree_leaves(d)) == 0.0
+
+
+# ------------------------------------------------------------------ scheduler
+def test_scheduler_mutable_capacity_concession():
+    sched = Scheduler(SchedulerConfig(ft_rows_max=4, concede_at_queue=2),
+                      capacity=8)
+    idle = sched.decide([], 0, 8, 4, trainers_pending=True)
+    assert idle.ft_rows == 4                         # full budget when idle
+    reqs = [Request(rid=i, prompt=np.zeros(8, np.int32), adapter="")
+            for i in range(12)]
+    busy = sched.decide(reqs, 8, 0, 4, trainers_pending=True)
+    assert busy.ft_rows == 0                         # fine-tuning concedes
+    assert len(busy.admit) == 0                      # no free slots
+    recovered = sched.decide([], 2, 6, 4, trainers_pending=True)
+    assert 0 < recovered.ft_rows <= 4                # and recovers
+
+
+# ---------------------------------------------------------------- engine e2e
+def _mk_engine(cfg, trainers=0, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    store.load_random("serve", jax.random.PRNGKey(seed + 2))
+    eng = UnifiedEngine(MixedLoraModel(cfg, params, store),
+                        EngineConfig(capacity=4, pf_capacity=2, s_max=96,
+                                     virtual_time=True))
+    for i in range(trainers):
+        name = f"tr{i}"
+        store.load_random(name, jax.random.PRNGKey(seed + 10 + i))
+        rows, ev = datasets.split_eval(
+            datasets.alpaca_like(16, vocab=cfg.vocab, seed=i))
+        eng.add_trainer(MixedLoraTrainer(name, store.slot_of(name), rows, ev,
+                                         TrainerConfig(rows_per_micro=2,
+                                                       accum_steps=2,
+                                                       epochs=1)))
+    return eng
+
+
+def test_engine_serves_all_requests_with_slo():
+    cfg = get_reduced("llama3-8b")
+    eng = _mk_engine(cfg)
+    prompts = datasets.sharegpt_prompts(8, vocab=cfg.vocab, len_lo=6,
+                                        len_hi=20)
+    arr = workload.poisson_arrivals(2.0, 8, seed=1)
+    for i, (p, t) in enumerate(zip(prompts, arr)):
+        eng.submit(Request(rid=i, prompt=p, adapter="serve",
+                           max_new_tokens=6, arrival=float(t)))
+    eng.run(max_ticks=10000)
+    assert len(eng.finished) == 8
+    assert all(len(r.output) == 6 for r in eng.finished)
+    assert slo_attainment(eng.finished, SLOConfig()) == 1.0
+
+
+def test_engine_unified_trains_and_serves():
+    cfg = get_reduced("llama3-8b")
+    eng = _mk_engine(cfg, trainers=2)
+    prompts = datasets.sharegpt_prompts(4, vocab=cfg.vocab, len_lo=6,
+                                        len_hi=16)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, adapter="serve",
+                           max_new_tokens=4, arrival=0.3 * i))
+    m = eng.run(max_ticks=20000)
+    assert len(eng.finished) == 4
+    for tr in eng.trainers.values():
+        assert not tr.pending()
+        assert tr.optimizer_steps >= 1
+        assert tr.tokens_trained > 0
+    assert m.finetune_tokens > 0 and m.decode_tokens > 0
+
+
+def test_trainer_interruptibility():
+    """A trainer given zero budget for arbitrarily many ticks resumes exactly
+    where it stopped (cursor/accumulation preserved)."""
+    rows = datasets.alpaca_like(8, vocab=64, seed=0)
+    tr = MixedLoraTrainer("t", 0, rows, [],
+                          TrainerConfig(rows_per_micro=2, accum_steps=2,
+                                        epochs=1, eval_each_epoch=False))
+    got = tr.next_rows(2)
+    assert len(got) == 2 and tr.cursor == 2
+    for _ in range(50):
+        assert tr.next_rows(0) == []                 # interrupted
+    assert tr.cursor == 2
+    tr.record(got, [1.0, 1.0], [10, 10])
+    got2 = tr.next_rows(2)
+    np.testing.assert_array_equal(got2[0].tokens, rows[2][0])

@@ -1,0 +1,90 @@
+"""Sharding-rule logic (pure PartitionSpec reasoning, no big meshes) and
+workload/data generators."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import datasets, workload
+from repro.distributed.sharding import _spec_for
+from repro.launch.shapes import SHAPES, adapt_config, has_attention
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16}
+
+
+@pytest.mark.parametrize("arch,heads_sharded", [
+    ("qwen1.5-110b", True),     # 64 heads % 16 == 0
+    ("phi3-medium-14b", False), # 40 heads % 16 != 0 -> replicate
+    ("deepseek-v2-236b", True), # 128 heads
+])
+def test_head_sharding_requires_divisible_head_count(arch, heads_sharded):
+    cfg = get_config(arch)
+    h_dim = cfg.n_heads * (cfg.mla.qk_nope_dim + cfg.mla.qk_rope_dim
+                           if cfg.mla else cfg.hd)
+    spec = _spec_for(cfg, _FakeMesh(), "fsdp_tp",
+                     (cfg.n_periods, cfg.d_model, h_dim),
+                     ("periods", "embed", "heads"))
+    assert (spec[2] == "model") == heads_sharded
+    assert spec[1] == ("data" if cfg.d_model % 16 == 0 else None)
+
+
+def test_vocab_replicated_when_not_divisible():
+    cfg = get_config("mamba2-1.3b")            # vocab 50280 % 16 != 0
+    spec = _spec_for(cfg, _FakeMesh(), "fsdp_tp",
+                     (cfg.vocab, cfg.d_model), ("vocab", "embed"))
+    assert spec[0] is None
+
+
+def test_no_duplicate_mesh_axes_in_moe_specs():
+    cfg = get_config("deepseek-v2-236b")
+    spec = _spec_for(cfg, _FakeMesh(), "fsdp_tp",
+                     (cfg.n_periods, 160, cfg.d_model, 1536),
+                     ("periods", "experts", "embed", "ffn"))
+    axes = [s for s in spec if s is not None]
+    assert len(axes) == len(set(axes))
+    assert spec[1] == "model"                  # experts win the model axis
+
+
+def test_long_context_adaptation():
+    for arch in ("qwen1.5-110b", "command-r-35b", "llama-3.2-vision-90b"):
+        cfg = adapt_config(get_config(arch), SHAPES["long_500k"])
+        assert cfg.sliding_window == 8192      # sub-quadratic decode variant
+    cfg = adapt_config(get_config("mamba2-1.3b"), SHAPES["long_500k"])
+    assert cfg.sliding_window == 0             # SSM native O(1)
+    assert not has_attention(cfg)
+
+
+# ------------------------------------------------------------ data / workload
+def test_generators_deterministic():
+    a = datasets.alpaca_like(8, seed=3)
+    b = datasets.alpaca_like(8, seed=3)
+    for (t1, l1), (t2, l2) in zip(a, b):
+        np.testing.assert_array_equal(t1, t2)
+    t1 = workload.burstgpt_like("d29_15h", duration=300, seed=1, scale=0.1)
+    t2 = workload.burstgpt_like("d29_15h", duration=300, seed=1, scale=0.1)
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_poisson_rate_approximation():
+    arr = workload.poisson_arrivals(5.0, 2000, seed=0)
+    rate = len(arr) / arr[-1]
+    assert 4.0 < rate < 6.0
+
+
+def test_burstgpt_trace_is_bursty():
+    t = workload.burstgpt_like("d33_1140", duration=1200, seed=0)
+    assert len(t) > 100
+    # peak 2-second-window RPS should exceed 2x the mean rate
+    mean_rps = len(t) / 1200
+    best = 0
+    for w in np.arange(0, 1198, 1.0):
+        best = max(best, ((t >= w) & (t < w + 2)).sum() / 2)
+    assert best > 2 * mean_rps
+
+
+def test_mutable_phases_match_table7():
+    arr = workload.phased_arrivals(workload.MUTABLE_PHASES, seed=0)
+    assert arr == sorted(arr)
+    idxs = {a for _, a in arr}
+    assert idxs == {0, 1, 2, 3}
