@@ -1,0 +1,130 @@
+"""Paged vs dense KV cache — max concurrent residents and decode throughput
+at a fixed simulated HBM budget, mixed-length prompts.
+
+Two measurements:
+
+* ``capacity``: how many of a mixed-length request stream can be resident at
+  once under the same KV-byte budget.  Dense charges every request a full
+  ``s_max`` row; paged charges ``ceil(min(prompt+max_new, s_max)/bs)``
+  blocks (and shared prefixes once).
+* ``engine``: two real engines, same KV-byte budget, same request stream,
+  virtual clock.  Reports peak concurrently-decoding requests and decode
+  throughput.
+
+Emits ``BENCH_paged.json`` next to the CSV lines for the run.py harness.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from benchmarks.common import LCFG, build_model, csv, make_requests
+from repro.models.model import abstract_cache, init_paged_cache
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request
+
+
+def _tree_bytes(tree) -> int:
+    return int(sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _dense_row_bytes(cfg, s_max: int) -> int:
+    return _tree_bytes(abstract_cache(cfg, 1, s_max))
+
+
+def _block_bytes(cfg, block_size: int) -> int:
+    pool = jax.eval_shape(lambda: init_paged_cache(cfg, 1, block_size, 0))
+    return _tree_bytes(pool)
+
+
+def capacity_at_budget(cfg, requests, budget_bytes: int, s_max: int,
+                       block_size: int):
+    """Greedy residency packing (arrival order) under the byte budget."""
+    row_b = _dense_row_bytes(cfg, s_max)
+    blk_b = _block_bytes(cfg, block_size)
+    dense = budget_bytes // row_b                    # every row costs s_max
+    paged = 0
+    spent = 0
+    for r in requests:
+        need = -(-min(r.prompt_len + r.max_new_tokens, s_max) // block_size)
+        if spent + need * blk_b > budget_bytes:
+            break
+        spent += need * blk_b
+        paged += 1
+    return int(dense), int(paged), row_b, blk_b
+
+
+def engine_peak_and_dtps(model, requests, *, paged: bool, capacity: int,
+                         s_max: int, block_size: int, n_blocks: int = 0):
+    eng = UnifiedEngine(model, EngineConfig(
+        capacity=capacity, pf_capacity=4, s_max=s_max, virtual_time=True,
+        paged=paged, block_size=block_size, n_blocks=n_blocks))
+    for r in requests:
+        eng.submit(r)
+    peak = 0
+    for _ in range(200000):
+        busy = eng.tick()
+        peak = max(peak, len(eng.active))
+        if (not eng.waiting and not eng.active and not eng.future
+                and not busy):
+            break
+    m = eng.metrics
+    dtps = m.decode_tokens / max(m.elapsed, 1e-9)
+    return {"peak_resident": peak, "decode_tokens": int(m.decode_tokens),
+            "finished": len([r for r in eng.finished if r.output]),
+            "elapsed_virtual": float(m.elapsed), "DTPS": float(dtps)}
+
+
+def main(n_requests: int = 48, s_max: int = 192, block_size: int = 16,
+         dense_rows: int = 6, max_new: int = 12):
+    model = build_model(n_adapters=2)
+    cfg = model.cfg
+    # mixed-length stream: bursty arrivals so residency, not arrival rate,
+    # is the binding constraint
+    reqs = make_requests(n_requests, rps=50.0, vocab=cfg.vocab, n_adapters=2,
+                         max_new=max_new, seed=7)
+    budget = dense_rows * _dense_row_bytes(cfg, s_max)
+    dense_cap, paged_cap, row_b, blk_b = capacity_at_budget(
+        cfg, reqs, budget, s_max, block_size)
+    csv("paged/capacity_dense", 0.0, f"residents={dense_cap}")
+    csv("paged/capacity_paged", 0.0,
+        f"residents={paged_cap};ratio={paged_cap / max(dense_cap, 1):.2f}")
+
+    n_blocks = 1 + budget // blk_b                   # same bytes as dense
+    res_d = engine_peak_and_dtps(model,
+                                 make_requests(n_requests, 50.0, cfg.vocab, 2,
+                                               max_new=max_new, seed=7),
+                                 paged=False, capacity=dense_rows,
+                                 s_max=s_max, block_size=block_size)
+    res_p = engine_peak_and_dtps(model,
+                                 make_requests(n_requests, 50.0, cfg.vocab, 2,
+                                               max_new=max_new, seed=7),
+                                 paged=True, capacity=4 * dense_rows,
+                                 s_max=s_max, block_size=block_size,
+                                 n_blocks=int(n_blocks))
+    csv("paged/engine_dense", 0.0,
+        f"peak={res_d['peak_resident']};DTPS={res_d['DTPS']:.1f}")
+    csv("paged/engine_paged", 0.0,
+        f"peak={res_p['peak_resident']};DTPS={res_p['DTPS']:.1f}")
+
+    out = {"budget_bytes": int(budget), "s_max": s_max,
+           "block_size": block_size,
+           "dense_row_bytes": int(row_b), "block_bytes": int(blk_b),
+           "capacity": {"dense": dense_cap, "paged": paged_cap,
+                        "ratio": paged_cap / max(dense_cap, 1)},
+           "engine": {"dense": res_d, "paged": res_p,
+                      "peak_ratio": (res_p["peak_resident"]
+                                     / max(res_d["peak_resident"], 1))}}
+    with open("BENCH_paged.json", "w") as f:
+        json.dump(out, f, indent=2)
+    csv("paged/summary", 0.0,
+        f"capacity_ratio={out['capacity']['ratio']:.2f};"
+        f"peak_ratio={out['engine']['peak_ratio']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

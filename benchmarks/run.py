@@ -6,8 +6,8 @@ import time
 import traceback
 
 from benchmarks import (bench_finetune, bench_inference, bench_kernels,
-                        bench_loading, bench_mutable, bench_realworld,
-                        bench_roofline, bench_unified)
+                        bench_loading, bench_mutable, bench_paged,
+                        bench_realworld, bench_roofline, bench_unified)
 
 TABLES = [
     ("table2_loading", bench_loading.main),
@@ -18,6 +18,7 @@ TABLES = [
     ("fig6_realworld", bench_realworld.main),
     ("kernels_micro", bench_kernels.main),
     ("roofline_table", bench_roofline.main),
+    ("paged_cache", bench_paged.main),
 ]
 
 

@@ -48,6 +48,7 @@ class PFReq:
     slot: int
     rid: int = -1                    # request id (engine bookkeeping)
     aux_embed: Optional[np.ndarray] = None
+    block_table: Optional[np.ndarray] = None  # [nbt] int32 (paged layout)
 
 
 def bucket(n: int, buckets: Sequence[int]) -> int:
@@ -104,6 +105,9 @@ def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
     if reqs[0].aux_embed is not None:
         F, D = reqs[0].aux_embed.shape
         aux = np.zeros((Bp, F, D), np.float32)
+    tables = None
+    if reqs[0].block_table is not None:
+        tables = np.zeros((Bp, len(reqs[0].block_table)), np.int32)
     for i, r in enumerate(reqs):
         L = len(r.tokens)
         toks[i, :L] = r.tokens
@@ -111,26 +115,34 @@ def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
         adapter[i] = r.slot
         if aux is not None:
             aux[i] = r.aux_embed
+        if tables is not None:
+            tables[i] = r.block_table
     return PFBatch(tokens=jnp.asarray(toks), length=jnp.asarray(length),
                    adapter=jnp.asarray(adapter),
-                   aux_embed=jnp.asarray(aux) if aux is not None else None)
+                   aux_embed=jnp.asarray(aux) if aux is not None else None,
+                   block_tables=(jnp.asarray(tables) if tables is not None
+                                 else None))
 
 
-def plan_dec(tokens: np.ndarray, pos: np.ndarray,
-             slots: np.ndarray) -> Optional[DECBatch]:
+def plan_dec(tokens: np.ndarray, pos: np.ndarray, slots: np.ndarray,
+             tables: Optional[np.ndarray] = None) -> Optional[DECBatch]:
     if len(tokens) == 0:
         return None
     return DECBatch(tokens=jnp.asarray(tokens, jnp.int32),
                     pos=jnp.asarray(pos, jnp.int32),
-                    adapter=jnp.asarray(slots, jnp.int32))
+                    adapter=jnp.asarray(slots, jnp.int32),
+                    block_tables=(jnp.asarray(tables, jnp.int32)
+                                  if tables is not None else None))
 
 
 def assemble(ft_rows: List[FTRow], pf_reqs: List[PFReq],
              dec_tokens: np.ndarray, dec_pos: np.ndarray,
-             dec_slots: np.ndarray, fcfg: FlowConfig) -> UnifiedBatch:
+             dec_slots: np.ndarray, fcfg: FlowConfig,
+             dec_tables: Optional[np.ndarray] = None) -> UnifiedBatch:
     return UnifiedBatch(ft=plan_ft(ft_rows, fcfg),
                         pf=plan_pf(pf_reqs, fcfg),
-                        dec=plan_dec(dec_tokens, dec_pos, dec_slots))
+                        dec=plan_dec(dec_tokens, dec_pos, dec_slots,
+                                     dec_tables))
 
 
 def token_adapter_ids(batch: UnifiedBatch) -> np.ndarray:

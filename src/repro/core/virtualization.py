@@ -58,7 +58,16 @@ class VoidedModel:
 
 
 class AdapterStore:
-    """Owns the stacked LoRA bank and the name->slot mapping."""
+    """Owns the stacked LoRA bank and the name->slot mapping.
+
+    The bank is also an *evicting pool* (unified paging in spirit with the
+    KV-block pool): when every slot is taken, an idle inference adapter —
+    least-recently used, not pinned, zero active references — can be voided
+    to host memory to make room, and is transparently reloaded on its next
+    ``acquire``.  Training adapters are pinned (their slot doubles as
+    optimizer state identity); adapters serving in-flight requests are
+    protected by ``retain``/``release`` refcounts.
+    """
 
     def __init__(self, cfg: ModelConfig, lcfg: LoRAConfig,
                  key: Optional[jax.Array] = None, dtype=None):
@@ -72,6 +81,14 @@ class AdapterStore:
         self.bank = jax.tree_util.tree_map(jnp.zeros_like, self.bank)
         self.scale = jnp.ones((lcfg.n_slots,), jnp.float32)
         self._slots: Dict[str, int] = {}
+        # eviction-pool bookkeeping
+        self._voided: Dict[str, VoidedModel] = {}    # evicted, host-resident
+        self._pinned: set = set()
+        self._refs: Dict[str, int] = {}
+        self._lru: Dict[str, int] = {}               # name -> last-touch tick
+        self._tick = 0
+        self.evictions = 0
+        self.reloads = 0
 
     # -- slot management ---------------------------------------------------
     def slot_of(self, name: str) -> int:
@@ -81,22 +98,58 @@ class AdapterStore:
     def resident(self) -> List[str]:
         return list(self._slots)
 
-    def _alloc(self) -> int:
+    @property
+    def voided(self) -> List[str]:
+        return list(self._voided)
+
+    def _touch(self, name: str):
+        self._tick += 1
+        self._lru[name] = self._tick
+
+    def _alloc(self, evict: bool = False) -> int:
         used = set(self._slots.values())
         for i in range(self.lcfg.n_slots):
             if i not in used:
                 return i
+        if evict:
+            slot = self._evict_lru()
+            if slot is not None:
+                return slot
+            raise RuntimeError("no free adapter slot and every resident "
+                               "adapter is pinned or in use")
         raise RuntimeError("no free adapter slot; unload one first")
 
-    def load(self, name: str, adapter, scale: float = 1.0) -> int:
+    def _evict_lru(self) -> Optional[int]:
+        """Void the least-recently-used idle adapter to host; returns its
+        freed slot (or None when everything is pinned / referenced)."""
+        candidates = [n for n in self._slots
+                      if n not in self._pinned and not self._refs.get(n, 0)]
+        if not candidates:
+            return None
+        victim = min(candidates, key=lambda n: self._lru.get(n, 0))
+        slot = self._slots[victim]
+        self._voided[victim] = VoidedModel(
+            name=victim, cfg_name=self.cfg.name,
+            adapter=jax.tree_util.tree_map(lambda x: np.asarray(x),
+                                           _slot_take(self.bank, slot)),
+            scale=float(self.scale[slot]))
+        self.unload(victim)
+        self.evictions += 1
+        return slot
+
+    def load(self, name: str, adapter, scale: float = 1.0,
+             evict: bool = False) -> int:
         """Load (or hot-swap in) an adapter pytree into a free slot —
-        no recompilation, no base-model copy."""
+        no recompilation, no base-model copy.  With ``evict=True``, a full
+        bank LRU-evicts an idle adapter instead of raising."""
         if name in self._slots:
             raise ValueError(f"adapter {name!r} already resident")
-        slot = self._alloc()
+        slot = self._alloc(evict=evict)
         self.bank = _slot_put(self.bank, slot, adapter)
         self.scale = self.scale.at[slot].set(scale)
         self._slots[name] = slot
+        self._voided.pop(name, None)
+        self._touch(name)
         return slot
 
     def load_random(self, name: str, key: jax.Array, scale: float = 1.0,
@@ -108,6 +161,42 @@ class AdapterStore:
     def unload(self, name: str):
         slot = self._slots.pop(name)
         self.bank = _slot_zero(self.bank, slot)
+        self._lru.pop(name, None)
+
+    # -- eviction pool ------------------------------------------------------
+    def acquire(self, name: str) -> int:
+        """Resolve an adapter to its slot, transparently reloading it from
+        host if it was evicted (possibly evicting another idle adapter)."""
+        if name in self._slots:
+            self._touch(name)
+            return self._slots[name]
+        if name in self._voided:
+            v = self._voided[name]
+            slot = self.load(name, jax.tree_util.tree_map(jnp.asarray,
+                                                          v.adapter),
+                             v.scale, evict=True)
+            self.reloads += 1
+            return slot
+        raise KeyError(f"unknown adapter {name!r}")
+
+    def retain(self, name: str):
+        """Mark the adapter as backing in-flight work (eviction-exempt)."""
+        self._refs[name] = self._refs.get(name, 0) + 1
+
+    def release(self, name: str):
+        n = self._refs.get(name, 0) - 1
+        if n <= 0:
+            self._refs.pop(name, None)
+        else:
+            self._refs[name] = n
+
+    def pin(self, name: str):
+        """Exempt from eviction permanently (training adapters: their slot
+        identity is baked into optimizer state and trainer masks)."""
+        self._pinned.add(name)
+
+    def unpin(self, name: str):
+        self._pinned.discard(name)
 
     def get_adapter(self, name: str):
         return _slot_take(self.bank, self._slots[name])

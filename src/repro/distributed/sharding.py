@@ -200,11 +200,33 @@ def act_constraint_fn(mesh):
     return constrain
 
 
+def mesh_context(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh —
+    ``jax.set_mesh`` on new jax, the Mesh object itself (a context manager)
+    on older releases."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def ambient_mesh():
+    """The mesh currently in scope, or None.  Compat wrapper:
+    ``jax.sharding.get_abstract_mesh`` only exists on newer jax; older
+    releases expose the ambient mesh via the thread-local resource env."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is not None:
+        return fn()
+    try:
+        from jax._src.mesh import thread_resources
+        pm = thread_resources.env.physical_mesh
+        return None if pm.empty else pm
+    except Exception:
+        return None
+
+
 def maybe_constrain(x, *spec):
     """with_sharding_constraint that no-ops when no mesh (or no "model"
     axis) is in scope — lets model code carry expert-parallel layout hints
     without breaking single-device tests."""
-    am = jax.sharding.get_abstract_mesh()
+    am = ambient_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return x
     ok = all(s is None or (isinstance(s, str) and s in am.axis_names)

@@ -106,3 +106,99 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, h, hd), q.dtype),
         interpret=interpret,
     )(pos.astype(jnp.int32), q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: the KV cache is a flat block pool, each request's blocks are
+# gathered through a scalar-prefetched block table in the BlockSpec index map
+# — the DMA engine walks the table, the kernel never sees the indirection.
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                         acc_ref, m_ref, l_ref, *, bs: int, nbt: int,
+                         scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :]                                         # [hd]
+    k = k_ref[0, :, 0, :]                                      # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    pos = pos_ref[b]
+    # absolute position of slot j within block ib of this request's table
+    j = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)[0]
+    mask = j <= pos                    # null-padded table rows fail this too
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [bs]
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[0], l_ref[0]
+    m_new = jnp.maximum(m_prev, s.max())
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[0] = l_prev * corr + p.sum()
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)[None]
+    m_ref[0] = m_new
+
+    @pl.when(ib == nbt - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           pos: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """Block-table batch-decode attention over a paged KV pool.
+
+    q: [B, h, hd] current-token queries;
+    k_pool/v_pool: [n_blocks, bs, g, hd] flat block pool (the persistent
+        cache — only the blocks a request's table names are streamed in);
+    block_tables: [B, nbt] int32 per-request block ids, null-padded (padding
+        entries are clamped to block 0 and masked out via ``pos``);
+    pos: [B] int32 current positions (block ``pos // bs`` holds the newest
+        token).  Returns [B, h, hd].
+
+    Grid (B, h, nbt): one grid step per table entry; the BlockSpec index map
+    reads the scalar-prefetched table so each step DMAs exactly one block of
+    the pool — the gather lives in the index map, not in HBM.
+    """
+    B, h, hd = q.shape
+    bs, g = k_pool.shape[1], k_pool.shape[2]
+    m = h // g
+    nbt = block_tables.shape[1]
+    tbl = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, h, nbt),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, hq, ib, T_, P_: (b, hq, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, hq, ib, T_, P_: (T_[b, ib], 0, hq // m, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, hq, ib, T_, P_: (T_[b, ib], 0, hq // m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd),
+                               lambda b, hq, ib, T_, P_: (b, hq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_decode_kernel, bs=bs, nbt=nbt,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, h, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, pos.astype(jnp.int32), q, k_pool, v_pool)

@@ -25,6 +25,26 @@ def bgmv_ref(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
     return y.astype(x.dtype)
 
 
+def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     block_tables: jax.Array, pos: jax.Array) -> jax.Array:
+    """Block-table batch-decode oracle: gather each request's blocks into a
+    contiguous view, then run masked single-token attention.
+    q: [B, h, hd]; k_pool/v_pool: [n_blocks, bs, g, hd];
+    block_tables: [B, nbt] (null-padded with 0); pos: [B]."""
+    from repro.models.layers import attention
+    B = q.shape[0]
+    bs = k_pool.shape[1]
+    tbl = jnp.maximum(block_tables, 0)
+    nbt = tbl.shape[1]
+    k = k_pool[tbl].reshape(B, nbt * bs, *k_pool.shape[2:])
+    v = v_pool[tbl].reshape(B, nbt * bs, *v_pool.shape[2:])
+    j = jnp.arange(nbt * bs, dtype=jnp.int32)[None, :]
+    k_pos = jnp.broadcast_to(j, (B, nbt * bs))
+    k_valid = j <= pos[:, None]
+    return attention(q[:, None], k, v, q_pos=pos[:, None], k_pos=k_pos,
+                     k_valid=k_valid, causal=True, window=0)[:, 0]
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         lengths: jax.Array, causal: bool = True) -> jax.Array:
     """Masked GQA attention oracle (full-scores form)."""

@@ -73,7 +73,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
     scale_shard = sh.replicated(mesh)
     batch_shard = sh.batch_shardings(batch_abs, mesh)
 
-    with jax.set_mesh(mesh):
+    with sh.mesh_context(mesh):
         if shape.kind == "train":
             opt = AdamWConfig()
             act = sh.act_constraint_fn(mesh) if seq_act_shard else None

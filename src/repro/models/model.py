@@ -64,6 +64,9 @@ class _Plan:
             self.pf_valid = ar[None, :] < pf.length[:, None]
         if dec is not None:
             self.dec_pos = dec.pos
+        # paged-layout block tables (None -> dense row layout per bucket)
+        self.pf_tables = pf.block_tables if pf is not None else None
+        self.dec_tables = dec.block_tables if dec is not None else None
 
     def split(self, x: jax.Array):
         """[T, ...] -> (xf [Bf,Sf,...], xp [Bp,Sp,...], xd [Bd,1,...])"""
@@ -87,7 +90,23 @@ def _merge_flat(plan: _Plan, xf, xp, xd) -> jax.Array:
 
 # ---------------------------------------------------------------------------
 # KV / state cache
+#
+# Two layouts share the same pytree structure ({"layers": tuple of dicts}):
+#
+# * dense  (init_cache):       every leaf is [n_periods, n_rows, ...] — one
+#   row per resident request, s_max key/value slots each.  Prefill writes at
+#   rows [Bd, Bd+Bp); decode updates rows [0, Bd) in place.
+# * paged  (init_paged_cache): attention K/V (or MLA latents) become a flat
+#   block pool [n_periods, n_blocks, block_size, ...] addressed through
+#   per-request block tables carried in the batch (PFBatch/DECBatch
+#   .block_tables); only per-request state that does not grow with the
+#   sequence (Mamba SSM/conv state, cross-attention K/V) keeps dense rows.
+#   Paged mode is selected per bucket by the presence of block tables.
 # ---------------------------------------------------------------------------
+
+# cache leaves that stay per-request rows even in the paged layout
+STATE_KEYS = frozenset({"h", "conv_x", "conv_bc", "xk", "xv"})
+
 
 def cache_seq_len(cfg: ModelConfig, s_max: int) -> int:
     w = cfg.sliding_window
@@ -129,10 +148,102 @@ def init_cache(cfg: ModelConfig, n_rows: int, s_max: int,
     return {"layers": tuple(per_pos)}
 
 
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     n_rows: int, dtype=None) -> Dict:
+    """Allocate the paged cache pytree: attention K/V as a flat block pool
+    ``[n_periods, n_blocks, block_size, ...]`` shared by all requests via
+    block tables; sequence-length-independent state keeps ``n_rows`` dense
+    rows.  Rolling (sliding-window) buffers and paging don't compose."""
+    if cfg.sliding_window > 0:
+        raise ValueError("paged cache does not support sliding windows")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Pn, kv, hd = cfg.n_periods, cfg.n_kv_heads, cfg.hd
+    per_pos = []
+    for pos, kind in enumerate(cfg.pattern):
+        c: Dict[str, jax.Array] = {}
+        if kind == "attn":
+            if cfg.mla is not None:
+                m = cfg.mla
+                c["ckv"] = jnp.zeros((Pn, n_blocks, block_size,
+                                      m.kv_lora_rank), dtype)
+                c["kpe"] = jnp.zeros((Pn, n_blocks, block_size,
+                                      m.qk_rope_dim), dtype)
+            else:
+                c["k"] = jnp.zeros((Pn, n_blocks, block_size, kv, hd), dtype)
+                c["v"] = jnp.zeros((Pn, n_blocks, block_size, kv, hd), dtype)
+            if cfg.is_cross_layer(pos):
+                f = cfg.encoder.n_frames if cfg.encoder else cfg.n_img_tokens
+                c["xk"] = jnp.zeros((Pn, n_rows, f, kv, hd), dtype)
+                c["xv"] = jnp.zeros((Pn, n_rows, f, kv, hd), dtype)
+        elif kind == "mamba":
+            s = cfg.ssm
+            nh, hdm = cfg.n_ssm_heads, s.head_dim
+            gds = s.n_groups * s.d_state
+            c["h"] = jnp.zeros((Pn, n_rows, nh, hdm, s.d_state), dtype)
+            c["conv_x"] = jnp.zeros((Pn, n_rows, s.conv_width - 1,
+                                     cfg.d_inner), dtype)
+            c["conv_bc"] = jnp.zeros((Pn, n_rows, s.conv_width - 1,
+                                      2 * gds), dtype)
+        per_pos.append(c)
+    return {"layers": tuple(per_pos)}
+
+
 def abstract_cache(cfg: ModelConfig, n_rows: int, s_max: int, dtype=None):
     dtype = dtype or jnp.dtype(cfg.dtype)
     tree = jax.eval_shape(lambda: init_cache(cfg, n_rows, s_max, dtype))
     return tree
+
+
+# -- paged pool access (block tables are null-padded with 0; block 0 is the
+#    reserved garbage block, and invalid positions are masked by k_valid) ----
+
+def _paged_write_prompt(pool: jax.Array, xh: jax.Array,
+                        tables: jax.Array) -> jax.Array:
+    """Scatter prefill writes ``[Bp, Sp, ...]`` into pool blocks via tables
+    ``[Bp, nbt]``; positions beyond ``nbt * block_size`` are dropped (they
+    are padding beyond the context limit)."""
+    bs = pool.shape[1]
+    Bp, Sp = xh.shape[:2]
+    nbp = min(-(-Sp // bs), tables.shape[1])
+    Lp = nbp * bs
+    if Sp < Lp:
+        xh = jnp.pad(xh, ((0, 0), (0, Lp - Sp)) + ((0, 0),) * (xh.ndim - 2))
+    else:
+        xh = xh[:, :Lp]
+    xb = xh.reshape(Bp, nbp, bs, *xh.shape[2:])
+    tbl = jnp.maximum(tables[:, :nbp], 0)
+    return pool.at[tbl].set(xb.astype(pool.dtype))
+
+
+def _paged_write_token(pool: jax.Array, xh: jax.Array, tables: jax.Array,
+                       pos: jax.Array) -> jax.Array:
+    """Write one decode token per row ``[Bd, ...]`` at its position."""
+    bs = pool.shape[1]
+    tbl = jnp.maximum(tables, 0)
+    rows = jnp.arange(tbl.shape[0])
+    bid = tbl[rows, jnp.clip(pos // bs, 0, tbl.shape[1] - 1)]
+    return pool.at[bid, pos % bs].set(xh.astype(pool.dtype))
+
+
+def _paged_view(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather per-request contiguous K/V views ``[Bd, nbt*bs, ...]`` — the
+    jnp reference of what kernels.decode_attn.paged_decode_attention streams
+    block-by-block without materializing."""
+    tbl = jnp.maximum(tables, 0)
+    Bd, nbt = tbl.shape
+    v = pool[tbl]
+    return v.reshape(Bd, nbt * pool.shape[1], *pool.shape[2:])
+
+
+def _paged_dec_mask(tables: jax.Array, block_size: int,
+                    pos: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(k_pos, k_valid) over the gathered view: positions are the natural
+    0..nbt*bs range, valid through the current token."""
+    Bd, nbt = tables.shape
+    j = jnp.arange(nbt * block_size, dtype=jnp.int32)[None, :]
+    k_pos = jnp.broadcast_to(j, (Bd, nbt * block_size))
+    k_valid = j <= pos[:, None]
+    return k_pos, k_valid
 
 
 def _dec_cache_pos(pos: jax.Array, sc: int) -> Tuple[jax.Array, jax.Array]:
@@ -189,29 +300,48 @@ def _attn_apply(cfg: ModelConfig, pos_idx: int, p: Dict, lr: Dict,
             outs[1] = L.attention(qh, kh, vh, q_pos=plan.pf_pos,
                                   k_pos=plan.pf_pos, k_valid=plan.pf_valid,
                                   causal=True, window=W, chunk=attn_chunk)
-            sc = cache["k"].shape[1]
-            if plan.Sp <= sc:
-                new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, :plan.Sp].set(kh)
-                new_cache["v"] = new_cache["v"].at[Bd:Bd + plan.Bp, :plan.Sp].set(vh)
-            else:                 # rolling buffer: keep last sc positions
-                sl = (jnp.arange(plan.Sp - sc, plan.Sp) % sc)
-                new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, sl].set(kh[:, -sc:])
-                new_cache["v"] = new_cache["v"].at[Bd:Bd + plan.Bp, sl].set(vh[:, -sc:])
+            if plan.pf_tables is not None:   # paged: straight into the blocks
+                new_cache["k"] = _paged_write_prompt(new_cache["k"], kh,
+                                                     plan.pf_tables)
+                new_cache["v"] = _paged_write_prompt(new_cache["v"], vh,
+                                                     plan.pf_tables)
+            else:
+                sc = cache["k"].shape[1]
+                if plan.Sp <= sc:
+                    new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, :plan.Sp].set(kh)
+                    new_cache["v"] = new_cache["v"].at[Bd:Bd + plan.Bp, :plan.Sp].set(vh)
+                else:             # rolling buffer: keep last sc positions
+                    sl = (jnp.arange(plan.Sp - sc, plan.Sp) % sc)
+                    new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, sl].set(kh[:, -sc:])
+                    new_cache["v"] = new_cache["v"].at[Bd:Bd + plan.Bp, sl].set(vh[:, -sc:])
         if qd is not None:       # decode: one token over the cache
             dpos = plan.dec_pos[:, None]
             qh = _rope_heads(qd, dpos, h, cfg.rope_theta)
             kh = _rope_heads(kd, dpos, kv, cfg.rope_theta)[:, 0]
             vh = vd.reshape(plan.Bd, kv, hd)
-            sc = cache["k"].shape[1]
-            slot = plan.dec_pos % sc
-            rows = jnp.arange(plan.Bd)
-            ck = new_cache["k"].at[rows, slot].set(kh)
-            cv = new_cache["v"].at[rows, slot].set(vh)
-            new_cache["k"], new_cache["v"] = ck, cv
-            k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
-            outs[2] = L.attention(qh, ck[:Bd], cv[:Bd],
-                                  q_pos=dpos, k_pos=k_pos, k_valid=k_valid,
-                                  causal=True, window=0)
+            if plan.dec_tables is not None:  # paged: block-table gather
+                ck = _paged_write_token(new_cache["k"], kh, plan.dec_tables,
+                                        plan.dec_pos)
+                cv = _paged_write_token(new_cache["v"], vh, plan.dec_tables,
+                                        plan.dec_pos)
+                new_cache["k"], new_cache["v"] = ck, cv
+                k_pos, k_valid = _paged_dec_mask(plan.dec_tables, ck.shape[1],
+                                                 plan.dec_pos)
+                outs[2] = L.attention(qh, _paged_view(ck, plan.dec_tables),
+                                      _paged_view(cv, plan.dec_tables),
+                                      q_pos=dpos, k_pos=k_pos,
+                                      k_valid=k_valid, causal=True, window=0)
+            else:
+                sc = cache["k"].shape[1]
+                slot = plan.dec_pos % sc
+                rows = jnp.arange(plan.Bd)
+                ck = new_cache["k"].at[rows, slot].set(kh)
+                cv = new_cache["v"].at[rows, slot].set(vh)
+                new_cache["k"], new_cache["v"] = ck, cv
+                k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
+                outs[2] = L.attention(qh, ck[:Bd], cv[:Bd],
+                                      q_pos=dpos, k_pos=k_pos,
+                                      k_valid=k_valid, causal=True, window=0)
         out = _merge_flat(plan, *outs)
     o = dn(out, p["wo"], None, lr.get("wo"))
     x = x + o
@@ -262,30 +392,50 @@ def _mla_apply(cfg: ModelConfig, p: Dict, lr: Dict, plan: _Plan,
                                   k_valid=plan.pf_valid, causal=True,
                                   window=cfg.sliding_window,
                                   chunk=attn_chunk)
-        sc = cache["ckv"].shape[1]
-        if plan.Sp <= sc:
-            new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, :plan.Sp].set(ckv)
-            new_cache["kpe"] = new_cache["kpe"].at[Bd:Bd + plan.Bp, :plan.Sp].set(kpe)
+        if plan.pf_tables is not None:       # paged: straight into the blocks
+            new_cache["ckv"] = _paged_write_prompt(new_cache["ckv"], ckv,
+                                                   plan.pf_tables)
+            new_cache["kpe"] = _paged_write_prompt(new_cache["kpe"], kpe,
+                                                   plan.pf_tables)
         else:
-            sl = (jnp.arange(plan.Sp - sc, plan.Sp) % sc)
-            new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, sl].set(ckv[:, -sc:])
-            new_cache["kpe"] = new_cache["kpe"].at[Bd:Bd + plan.Bp, sl].set(kpe[:, -sc:])
+            sc = cache["ckv"].shape[1]
+            if plan.Sp <= sc:
+                new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, :plan.Sp].set(ckv)
+                new_cache["kpe"] = new_cache["kpe"].at[Bd:Bd + plan.Bp, :plan.Sp].set(kpe)
+            else:
+                sl = (jnp.arange(plan.Sp - sc, plan.Sp) % sc)
+                new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, sl].set(ckv[:, -sc:])
+                new_cache["kpe"] = new_cache["kpe"].at[Bd:Bd + plan.Bp, sl].set(kpe[:, -sc:])
     if qd is not None:
         dpos = plan.dec_pos[:, None]
         qn, qr = _split_q(qd, plan.Bd, 1)
         qr = L.rope(qr, dpos, cfg.rope_theta)
         ckv, kpe = _split_c(cd)
         kpe = L.rope(kpe[..., None, :], dpos, cfg.rope_theta)[..., 0, :]
-        sc = cache["ckv"].shape[1]
-        slot = plan.dec_pos % sc
-        rows = jnp.arange(plan.Bd)
-        cc = new_cache["ckv"].at[rows, slot].set(ckv[:, 0])
-        ce = new_cache["kpe"].at[rows, slot].set(kpe[:, 0])
-        new_cache["ckv"], new_cache["kpe"] = cc, ce
-        k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
-        outs[2] = L.mla_attention(qn, qr, cc[:Bd], ce[:Bd], p["wuk"], p["wuv"],
-                                  q_pos=dpos, k_pos=k_pos, k_valid=k_valid,
-                                  causal=True, window=0)
+        if plan.dec_tables is not None:      # paged: block-table gather
+            cc = _paged_write_token(new_cache["ckv"], ckv[:, 0],
+                                    plan.dec_tables, plan.dec_pos)
+            ce = _paged_write_token(new_cache["kpe"], kpe[:, 0],
+                                    plan.dec_tables, plan.dec_pos)
+            new_cache["ckv"], new_cache["kpe"] = cc, ce
+            k_pos, k_valid = _paged_dec_mask(plan.dec_tables, cc.shape[1],
+                                             plan.dec_pos)
+            outs[2] = L.mla_attention(qn, qr, _paged_view(cc, plan.dec_tables),
+                                      _paged_view(ce, plan.dec_tables),
+                                      p["wuk"], p["wuv"], q_pos=dpos,
+                                      k_pos=k_pos, k_valid=k_valid,
+                                      causal=True, window=0)
+        else:
+            sc = cache["ckv"].shape[1]
+            slot = plan.dec_pos % sc
+            rows = jnp.arange(plan.Bd)
+            cc = new_cache["ckv"].at[rows, slot].set(ckv[:, 0])
+            ce = new_cache["kpe"].at[rows, slot].set(kpe[:, 0])
+            new_cache["ckv"], new_cache["kpe"] = cc, ce
+            k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
+            outs[2] = L.mla_attention(qn, qr, cc[:Bd], ce[:Bd], p["wuk"],
+                                      p["wuv"], q_pos=dpos, k_pos=k_pos,
+                                      k_valid=k_valid, causal=True, window=0)
     return _merge_flat(plan, *outs)
 
 

@@ -35,6 +35,10 @@ def load_balance_loss(probs: jax.Array, idx: jax.Array, n_experts: int
 
 
 GROUP_TOKENS = 4096      # dispatch group size (capacity is per group)
+DROPLESS_MAX = 512       # groups with <= this many routed slots never drop:
+# capacity dropping is a training-throughput trade, and it makes outputs
+# depend on batch composition — decode-sized groups must be exact so
+# prefill-then-decode equals a single full forward
 
 
 def _group_dispatch(xg: jax.Array, idx: jax.Array, gates: jax.Array,
@@ -94,7 +98,10 @@ def moe_apply(x: jax.Array, params: dict, mcfg: MoEConfig
     while T % G:
         G -= 1
     S = T // G
-    cap = max(int(math.ceil(S * k / E * mcfg.capacity_factor)), 1)
+    if S * k <= DROPLESS_MAX:
+        cap = S * k          # worst case: every token on one expert
+    else:
+        cap = max(int(math.ceil(S * k / E * mcfg.capacity_factor)), 1)
     from repro.distributed.sharding import maybe_constrain
     xg = x.reshape(G, S, d)
     wts = {kk: params[kk] for kk in ("w_gate", "w_up", "w_down")}

@@ -123,7 +123,8 @@ def block_gather_specs(cfg: ModelConfig):
     every "data" entry removed (keep TP, gather FSDP as int8).  Returns None
     when no mesh is in scope (CPU tests)."""
     from jax.sharding import PartitionSpec
-    am = jax.sharding.get_abstract_mesh()
+    from repro.distributed.sharding import ambient_mesh
+    am = ambient_mesh()
     if am is None or am.empty or "model" not in am.axis_names:
         return None
     from repro.distributed.sharding import _spec_for

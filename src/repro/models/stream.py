@@ -28,12 +28,15 @@ class PFBatch(NamedTuple):
     length: Array                    # [Bp] int32 true lengths
     adapter: Array                   # [Bp] int32
     aux_embed: Optional[Array] = None  # [Bp, F, d]
+    block_tables: Optional[Array] = None  # [Bp, nbt] int32 (paged KV layout;
+    #                                  null-padded with block 0); None = dense
 
 
 class DECBatch(NamedTuple):
     tokens: Array                    # [Bd] int32 current tokens
     pos: Array                       # [Bd] int32 positions (= cache length)
     adapter: Array                   # [Bd] int32
+    block_tables: Optional[Array] = None  # [Bd, nbt] int32; None = dense
 
 
 class UnifiedBatch(NamedTuple):

@@ -20,7 +20,7 @@ from repro.core.unified import make_apply_step, make_forward_step, make_grad_ste
 from repro.core.virtualization import MixedLoraModel
 from repro.models.stream import UnifiedBatch
 from repro.serving.clock import VirtualClock, WallClock
-from repro.serving.kvcache import CacheManager
+from repro.serving.kvcache import CacheManager, PagedCacheManager
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.slo import Metrics, SLOConfig
@@ -31,7 +31,7 @@ from repro.training.trainer import MixedLoraTrainer
 
 @dataclasses.dataclass
 class EngineConfig:
-    capacity: int = 8                 # decode-table rows
+    capacity: int = 8                 # max concurrent decode requests
     pf_capacity: int = 4              # prefill scratch rows
     s_max: int = 256                  # cache sequence capacity
     scheduler: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
@@ -40,6 +40,10 @@ class EngineConfig:
     flow: flow.FlowConfig = dataclasses.field(default_factory=flow.FlowConfig)
     attn_chunk: int = 0
     virtual_time: bool = False        # deterministic trace replay
+    paged: bool = True                # block-table KV layout (falls back to
+    #                                   dense rows for sliding-window models)
+    block_size: int = 32              # KV tokens per block (paged layout)
+    n_blocks: int = 0                 # pool size; 0 = match dense capacity
 
 
 class UnifiedEngine:
@@ -48,7 +52,14 @@ class UnifiedEngine:
         self.ecfg = ecfg or EngineConfig()
         self.cfg = model.cfg
         e = self.ecfg
-        self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity, e.s_max)
+        self.paged = e.paged and self.cfg.sliding_window == 0
+        if self.paged:
+            self.cachemgr = PagedCacheManager(
+                self.cfg, e.capacity, e.pf_capacity, e.s_max,
+                block_size=e.block_size, n_blocks=e.n_blocks)
+        else:
+            self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
+                                         e.s_max)
         self.sched = Scheduler(e.scheduler, e.capacity)
         self.clock = VirtualClock() if e.virtual_time else WallClock()
         self.metrics = Metrics()
@@ -77,9 +88,20 @@ class UnifiedEngine:
 
     def add_trainer(self, tr: MixedLoraTrainer):
         self.trainers[tr.name] = tr
+        # training adapters must never be evicted: their slot identity is
+        # baked into the trainer mask and optimizer state (pinning a name
+        # before its load is fine — the pin is checked against residents)
+        self.model.store.pin(tr.name)
 
     def trainers_pending(self) -> bool:
         return any(t.pending() for t in self.trainers.values())
+
+    @staticmethod
+    def _prefix_of(r: Request) -> str:
+        """Effective prefix id: requests with modality embeddings never
+        share — cross-attention makes deeper-layer K/V depend on aux_embed,
+        which the (adapter, tokens) prefix identity cannot capture."""
+        return "" if r.aux_embed is not None else r.prefix_id
 
     def _pull_arrivals(self):
         now = self.clock.now()
@@ -91,9 +113,32 @@ class UnifiedEngine:
         """One scheduling + execution round; returns False when idle."""
         self._pull_arrivals()
         e = self.ecfg
-        decision = self.sched.decide(self.waiting, len(self.active),
-                                     self.cachemgr.n_free, e.pf_capacity,
-                                     self.trainers_pending())
+        if self.paged:
+            # a request whose projected blocks can never fit is unservable
+            for r in list(self.waiting):
+                need = self.cachemgr.projected_blocks(r.prompt_len,
+                                                      r.max_new_tokens)
+                if need > self.cachemgr.total_blocks:
+                    r.state = State.FAILED
+                    r.t_finish = self.clock.now()
+                    self.waiting.remove(r)
+                    self.finished.append(r)
+            decision = self.sched.decide(
+                self.waiting, len(self.active), self.cachemgr.n_free,
+                e.pf_capacity, self.trainers_pending(),
+                # registry-held prefix blocks are sheddable inside try_admit,
+                # so the gate must count them as available
+                free_blocks=(self.cachemgr.free_blocks
+                             + self.cachemgr.reclaimable_blocks),
+                total_blocks=self.cachemgr.total_blocks,
+                block_size=self.cachemgr.block_size, s_max=e.s_max,
+                need_fn=lambda r: self.cachemgr.fresh_need(
+                    r.prompt_len, r.max_new_tokens, r.prompt, r.adapter,
+                    self._prefix_of(r)))
+        else:
+            decision = self.sched.decide(self.waiting, len(self.active),
+                                         self.cachemgr.n_free, e.pf_capacity,
+                                         self.trainers_pending())
 
         # fine-tuning rows (round-robin over trainers)
         ft_rows: List[flow.FTRow] = []
@@ -109,17 +154,42 @@ class UnifiedEngine:
         pf_reqs: List[flow.PFReq] = []
         admitted: List[Request] = []
         for r in decision.admit:
-            slot = self.cachemgr.alloc()
+            # resolve the adapter BEFORE reserving cache resources: acquire
+            # can fail (unknown adapter, or every slot pinned/retained) and
+            # must not leak a reservation or abort the tick
+            if r.adapter:
+                try:
+                    aslot = self.model.store.acquire(r.adapter)
+                except KeyError:
+                    r.state = State.FAILED
+                    r.t_finish = self.clock.now()
+                    self.waiting.remove(r)
+                    self.finished.append(r)
+                    continue
+                except RuntimeError:
+                    break          # adapter bank saturated; retry next tick
+            else:
+                aslot = -1
+            if self.paged:
+                slot = self.cachemgr.try_admit(r.prompt, r.max_new_tokens,
+                                               r.adapter, self._prefix_of(r))
+            else:
+                slot = self.cachemgr.alloc()
             if slot is None:
                 break
+            if r.adapter:
+                self.model.store.retain(r.adapter)
             r.dec_slot = slot
             r.state = State.PREFILL
             self.waiting.remove(r)
             admitted.append(r)
+            # prefill writes through write_table_of: shared prefix entries
+            # are nulled so prefill never rewrites blocks it doesn't own
             pf_reqs.append(flow.PFReq(
-                tokens=r.prompt, rid=r.rid,
-                slot=self.model.store.slot_of(r.adapter) if r.adapter else -1,
-                aux_embed=r.aux_embed))
+                tokens=r.prompt, rid=r.rid, slot=aslot,
+                aux_embed=r.aux_embed,
+                block_table=(self.cachemgr.write_table_of(slot)
+                             if self.paged else None)))
 
         # decode bucket (static: full table when any request is active)
         use_dec = bool(self.active)
@@ -128,12 +198,19 @@ class UnifiedEngine:
             dec_pos = np.zeros((e.capacity,), np.int64)
             dec_slots = np.full((e.capacity,), -1, np.int64)
             for slot, r in self.active.items():
+                if self.paged:
+                    # copy-on-write: the next token must land in an
+                    # exclusively-owned block (no-op unless prefix-shared)
+                    self.cachemgr.ensure_writable(slot)
                 dec_tokens[slot] = self._last_tokens[slot]
                 dec_pos[slot] = self.cachemgr.lens[slot]
                 dec_slots[slot] = (self.model.store.slot_of(r.adapter)
                                    if r.adapter else -1)
+            dec_tables = (self.cachemgr.dec_tables(self.active)
+                          if self.paged else None)
         else:
             dec_tokens = dec_pos = dec_slots = np.zeros((0,), np.int64)
+            dec_tables = None
 
         if not ft_rows and not pf_reqs and not use_dec:
             # idle: jump to next arrival if replaying a trace
@@ -143,7 +220,7 @@ class UnifiedEngine:
             return False
 
         batch = flow.assemble(ft_rows, pf_reqs, dec_tokens, dec_pos,
-                              dec_slots, e.flow)
+                              dec_slots, e.flow, dec_tables=dec_tables)
         cache = self.cachemgr.step_cache() if (pf_reqs or use_dec) else None
 
         store = self.model.store
@@ -184,7 +261,18 @@ class UnifiedEngine:
                 self.active[r.dec_slot] = r
                 assignments.append((i, r.dec_slot))
                 lengths.append(r.prompt_len)
-            self.cachemgr.commit_prefill(assignments, lengths)
+            # the model wrote prefill rows at [Bd, Bd+Bp): tell the manager
+            # where they start (state rows only under the paged layout — the
+            # K/V itself went straight into the request's blocks)
+            self.cachemgr.commit_prefill(assignments, lengths,
+                                         src_base=e.capacity if use_dec
+                                         else 0)
+            if self.paged:
+                for r in admitted:
+                    if self._prefix_of(r):
+                        self.cachemgr.register_prefix(self._prefix_of(r),
+                                                      r.dec_slot, r.prompt,
+                                                      r.adapter)
             self.metrics.prefill_tokens += pf_tok
             for r in admitted:
                 self._maybe_finish(r, now)
@@ -207,9 +295,14 @@ class UnifiedEngine:
             per_row = losses / np.maximum(counts, 1.0)
             self.grad_accum = tree_add(self.grad_accum, grads)
             by_trainer: Dict[str, List] = {}
+            train_tok = eval_tok = 0.0
             for i, row in enumerate(ft_rows):
                 by_trainer.setdefault(row.trainer, []).append(
                     (row, float(per_row[i]), float(counts[i])))
+                if row.is_eval:
+                    eval_tok += float(counts[i])
+                else:
+                    train_tok += float(counts[i])
             for name, items in by_trainer.items():
                 tr = self.trainers[name]
                 rows = [it[0] for it in items]
@@ -217,13 +310,8 @@ class UnifiedEngine:
                 cs = [it[2] for it in items]
                 if tr.record(rows, ls, cs):
                     self._apply_trainer(tr)
-            self.metrics.finetune_tokens += int(
-                sum(c for r, l, c in
-                    [(it[0], it[1], it[2]) for its in by_trainer.values()
-                     for it in its] if not r.is_eval))
-            self.metrics.eval_tokens += int(
-                sum(c for its in by_trainer.values()
-                    for (r, l, c) in its if r.is_eval))
+            self.metrics.finetune_tokens += int(train_tok)
+            self.metrics.eval_tokens += int(eval_tok)
 
         self.metrics.steps += 1
         self.metrics.elapsed = self.clock.now()
@@ -248,6 +336,8 @@ class UnifiedEngine:
             r.t_finish = now
             self.active.pop(r.dec_slot, None)
             self.cachemgr.free(r.dec_slot)
+            if r.adapter:
+                self.model.store.release(r.adapter)
             self.finished.append(r)
 
     # ------------------------------------------------------------------

@@ -1,41 +1,90 @@
-"""Engine-side cache management.
+"""Engine-side cache management: dense rows (legacy) and paged blocks.
 
-Layout contract with the model (``repro.models.model``): the cache pytree has
-``capacity + pf_capacity`` rows; rows ``[0, capacity)`` are the persistent
-decode table, rows ``[capacity, capacity + Bp)`` receive each step's prefill
-writes.  After a step, ``commit_prefill`` copies freshly-prefilled rows into
-their assigned decode-table slots (one fused jit'd gather/scatter).
+Two layout contracts with the model (``repro.models.model``):
 
-This is the static-shape TPU replacement for GPU paged attention: slots are
-fixed-size rows, admission is slot allocation, eviction is slot release.
+**Dense** (``CacheManager``): the cache pytree has ``capacity + pf_capacity``
+rows of ``s_max`` key/value slots each; rows ``[0, capacity)`` are the
+persistent decode table, rows ``[Bd, Bd + Bp)`` receive each step's prefill
+writes (``Bd`` is that tick's decode-bucket size).  After a step,
+``commit_prefill`` copies freshly-prefilled rows into their assigned
+decode-table slots.  HBM is sized for the worst case: every resident request
+pays ``s_max`` slots whether it uses them or not.
+
+**Paged** (``PagedCacheManager``): attention K/V lives in a flat pool of
+fixed-size blocks ``[n_blocks, block_size, ...]``; each request owns a *block
+table* (list of block ids) covering its projected length
+``ceil(min(prompt + max_new, s_max) / block_size)``.  Admission is a block
+budget, not a slot: HBM is sized for the tokens actually reserved, so many
+more mixed-length requests fit the same pool (the S-LoRA unified-paging
+design, on TPU with static shapes).  Block 0 is a reserved null block that
+absorbs writes from padding rows.  Prefill writes land directly in the
+request's blocks via the table carried in the batch — commit assigns table
+entries instead of copying rows.  Only per-request *state* (Mamba SSM state,
+conv tails, cross-attention K/V), which does not grow with sequence length,
+still uses dense rows ``[0, capacity + pf_capacity)`` with the row-copy
+commit.
+
+Prefix reuse: full blocks of a registered prompt prefix (same adapter, same
+tokens, same positions) are shared across requests by refcount; a write into
+a shared block goes through copy-on-write (``ensure_writable``).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import functools
+from collections import OrderedDict, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.configs import ModelConfig
-from repro.models.model import init_cache
+from repro.models.model import init_cache, init_paged_cache, STATE_KEYS
 
 
+# cache leaves are [n_periods, n_rows, ...]: rows live on axis 1
 @jax.jit
 def _commit(tree, src_rows: jax.Array, dst_rows: jax.Array):
     def mv(x):
-        return x.at[dst_rows].set(x[src_rows])
+        return x.at[:, dst_rows].set(x[:, src_rows])
     return jax.tree_util.tree_map(mv, tree)
 
 
 @jax.jit
 def _zero_rows(tree, rows: jax.Array):
     def z(x):
-        return x.at[rows].set(0.0)
+        return x.at[:, rows].set(0.0)
     return jax.tree_util.tree_map(z, tree)
 
 
+# donate the cache: every caller immediately replaces it with the result,
+# and without aliasing a one-block logical copy would materialize the whole
+# pool afresh
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block(cache, src: jax.Array, dst: jax.Array):
+    # pool leaves are [n_periods, n_blocks, block_size, ...]: copy axis 1.
+    # state leaves are per-request rows, NOT block-addressed — leave them be.
+    layers = tuple(
+        {k: (v if k in STATE_KEYS else v.at[:, dst].set(v[:, src]))
+         for k, v in d.items()}
+        for d in cache["layers"])
+    return {"layers": layers}
+
+
+def projected_blocks(prompt_len: int, max_new: int, block_size: int,
+                     s_max: int) -> int:
+    """Blocks a request reserves on admission: its whole projected life
+    (prompt + generated tokens), clipped to the context limit.  The single
+    source of truth for both the scheduler's admission gate and the
+    manager's reservation."""
+    tokens = min(prompt_len + max_new, s_max)
+    return -(-tokens // block_size)
+
+
 class CacheManager:
+    """Dense slot-per-request cache (legacy layout; kept for sliding-window
+    models and as the equivalence baseline for the paged path)."""
+
     def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
                  s_max: int, dtype=None):
         self.cfg = cfg
@@ -43,12 +92,12 @@ class CacheManager:
         self.pf_capacity = pf_capacity    # scratch rows for prefill buckets
         self.s_max = s_max
         self.cache = init_cache(cfg, capacity + pf_capacity, s_max, dtype)
-        self._free: List[int] = list(range(capacity))
+        self._free: Deque[int] = deque(range(capacity))
         self.lens = np.zeros((capacity,), np.int64)   # absolute positions
 
     # -- slot lifecycle ------------------------------------------------------
     def alloc(self) -> Optional[int]:
-        return self._free.pop(0) if self._free else None
+        return self._free.popleft() if self._free else None
 
     def free(self, slot: int):
         self.lens[slot] = 0
@@ -66,12 +115,329 @@ class CacheManager:
         self.cache = new_cache
 
     def commit_prefill(self, assignments: List[Tuple[int, int]],
-                       lengths: List[int]):
-        """assignments: (pf_row_index_within_bucket, decode_slot)."""
+                       lengths: List[int], src_base: Optional[int] = None):
+        """assignments: (pf_row_index_within_bucket, decode_slot).
+
+        ``src_base`` is the decode-bucket size of the step that produced the
+        prefill rows (the model writes prefill at rows ``[Bd, Bd + Bp)``);
+        defaults to ``capacity`` for the full-table decode bucket.
+        """
         if not assignments:
             return
-        src = jnp.asarray([self.capacity + i for i, _ in assignments])
+        base = self.capacity if src_base is None else src_base
+        src = jnp.asarray([base + i for i, _ in assignments])
         dst = jnp.asarray([s for _, s in assignments])
         self.cache = _commit(self.cache, src, dst)
         for (_, slot), ln in zip(assignments, lengths):
             self.lens[slot] = ln
+
+
+# ---------------------------------------------------------------------------
+# paged layout
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Fixed-size KV-block free list with refcounts.
+
+    Block 0 is reserved as the null block (never allocated): padding rows in
+    the batch carry table entries of 0, so their writes land there harmlessly.
+    """
+
+    def __init__(self, n_blocks: int):
+        assert n_blocks >= 2, "need at least one usable block beyond null"
+        self.n_blocks = n_blocks
+        self._free: Deque[int] = deque(range(1, n_blocks))
+        self.ref = np.zeros((n_blocks,), np.int64)
+        self.ref[0] = 1                   # null block is permanently held
+        self.peak_used = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def usable(self) -> int:
+        return self.n_blocks - 1
+
+    @property
+    def n_used(self) -> int:
+        return self.usable - self.n_free
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        bid = self._free.popleft()
+        self.ref[bid] = 1
+        self.peak_used = max(self.peak_used, self.n_used)
+        return bid
+
+    def alloc_many(self, n: int) -> Optional[List[int]]:
+        if not self.can_alloc(n):
+            return None
+        return [self.alloc() for _ in range(n)]
+
+    def incref(self, bid: int):
+        assert bid != 0 and self.ref[bid] > 0, f"incref of dead block {bid}"
+        self.ref[bid] += 1
+
+    def decref(self, bid: int):
+        assert bid != 0 and self.ref[bid] > 0, f"decref of dead block {bid}"
+        self.ref[bid] -= 1
+        if self.ref[bid] == 0:
+            self._free.append(bid)
+
+    def is_shared(self, bid: int) -> bool:
+        return self.ref[bid] > 1
+
+
+class PagedCacheManager:
+    """Block-table paged KV cache + dense state rows.
+
+    Engine-facing surface mirrors ``CacheManager`` (``alloc`` is replaced by
+    ``try_admit`` which takes the request's projected token need), plus block
+    bookkeeping: ``table_of``, ``dec_tables``, ``ensure_writable`` (COW), and
+    the prefix registry (``reuse``/``register`` inside ``try_admit`` /
+    ``register_prefix``).
+    """
+
+    def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
+                 s_max: int, block_size: int = 32, n_blocks: int = 0,
+                 dtype=None):
+        if cfg.sliding_window > 0:
+            raise ValueError("paged cache does not support sliding windows; "
+                             "use the dense CacheManager")
+        self.cfg = cfg
+        self.capacity = capacity          # state rows == max concurrent reqs
+        self.pf_capacity = pf_capacity
+        self.s_max = s_max
+        self.block_size = block_size
+        self.nbt = -(-s_max // block_size)          # table width (blocks/req)
+        if n_blocks <= 0:
+            # never more constrained than the dense layout by default
+            n_blocks = 1 + capacity * self.nbt
+        self.allocator = BlockAllocator(n_blocks)
+        self.cache = init_paged_cache(cfg, n_blocks, block_size,
+                                      capacity + pf_capacity, dtype)
+        self._free_slots: Deque[int] = deque(range(capacity))
+        self.lens = np.zeros((capacity,), np.int64)
+        self.tables: Dict[int, List[int]] = {}      # state slot -> block ids
+        self.shared_count: Dict[int, int] = {}      # leading shared blocks
+        # prefix_id -> (adapter, prefix tokens, block ids); ordered for LRU
+        self._prefixes: "OrderedDict[str, Tuple[str, np.ndarray, List[int]]]" \
+            = OrderedDict()
+
+    # -- budget --------------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_blocks(self) -> int:
+        return self.allocator.n_free
+
+    @property
+    def total_blocks(self) -> int:
+        return self.allocator.usable
+
+    def projected_blocks(self, prompt_len: int, max_new: int) -> int:
+        return projected_blocks(prompt_len, max_new, self.block_size,
+                                self.s_max)
+
+    @property
+    def reclaimable_blocks(self) -> int:
+        """Blocks held only by the prefix registry — sheddable on demand by
+        ``try_admit``.  The scheduler's admission gate must count these as
+        available, or registry-held prefixes starve admission forever."""
+        return int(sum(1 for _, _, bids in self._prefixes.values()
+                       for bid in bids if self.allocator.ref[bid] == 1))
+
+    # -- admission -----------------------------------------------------------
+    def _lookup_shared(self, prompt: np.ndarray, adapter: str,
+                       prefix_id: str, touch: bool = False) -> List[int]:
+        """Registered prefix blocks this prompt can reuse (same adapter AND
+        identical leading tokens — K/V depend on both)."""
+        if not prefix_id or prefix_id not in self._prefixes:
+            return []
+        p_adapter, p_toks, p_bids = self._prefixes[prefix_id]
+        n_full = min(len(p_bids), len(prompt) // self.block_size)
+        if (p_adapter != adapter or n_full == 0 or
+                not np.array_equal(p_toks[:n_full * self.block_size],
+                                   np.asarray(prompt)[:n_full *
+                                                      self.block_size])):
+            return []
+        if touch:
+            self._prefixes.move_to_end(prefix_id)         # LRU touch
+        return p_bids[:n_full]
+
+    def fresh_need(self, prompt_len: int, max_new: int, prompt: np.ndarray,
+                   adapter: str = "", prefix_id: str = "") -> int:
+        """The request's charge against the gate's ``free + reclaimable``
+        budget.  Shared blocks with ref >= 2 cost nothing; shared blocks held
+        only by the registry (ref == 1) are discounted from *need* but were
+        also counted reclaimable, so they must still be charged — otherwise
+        the gate admits requests the manager then refuses."""
+        shared = self._lookup_shared(prompt, adapter, prefix_id)
+        held_elsewhere = sum(1 for b in shared if self.allocator.ref[b] >= 2)
+        return self.projected_blocks(prompt_len, max_new) - held_elsewhere
+
+    def try_admit(self, prompt: np.ndarray, max_new: int, adapter: str = "",
+                  prefix_id: str = "") -> Optional[int]:
+        """Reserve a state slot + the request's projected blocks (sharing
+        registered prefix blocks when ``prefix_id`` matches).  Returns the
+        state slot, or None when slots or blocks are exhausted."""
+        if not self._free_slots:
+            return None
+        need = self.projected_blocks(len(prompt), max_new)
+        shared = self._lookup_shared(prompt, adapter, prefix_id, touch=True)
+        fresh_need = need - len(shared)
+        if not self.allocator.can_alloc(fresh_need):
+            # shed idle prefixes (oldest first) to make room
+            while self._prefixes and not self.allocator.can_alloc(fresh_need):
+                if not self._drop_oldest_prefix(keep=prefix_id if shared
+                                                else ""):
+                    break
+            if not self.allocator.can_alloc(fresh_need):
+                return None
+        for bid in shared:
+            self.allocator.incref(bid)
+        fresh = self.allocator.alloc_many(fresh_need)
+        assert fresh is not None
+        slot = self._free_slots.popleft()
+        self.tables[slot] = shared + fresh
+        self.shared_count[slot] = len(shared)
+        self.lens[slot] = 0
+        return slot
+
+    def free(self, slot: int):
+        for bid in self.tables.pop(slot, []):
+            self.allocator.decref(bid)
+        self.shared_count.pop(slot, None)
+        self.lens[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- prefix registry -----------------------------------------------------
+    def register_prefix(self, prefix_id: str, slot: int, prompt: np.ndarray,
+                        adapter: str = ""):
+        """Publish the full blocks of ``slot``'s prompt for reuse.  The
+        registry holds its own refcount, so the blocks outlive the request."""
+        if not prefix_id or prefix_id in self._prefixes:
+            return
+        n_full = len(prompt) // self.block_size
+        if n_full == 0:
+            return
+        bids = self.tables[slot][:n_full]
+        for bid in bids:
+            self.allocator.incref(bid)
+        self._prefixes[prefix_id] = (adapter,
+                                     np.asarray(prompt)[:n_full *
+                                                        self.block_size]
+                                     .copy(), bids)
+
+    def _drop_oldest_prefix(self, keep: str = "") -> bool:
+        """Shed the oldest prefix registration that would actually free at
+        least one block (some block at ref == 1).  Dropping a prefix whose
+        blocks are all still held by active consumers frees nothing and
+        only destroys reusable sharing metadata."""
+        for pid, (_, _, bids) in self._prefixes.items():
+            if pid == keep:
+                continue
+            if any(self.allocator.ref[b] == 1 for b in bids):
+                self._prefixes.pop(pid)
+                for bid in bids:
+                    self.allocator.decref(bid)
+                return True
+        return False
+
+    @property
+    def prefixes(self) -> List[str]:
+        return list(self._prefixes)
+
+    # -- copy-on-write -------------------------------------------------------
+    def ensure_writable(self, slot: int, pos: Optional[int] = None) -> int:
+        """Guarantee the block holding ``pos`` (default: the next write at
+        ``lens[slot]``) is exclusively owned; copy-on-write it if shared.
+        Returns the (possibly new) block id."""
+        p = int(self.lens[slot]) if pos is None else pos
+        bi = p // self.block_size
+        table = self.tables[slot]
+        bid = table[bi]
+        if not self.allocator.is_shared(bid):
+            return bid
+        new = self.allocator.alloc()
+        if new is None:
+            raise RuntimeError("out of KV blocks during copy-on-write")
+        self.cache = _copy_block(self.cache, jnp.int32(bid), jnp.int32(new))
+        self.allocator.decref(bid)
+        table[bi] = new
+        return new
+
+    # -- batch assembly ------------------------------------------------------
+    def table_of(self, slot: int) -> np.ndarray:
+        """Null-padded ``[nbt]`` int32 table for the batch."""
+        t = np.zeros((self.nbt,), np.int32)
+        bids = self.tables[slot]
+        t[:len(bids)] = bids
+        return t
+
+    def write_table_of(self, slot: int) -> np.ndarray:
+        """Prefill-write table: shared prefix entries are nulled so prefill
+        never rewrites blocks it does not exclusively own.  The shared
+        blocks already hold the registrar's K/V (same adapter + tokens +
+        positions); rewriting them would be benign only if recompute were
+        bitwise-identical, which batch-composition-dependent paths (MoE
+        capacity dropping) do not guarantee."""
+        t = self.table_of(slot)
+        t[:self.shared_count.get(slot, 0)] = 0
+        return t
+
+    def dec_tables(self, active_slots) -> np.ndarray:
+        """Decode-bucket tables ``[capacity, nbt]``.  Only ``active_slots``
+        get their real tables: padding rows (and slots admitted this tick,
+        which prefill in the same step) must stay on the null block so the
+        dummy decode write cannot corrupt freshly-prefilled positions."""
+        out = np.zeros((self.capacity, self.nbt), np.int32)
+        for slot in active_slots:
+            bids = self.tables[slot]
+            out[slot, :len(bids)] = bids
+        return out
+
+    # -- step plumbing -------------------------------------------------------
+    def step_cache(self):
+        return self.cache
+
+    def update(self, new_cache):
+        self.cache = new_cache
+
+    def commit_prefill(self, assignments: List[Tuple[int, int]],
+                       lengths: List[int], src_base: Optional[int] = None):
+        """Prefill K/V was written straight into the request's blocks via its
+        table — committing is just the per-request *state* row copy (Mamba
+        SSM/conv state, cross-attention K/V) plus length assignment."""
+        if not assignments:
+            return
+        state = self._state_subtree()
+        if state is not None:
+            base = self.capacity if src_base is None else src_base
+            src = jnp.asarray([base + i for i, _ in assignments])
+            dst = jnp.asarray([s for _, s in assignments])
+            self._merge_state(_commit(state, src, dst))
+        for (_, slot), ln in zip(assignments, lengths):
+            self.lens[slot] = ln
+
+    def _state_subtree(self):
+        layers = tuple({k: d[k] for k in d if k in STATE_KEYS}
+                       for d in self.cache["layers"])
+        if not any(layers):
+            return None
+        return {"layers": layers}
+
+    def _merge_state(self, state):
+        merged = []
+        for d, s in zip(self.cache["layers"], state["layers"]):
+            nd = dict(d)
+            nd.update(s)
+            merged.append(nd)
+        self.cache = {"layers": tuple(merged)}

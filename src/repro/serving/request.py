@@ -25,6 +25,9 @@ class Request:
     arrival: float = 0.0               # submit time (clock units)
     eos_token: int = -1                # -1 = never stop early
     aux_embed: Optional[np.ndarray] = None
+    prefix_id: str = ""                # shared-prompt handle: requests with
+    # the same (prefix_id, adapter) and identical leading tokens share the
+    # full KV blocks of that prefix by refcount (paged layout only)
 
     state: State = State.WAITING
     output: List[int] = dataclasses.field(default_factory=list)

@@ -5,12 +5,19 @@ the prefill bucket and (b) how many fine-tuning microbatch rows to co-run.
 The fine-tuning budget shrinks as inference load rises (decode occupancy +
 queue pressure) and recovers when load drops — the paper's Figure-5
 behaviour ("the fine-tuning task makes concessions for the inference task").
+
+Admission is a *memory* budget, not a slot count: under the paged KV layout
+a request is admitted only if its projected block need (prompt + max new
+tokens, in ``block_size`` units) fits the free pool, so short requests keep
+flowing when long ones would have pinned whole dense rows.  The dense layout
+degenerates to the old slot check (``free_blocks=None``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Callable, List, Optional
 
+from repro.serving.kvcache import projected_blocks as _projected_blocks
 from repro.serving.request import Request
 
 
@@ -30,26 +37,50 @@ class Decision:
     load: float
 
 
+def projected_blocks(r: Request, block_size: int, s_max: int) -> int:
+    """Blocks the request reserves for its whole projected life (the
+    manager's formula, on a Request)."""
+    return _projected_blocks(r.prompt_len, r.max_new_tokens, block_size,
+                             s_max)
+
+
 class Scheduler:
     def __init__(self, cfg: SchedulerConfig, capacity: int):
         self.cfg, self.capacity = cfg, capacity
 
     def decide(self, waiting: List[Request], n_active: int,
                n_free_slots: int, pf_capacity: int,
-               trainers_pending: bool) -> Decision:
+               trainers_pending: bool, *,
+               free_blocks: Optional[int] = None, total_blocks: int = 0,
+               block_size: int = 0, s_max: int = 0,
+               need_fn: Optional[Callable[[Request], int]] = None
+               ) -> Decision:
+        """``need_fn`` (paged engines) returns the blocks a request would
+        actually consume — projected blocks minus registered shared prefix
+        blocks — so the gate mirrors what admission will really reserve."""
         c = self.cfg
         admit: List[Request] = []
         budget = c.max_prefill_tokens
+        blocks_left = free_blocks
         for r in waiting:
             if len(admit) >= min(c.max_prefill_per_tick, n_free_slots,
                                  pf_capacity):
                 break
             if r.prompt_len > budget and admit:
                 break
+            if blocks_left is not None:
+                need = (need_fn(r) if need_fn is not None
+                        else projected_blocks(r, block_size, s_max))
+                if need > blocks_left:
+                    break              # memory-bound: stop admitting this tick
+                blocks_left -= need
             admit.append(r)
             budget -= r.prompt_len
 
         occupancy = n_active / max(self.capacity, 1)
+        if free_blocks is not None and total_blocks > 0:
+            occupancy = max(occupancy,
+                            1.0 - (free_blocks / total_blocks))
         queue_pressure = min(1.0, (len(waiting) - len(admit))
                              / max(c.concede_at_queue, 1))
         load = max(occupancy, queue_pressure)

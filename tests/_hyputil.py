@@ -1,0 +1,24 @@
+"""Optional-hypothesis shim: the suite must collect without hypothesis
+installed, while the property tests still run when it is available."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = settings = st = None
+
+
+def hyp(deco_thunk):
+    """Apply hypothesis decorators built by ``deco_thunk`` when the library is
+    available; otherwise replace the property test with a skip (non-property
+    tests in the module keep running)."""
+    def wrap(fn):
+        if st is None:
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            return skipped
+        for d in reversed(deco_thunk()):
+            fn = d(fn)
+        return fn
+    return wrap

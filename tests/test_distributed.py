@@ -42,7 +42,8 @@ def test_shardmap_moe_matches_single_device():
         x = jax.random.normal(ks[4], (T, d))
         y_ref, aux_ref = moe_apply(x, params, m)
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        from repro.distributed.sharding import mesh_context
+        with mesh_context(mesh):
             y, aux = jax.jit(lambda a, b: moe_apply_auto(a, b, m,
                                                          fsdp=False))(x, params)
         err = float(jnp.abs(y - y_ref).max())
@@ -76,7 +77,8 @@ def test_unified_forward_under_mesh_matches_single_device():
         ref = unified_forward(cfg, params, UnifiedBatch(pf=pf),
                               cache=init_cache(cfg, 4, 32))
         mesh = jax.make_mesh((2, 4), ("data", "model"))
-        with jax.set_mesh(mesh):
+        from repro.distributed.sharding import mesh_context
+        with mesh_context(mesh):
             got = jax.jit(lambda p, b, c: unified_forward(cfg, p, b, c))(
                 params, UnifiedBatch(pf=pf), init_cache(cfg, 4, 32))
         err = float(jnp.abs(got.pf_logits - ref.pf_logits).max())

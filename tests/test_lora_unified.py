@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyputil import given, hyp as _hyp, settings, st
 
 from repro.configs import get_reduced
 from repro.core.lora import (LoRAConfig, dense, lora_apply_ref,
@@ -16,8 +17,8 @@ from repro.models.stream import DECBatch, FTBatch, PFBatch, UnifiedBatch
 LCFG = LoRAConfig(n_slots=4, r=4)
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 1000), T=st.integers(1, 40))
+@_hyp(lambda: [settings(max_examples=20, deadline=None),
+               given(seed=st.integers(0, 1000), T=st.integers(1, 40))])
 def test_lora_ref_matches_per_token_loop(seed, T):
     ks = jax.random.split(jax.random.PRNGKey(seed), 4)
     d, r, n, o = 8, 2, 3, 6

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyputil import given, hyp as _hyp, settings, st
 
 from repro.models.configs import MoEConfig
 from repro.models.mamba import causal_conv, ssd_chunked, ssd_step
@@ -20,9 +20,9 @@ def _ssd_inputs(seed, B, S, nh, hd, ds):
     return x, dt, A, Bm, Cm
 
 
-@settings(max_examples=12, deadline=None)
-@given(S=st.integers(1, 40), chunk=st.sampled_from([4, 8, 16]),
-       seed=st.integers(0, 100))
+@_hyp(lambda: [settings(max_examples=12, deadline=None),
+               given(S=st.integers(1, 40), chunk=st.sampled_from([4, 8, 16]),
+                     seed=st.integers(0, 100))])
 def test_ssd_chunked_equals_stepwise(S, chunk, seed):
     B, nh, hd, ds = 2, 3, 8, 8
     x, dt, A, Bm, Cm = _ssd_inputs(seed, B, S, nh, hd, ds)

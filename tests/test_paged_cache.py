@@ -1,0 +1,316 @@
+"""Paged KV-cache memory layer: block allocator lifecycle, block-budget
+admission, prefix sharing + copy-on-write, paged-vs-dense numerical
+equivalence (model forward, Pallas kernel, and full engine), and the
+adapter-pool eviction that completes the unified-paging picture."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.models.model import init_cache, init_paged_cache, unified_forward
+from repro.models.schema import init_params
+from repro.models.stream import DECBatch, PFBatch, UnifiedBatch
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import BlockAllocator, PagedCacheManager
+from repro.serving.request import Request, State
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+# ------------------------------------------------------------- allocator
+def test_block_allocator_lifecycle():
+    a = BlockAllocator(8)                       # 7 usable (block 0 reserved)
+    assert a.usable == 7 and a.n_free == 7
+    bids = a.alloc_many(7)
+    assert sorted(bids) == list(range(1, 8))
+    assert a.alloc() is None and a.alloc_many(1) is None
+    a.incref(bids[0])
+    a.decref(bids[0])
+    assert a.n_free == 0                        # still held once
+    a.decref(bids[0])
+    assert a.n_free == 1                        # now returned to the pool
+    got = a.alloc()
+    assert got == bids[0] and a.ref[got] == 1
+    assert a.peak_used == 7
+
+
+def test_block_allocator_null_block_reserved():
+    a = BlockAllocator(4)
+    assert 0 not in a.alloc_many(3)
+    with pytest.raises(AssertionError):
+        a.decref(0)
+
+
+# ------------------------------------------------------------- manager
+def _mgr(capacity=4, n_blocks=0, s_max=64, bs=16):
+    cfg = get_reduced("llama3-8b")
+    return PagedCacheManager(cfg, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks)
+
+
+def test_admission_refused_when_out_of_blocks():
+    # 5 usable blocks of 16 tokens; each request projects 2 blocks
+    m = _mgr(capacity=4, n_blocks=6)
+    prompt = np.zeros((20,), np.int32)
+    s1 = m.try_admit(prompt, max_new=8)
+    s2 = m.try_admit(prompt, max_new=8)
+    assert s1 is not None and s2 is not None
+    assert m.free_blocks == 1
+    assert m.try_admit(prompt, max_new=8) is None     # needs 2, only 1 free
+    m.free(s1)
+    assert m.free_blocks == 3
+    assert m.try_admit(prompt, max_new=8) is not None  # blocks recycled
+
+
+def test_admission_refused_when_out_of_state_slots():
+    m = _mgr(capacity=1, n_blocks=32)
+    assert m.try_admit(np.zeros((4,), np.int32), 4) is not None
+    assert m.try_admit(np.zeros((4,), np.int32), 4) is None
+
+
+def test_prefix_sharing_and_copy_on_write():
+    m = _mgr(capacity=4, n_blocks=16, bs=8)
+    prompt = np.arange(20, dtype=np.int32)            # 2 full blocks + tail
+    s1 = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
+    m.register_prefix("sys", s1, prompt, adapter="a")
+    used_before = m.allocator.n_used
+    s2 = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
+    # the two full prefix blocks are shared, only the tail + growth are fresh
+    assert m.tables[s2][:2] == m.tables[s1][:2]
+    assert m.allocator.n_used == used_before + (len(m.tables[s2]) - 2)
+    shared_bid = m.tables[s2][0]
+    assert m.allocator.is_shared(shared_bid)
+    # a different adapter must NOT reuse the prefix (K/V depend on the LoRA)
+    s3 = m.try_admit(prompt, max_new=8, adapter="b", prefix_id="sys")
+    assert m.tables[s3][0] != m.tables[s1][0]
+    # copy-on-write: force a write into the shared block
+    new_bid = m.ensure_writable(s2, pos=0)
+    assert new_bid != shared_bid and m.tables[s2][0] == new_bid
+    assert not m.allocator.is_shared(new_bid)
+    assert m.tables[s1][0] == shared_bid              # owner untouched
+    # freeing both requests keeps registry blocks alive; prefix LRU-drops
+    # under pressure
+    m.free(s1), m.free(s2), m.free(s3)
+    assert m.allocator.ref[shared_bid] == 1           # registry's refcount
+    while m.try_admit(np.zeros((64,), np.int32), 0) is not None:
+        pass                                          # drain the pool
+    assert "sys" not in m.prefixes                    # prefix was shed
+
+
+def test_cow_copies_block_payload():
+    m = _mgr(capacity=2, n_blocks=8, bs=16)
+    s1 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    m.register_prefix("p", s1, np.arange(16, dtype=np.int32))
+    bid = m.tables[s1][0]
+    # write a recognizable payload into the shared block of one pool leaf
+    leaf = m.cache["layers"][0]["k"]
+    m.cache["layers"][0]["k"] = leaf.at[:, bid].set(7.0)
+    s2 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    new_bid = m.ensure_writable(s2, pos=0)
+    got = np.asarray(m.cache["layers"][0]["k"][:, new_bid])
+    np.testing.assert_array_equal(got, np.full_like(got, 7.0))
+
+
+# --------------------------------------------------- forward equivalence
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-236b",
+                                  "jamba-1.5-large-398b"])
+def test_paged_forward_matches_dense(arch):
+    """Prefill + multi-step decode through scattered, non-contiguous blocks
+    must produce the same logits as the dense row cache (attention, MLA, and
+    hybrid mamba+attention state rows)."""
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, extra = 2, 10, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + extra),
+                              0, cfg.vocab)
+    base = jnp.full((B,), -1)
+
+    def drive(cache, tables):
+        pf = PFBatch(tokens=toks[:, :S], length=jnp.full((B,), S),
+                     adapter=base, block_tables=tables)
+        out = unified_forward(cfg, params, UnifiedBatch(pf=pf), cache=cache)
+        logits, cache = [out.pf_logits], out.cache
+        for i in range(extra):
+            dec = DECBatch(tokens=toks[:, S + i], pos=jnp.full((B,), S + i),
+                           adapter=base, block_tables=tables)
+            out = unified_forward(cfg, params, UnifiedBatch(dec=dec),
+                                  cache=cache)
+            cache = out.cache
+            logits.append(out.dec_logits)
+        return logits
+
+    dense = drive(init_cache(cfg, B, 32), None)
+    # deliberately interleaved block ids: contiguity must not matter
+    tbl = jnp.asarray(np.array([[3, 1, 7, 5], [2, 6, 4, 8]], np.int32))
+    paged = drive(init_paged_cache(cfg, 9, 8, B), tbl)
+    for a, b in zip(dense, paged):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------- engine equivalence
+def _engine(cfg, paged, seed=0, **kw):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    store.load_random("serve", jax.random.PRNGKey(seed + 2))
+    return UnifiedEngine(MixedLoraModel(cfg, params, store),
+                         EngineConfig(capacity=4, pf_capacity=2, s_max=64,
+                                      virtual_time=True, paged=paged, **kw))
+
+
+def _reqs(cfg, n=6, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, rng.integers(
+                        4, 20)).astype(np.int32),
+                    adapter="serve", max_new_tokens=5, arrival=0.2 * i)
+            for i in range(n)]
+
+
+def test_engine_paged_matches_dense_outputs():
+    """Greedy decoding through the paged engine must produce token-for-token
+    the same outputs as the dense engine on the same request stream."""
+    cfg = get_reduced("llama3-8b")
+    eng_d = _engine(cfg, paged=False)
+    eng_p = _engine(cfg, paged=True, block_size=16)
+    for eng in (eng_d, eng_p):
+        for r in _reqs(cfg):
+            eng.submit(r)
+        eng.run(max_ticks=5000)
+        assert len(eng.finished) == 6
+    out_d = {r.rid: r.output for r in eng_d.finished}
+    out_p = {r.rid: r.output for r in eng_p.finished}
+    assert out_d == out_p
+
+
+def test_engine_prefix_sharing_reduces_block_usage():
+    cfg = get_reduced("llama3-8b")
+    sys_prompt = np.arange(32, dtype=np.int32)
+
+    def mk(n, prefix):
+        rng = np.random.default_rng(0)
+        return [Request(rid=i,
+                        prompt=np.concatenate([sys_prompt, rng.integers(
+                            0, cfg.vocab, 8).astype(np.int32)]),
+                        adapter="serve", max_new_tokens=4,
+                        prefix_id=prefix) for i in range(n)]
+
+    eng_shared = _engine(cfg, paged=True, block_size=16)
+    for r in mk(4, "sys"):
+        eng_shared.submit(r)
+    eng_shared.run(max_ticks=5000)
+    eng_plain = _engine(cfg, paged=True, block_size=16)
+    for r in mk(4, ""):
+        eng_plain.submit(r)
+    eng_plain.run(max_ticks=5000)
+    assert len(eng_shared.finished) == len(eng_plain.finished) == 4
+    assert (eng_shared.cachemgr.allocator.peak_used
+            < eng_plain.cachemgr.allocator.peak_used)
+    # shared and unshared prefixes decode identically (same params/seed)
+    assert ({r.rid: r.output for r in eng_shared.finished}
+            == {r.rid: r.output for r in eng_plain.finished})
+
+
+def test_prefix_shedding_skips_unreclaimable_registrations():
+    """Dropping a prefix whose blocks are all held by active consumers frees
+    nothing — the shed loop must keep such registrations (the sharing
+    metadata stays useful) and admission must simply refuse."""
+    m = _mgr(capacity=8, n_blocks=5, bs=16)           # 4 usable blocks
+    prompt = np.arange(32, dtype=np.int32)            # 2 full blocks
+    s1 = m.try_admit(prompt, max_new=0, prefix_id="hot")
+    m.register_prefix("hot", s1, prompt)
+    s2 = m.try_admit(prompt, max_new=0, prefix_id="hot")  # shares, ref=3
+    assert m.tables[s2] == m.tables[s1]
+    m.free(s1)                                        # consumer s2 remains
+    # pool: 2 shared blocks (ref=2) + 2 free; a 3-block request must refuse
+    # WITHOUT destroying the still-consumed "hot" registration
+    assert m.try_admit(np.arange(48, dtype=np.int32), 0) is None
+    assert "hot" in m.prefixes
+    m.free(s2)                                        # now only registry holds
+    assert m.try_admit(np.arange(48, dtype=np.int32), 0) is not None
+    assert "hot" not in m.prefixes                    # shed once reclaimable
+
+
+def test_prefix_registry_does_not_starve_admission():
+    """Registry-held prefix blocks must be shed under pressure, not wedge
+    the admission gate: a stream of distinct prefix_ids each leaving blocks
+    refcounted in the registry must keep being admitted."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, paged=True, block_size=16, n_blocks=17)  # 16 usable
+    rng = np.random.default_rng(1)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 32)
+                    .astype(np.int32), adapter="serve", max_new_tokens=4,
+                    prefix_id=f"sys{i}", arrival=0.5 * i)
+            for i in range(10)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=3000)
+    assert len(eng.finished) == 10
+    assert all(r.state is State.DONE for r in eng.finished)
+
+
+def test_cow_leaves_state_rows_untouched():
+    """Copy-on-write is a pool-block copy: on hybrid models the dense state
+    rows (SSM/conv state, indexed by request slot, not block id) must not be
+    rewritten."""
+    cfg = get_reduced("jamba-1.5-large-398b")
+    m = PagedCacheManager(cfg, 2, 2, 64, block_size=16, n_blocks=8)
+    s1 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    m.register_prefix("p", s1, np.arange(16, dtype=np.int32))
+    # paint every state row so any stray write is visible
+    for i, d in enumerate(m.cache["layers"]):
+        for k in d:
+            if k in ("h", "conv_x", "conv_bc"):
+                m.cache["layers"][i][k] = d[k] + 3.0
+    before = {k: np.asarray(v) for k, v in enumerate(
+        [d.get("h") for d in m.cache["layers"]]) if v is not None}
+    s2 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    new_bid = m.ensure_writable(s2, pos=0)
+    assert new_bid != m.tables[s1][0]
+    after = {k: np.asarray(v) for k, v in enumerate(
+        [d.get("h") for d in m.cache["layers"]]) if v is not None}
+    for k in before:
+        np.testing.assert_array_equal(before[k], after[k])
+
+
+# ------------------------------------------------------- adapter eviction
+def test_adapter_store_lru_eviction_and_reload():
+    cfg = get_reduced("llama3-8b")
+    store = AdapterStore(cfg, LoRAConfig(n_slots=2, r=4),
+                         jax.random.PRNGKey(0))
+    store.load_random("a", jax.random.PRNGKey(1), scale=1.25)
+    store.load_random("b", jax.random.PRNGKey(2))
+    ref_a = jax.tree_util.tree_map(np.asarray, store.get_adapter("a"))
+    store.acquire("a")                               # a is now most recent
+    with pytest.raises(RuntimeError):
+        store.load_random("c", jax.random.PRNGKey(3))   # strict load raises
+    store.load("c", store.get_adapter("a"), evict=True)
+    assert "b" in store.voided and "b" not in store.resident
+    assert store.evictions == 1
+    # voided adapter transparently reloads (evicting the LRU idle one)
+    store.acquire("b")
+    assert "b" in store.resident and store.reloads == 1
+    # a round-trip through eviction preserves the adapter payload exactly
+    back_a = store.acquire("a")
+    got = jax.tree_util.tree_map(np.asarray, store.get_adapter("a"))
+    for x, y in zip(jax.tree_util.tree_leaves(ref_a),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(x, y)
+    assert float(store.scale[back_a]) == 1.25
+
+
+def test_adapter_store_pin_and_retain_block_eviction():
+    cfg = get_reduced("llama3-8b")
+    store = AdapterStore(cfg, LoRAConfig(n_slots=2, r=4),
+                         jax.random.PRNGKey(0))
+    store.load_random("train", jax.random.PRNGKey(1))
+    store.load_random("serve", jax.random.PRNGKey(2))
+    store.pin("train")
+    store.retain("serve")
+    with pytest.raises(RuntimeError):
+        store.load("x", store.get_adapter("serve"), evict=True)
+    store.release("serve")
+    store.load("x", store.get_adapter("serve"), evict=True)
+    assert "serve" in store.voided and "train" in store.resident

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyputil import given, hyp as _hyp, settings, st
 
 from repro.configs import get_reduced
 from repro.core import flow
@@ -24,9 +24,11 @@ LCFG = LoRAConfig(n_slots=4, r=4)
 
 
 # ---------------------------------------------------------------- flow planner
-@settings(max_examples=30, deadline=None)
-@given(lens=st.lists(st.integers(1, 60), min_size=1, max_size=9),
-       block_t=st.sampled_from([4, 8, 16]), seed=st.integers(0, 99))
+@_hyp(lambda: [settings(max_examples=30, deadline=None),
+               given(lens=st.lists(st.integers(1, 60), min_size=1,
+                                   max_size=9),
+                     block_t=st.sampled_from([4, 8, 16]),
+                     seed=st.integers(0, 99))])
 def test_flow_planner_alignment_property(lens, block_t, seed):
     rng = np.random.default_rng(seed)
     fcfg = flow.FlowConfig(block_t=block_t)
@@ -69,8 +71,8 @@ def test_masked_adamw_isolation_and_correctness():
     assert list(np.asarray(new_s.t)) == [1, 0, 1]
 
 
-@settings(max_examples=15, deadline=None)
-@given(seed=st.integers(0, 100))
+@_hyp(lambda: [settings(max_examples=15, deadline=None),
+               given(seed=st.integers(0, 100))])
 def test_adamw_sequential_masks_commute(seed):
     """Updating slot A then slot B == updating both with separate masks, when
     gradients are identical (per-slot moments are independent)."""
