@@ -7,7 +7,8 @@ import traceback
 
 from benchmarks import (bench_finetune, bench_inference, bench_kernels,
                         bench_loading, bench_mutable, bench_paged,
-                        bench_realworld, bench_roofline, bench_unified)
+                        bench_realworld, bench_roofline, bench_spec,
+                        bench_unified)
 
 TABLES = [
     ("table2_loading", bench_loading.main),
@@ -19,6 +20,7 @@ TABLES = [
     ("kernels_micro", bench_kernels.main),
     ("roofline_table", bench_roofline.main),
     ("paged_cache", bench_paged.main),
+    ("spec_decode", bench_spec.main),
 ]
 
 

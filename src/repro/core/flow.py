@@ -125,24 +125,30 @@ def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
 
 
 def plan_dec(tokens: np.ndarray, pos: np.ndarray, slots: np.ndarray,
-             tables: Optional[np.ndarray] = None) -> Optional[DECBatch]:
+             tables: Optional[np.ndarray] = None,
+             lengths: Optional[np.ndarray] = None) -> Optional[DECBatch]:
+    """``tokens`` is [Bd] for plain decode or [Bd, Sd] for speculative
+    verify chunks; ``lengths`` gives each row's valid chunk length."""
     if len(tokens) == 0:
         return None
     return DECBatch(tokens=jnp.asarray(tokens, jnp.int32),
                     pos=jnp.asarray(pos, jnp.int32),
                     adapter=jnp.asarray(slots, jnp.int32),
                     block_tables=(jnp.asarray(tables, jnp.int32)
-                                  if tables is not None else None))
+                                  if tables is not None else None),
+                    length=(jnp.asarray(lengths, jnp.int32)
+                            if lengths is not None else None))
 
 
 def assemble(ft_rows: List[FTRow], pf_reqs: List[PFReq],
              dec_tokens: np.ndarray, dec_pos: np.ndarray,
              dec_slots: np.ndarray, fcfg: FlowConfig,
-             dec_tables: Optional[np.ndarray] = None) -> UnifiedBatch:
+             dec_tables: Optional[np.ndarray] = None,
+             dec_lens: Optional[np.ndarray] = None) -> UnifiedBatch:
     return UnifiedBatch(ft=plan_ft(ft_rows, fcfg),
                         pf=plan_pf(pf_reqs, fcfg),
                         dec=plan_dec(dec_tokens, dec_pos, dec_slots,
-                                     dec_tables))
+                                     dec_tables, dec_lens))
 
 
 def token_adapter_ids(batch: UnifiedBatch) -> np.ndarray:
@@ -155,7 +161,9 @@ def token_adapter_ids(batch: UnifiedBatch) -> np.ndarray:
         Bp, Sp = batch.pf.tokens.shape
         ids.append(np.repeat(np.asarray(batch.pf.adapter), Sp))
     if batch.dec is not None:
-        ids.append(np.asarray(batch.dec.adapter))
+        tok = np.asarray(batch.dec.tokens)
+        Sd = tok.shape[1] if tok.ndim == 2 else 1
+        ids.append(np.repeat(np.asarray(batch.dec.adapter), Sd))
     return np.concatenate(ids) if ids else np.zeros((0,), np.int32)
 
 

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.configs import ModelConfig
-from repro.models.model import unified_forward
+from repro.models.model import _paged_kernel_mode, unified_forward
 from repro.models.stream import ModelOut, UnifiedBatch
 from repro.training.optimizer import AdamWConfig, AdamWState, adamw_apply
 
@@ -55,8 +55,10 @@ def make_forward_step(cfg: ModelConfig, *, remat: bool = False,
                       jit: bool = True, _jit_now: bool = False) -> Callable:
     """Inference-only unified step (serve/prefill/decode/eval)."""
     if jit:
+        # the paged-attention backend flag is read at trace time inside the
+        # forward — key the cache on it so flag flips don't hit stale steps
         return _cached("fwd", (cfg, remat, attn_chunk, donate_cache,
-                               return_ft_logits),
+                               return_ft_logits, _paged_kernel_mode()),
                        lambda: make_forward_step(
                            cfg, remat=remat, attn_chunk=attn_chunk,
                            donate_cache=donate_cache,
@@ -79,7 +81,7 @@ def make_grad_step(cfg: ModelConfig, *, remat: bool = False,
                    attn_chunk: int = 0) -> Callable:
     """Unified step with gradients w.r.t. the LoRA bank (no update) — used by
     the engine's accumulation loop."""
-    key = ("grad", cfg, remat, attn_chunk)
+    key = ("grad", cfg, remat, attn_chunk, _paged_kernel_mode())
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
 

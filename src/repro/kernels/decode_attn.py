@@ -202,3 +202,106 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         out_shape=jax.ShapeDtypeStruct((B, h, hd), q.dtype),
         interpret=interpret,
     )(tbl, pos.astype(jnp.int32), q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# verify variant: chunked query over block tables — the speculative-decoding
+# attention.  Each request contributes Sq = 1 + k query tokens (current token
+# + drafts) at positions pos .. pos + Sq - 1; the online softmax streams the
+# same block walk as batch decode but scores an [Sq, bs] tile per block, so
+# verifying k drafts costs one cache pass instead of k sequential decodes.
+# ---------------------------------------------------------------------------
+
+def _paged_verify_kernel(tbl_ref, pos_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *, bs: int, nbt: int,
+                         sq: int, scale: float):
+    b = pl.program_id(0)
+    ib = pl.program_id(2)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]                                      # [sq, hd]
+    k = k_ref[0, :, 0, :]                                      # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    pos, ln = pos_ref[b], len_ref[b]
+    j = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (sq, bs), 1)
+    qi = pos + jax.lax.broadcasted_iota(jnp.int32, (sq, bs), 0)
+    # causal within the chunk, valid through the chunk's written length
+    # (null-padded table rows exceed pos + ln and fail this too)
+    mask = (j <= qi) & (j < pos + ln)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [sq,bs]
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[...] = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ib == nbt - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_verify_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           pos: jax.Array, lens: jax.Array, *,
+                           interpret: bool = False) -> jax.Array:
+    """Speculative verify attention over a paged KV pool.
+
+    q: [B, Sq, h, hd] chunk queries (current token + drafts, already roped);
+    k_pool/v_pool: [n_blocks, bs, g, hd] flat block pool — the chunk's own
+        K/V must already be written at positions ``pos .. pos + lens - 1``;
+    block_tables: [B, nbt] int32 per-request block ids, null-padded;
+    pos: [B] int32 chunk start positions (= cache length before the chunk);
+    lens: [B] int32 valid chunk lengths (1 = plain decode row, 0 = padding —
+        such rows produce zeros).  Returns [B, Sq, h, hd].
+
+    Grid (B, h, nbt): identical block walk to ``paged_decode_attention``,
+    but each step scores all Sq chunk queries against the streamed block —
+    the time-axis analogue of batching more requests per launch.
+    """
+    B, Sq, h, hd = q.shape
+    bs, g = k_pool.shape[1], k_pool.shape[2]
+    m = h // g
+    nbt = block_tables.shape[1]
+    tbl = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    scale = hd ** -0.5
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, h, nbt),
+        in_specs=[
+            pl.BlockSpec((1, Sq, 1, hd),
+                         lambda b, hq, ib, T_, P_, L_: (b, 0, hq, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, hq, ib, T_, P_, L_:
+                         (T_[b, ib], 0, hq // m, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, hq, ib, T_, P_, L_:
+                         (T_[b, ib], 0, hq // m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, 1, hd),
+                               lambda b, hq, ib, T_, P_, L_: (b, 0, hq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq, hd), jnp.float32),
+            pltpu.VMEM((Sq,), jnp.float32),
+            pltpu.VMEM((Sq,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_verify_kernel, bs=bs, nbt=nbt, sq=Sq,
+                             scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, h, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, pos.astype(jnp.int32), lens.astype(jnp.int32), q, k_pool, v_pool)

@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--rps", type=float, default=2.0)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--finetune", action="store_true")
+    ap.add_argument("--spec", type=int, default=0, metavar="K",
+                    help="speculative decoding with up to K drafted tokens "
+                         "per step (prompt-lookup drafter; exact greedy)")
     ap.add_argument("--wall-clock", action="store_true",
                     help="real time instead of the calibrated virtual clock")
     ap.add_argument("--seed", type=int, default=0)
@@ -46,9 +49,13 @@ def main():
         store.load_random(name, jax.random.PRNGKey(100 + i))
         names.append(name)
     model = MixedLoraModel(cfg, params, store)
+    spec = None
+    if args.spec > 0:
+        from repro.spec import SpecConfig
+        spec = SpecConfig(k_max=args.spec, drafter="ngram")
     eng = UnifiedEngine(model, EngineConfig(
         capacity=8, pf_capacity=4, s_max=256,
-        virtual_time=not args.wall_clock))
+        virtual_time=not args.wall_clock, spec=spec))
 
     rng = np.random.default_rng(args.seed)
     aux = None
@@ -80,6 +87,9 @@ def main():
     print(f"arch={cfg.name} requests={args.requests} rps={args.rps} "
           f"finished={len(eng.finished)} SLO={att:.3f}")
     print(f"rates={m.rates()}")
+    if args.spec > 0:
+        print(f"spec: drafted={m.spec_drafted} accepted={m.spec_accepted} "
+              f"acceptance={m.acceptance_rate:.2f} steps={m.steps}")
     if args.finetune:
         tr = eng.trainers[names[0]]
         print(f"finetune: tokens={tr.tokens_trained} "

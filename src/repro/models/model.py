@@ -34,9 +34,14 @@ class _Plan:
         self.ft, self.pf, self.dec = ft, pf, dec
         self.Bf, self.Sf = (ft.tokens.shape if ft is not None else (0, 0))
         self.Bp, self.Sp = (pf.tokens.shape if pf is not None else (0, 0))
-        self.Bd = dec.tokens.shape[0] if dec is not None else 0
+        # decode bucket: [Bd] plain decode or [Bd, Sd] verify chunks
+        if dec is not None:
+            self.Bd = dec.tokens.shape[0]
+            self.Sd = dec.tokens.shape[1] if dec.tokens.ndim == 2 else 1
+        else:
+            self.Bd, self.Sd = 0, 1
         self.Bc = self.Bd + self.Bp          # cache rows: dec first, then pf
-        sizes = [self.Bf * self.Sf, self.Bp * self.Sp, self.Bd]
+        sizes = [self.Bf * self.Sf, self.Bp * self.Sp, self.Bd * self.Sd]
         self.sizes = sizes
         self.T = sum(sizes)
         ids = []
@@ -45,7 +50,7 @@ class _Plan:
         if pf is not None:
             ids.append(jnp.repeat(pf.adapter, self.Sp))
         if dec is not None:
-            ids.append(dec.adapter)
+            ids.append(jnp.repeat(dec.adapter, self.Sd))
         self.ids = jnp.concatenate(ids) if ids else None
         if lora_scale is not None and self.ids is not None:
             n = lora_scale.shape[0]
@@ -64,17 +69,23 @@ class _Plan:
             self.pf_valid = ar[None, :] < pf.length[:, None]
         if dec is not None:
             self.dec_pos = dec.pos
+            # per-query positions of the (1 + k)-token chunk, and per-row
+            # valid chunk lengths (trailing draft slots may be padding)
+            ard = jnp.arange(self.Sd, dtype=jnp.int32)
+            self.dec_qpos = dec.pos[:, None] + ard[None, :]
+            self.dec_len = (dec.length if dec.length is not None
+                            else jnp.full((self.Bd,), self.Sd, jnp.int32))
         # paged-layout block tables (None -> dense row layout per bucket)
         self.pf_tables = pf.block_tables if pf is not None else None
         self.dec_tables = dec.block_tables if dec is not None else None
 
     def split(self, x: jax.Array):
-        """[T, ...] -> (xf [Bf,Sf,...], xp [Bp,Sp,...], xd [Bd,1,...])"""
+        """[T, ...] -> (xf [Bf,Sf,...], xp [Bp,Sp,...], xd [Bd,Sd,...])"""
         t0, t1, _ = self.sizes
         rest = x.shape[1:]
         xf = x[:t0].reshape(self.Bf, self.Sf, *rest) if t0 else None
         xp = x[t0:t0 + t1].reshape(self.Bp, self.Sp, *rest) if t1 else None
-        xd = x[t0 + t1:].reshape(self.Bd, 1, *rest) if self.Bd else None
+        xd = x[t0 + t1:].reshape(self.Bd, self.Sd, *rest) if self.Bd else None
         return xf, xp, xd
 
 def _merge_flat(plan: _Plan, xf, xp, xd) -> jax.Array:
@@ -225,6 +236,25 @@ def _paged_write_token(pool: jax.Array, xh: jax.Array, tables: jax.Array,
     return pool.at[bid, pos % bs].set(xh.astype(pool.dtype))
 
 
+def _paged_write_chunk(pool: jax.Array, xh: jax.Array, tables: jax.Array,
+                       pos: jax.Array, length: jax.Array) -> jax.Array:
+    """Scatter a verify chunk ``[Bd, Sd, ...]`` into pool blocks: row ``b``'s
+    token ``j`` lands at position ``pos[b] + j``; positions at or beyond
+    ``length[b]`` (padding / unfilled draft slots) are redirected to the null
+    block so they cannot corrupt live cache state."""
+    bs = pool.shape[1]
+    Bd, Sd = xh.shape[:2]
+    tbl = jnp.maximum(tables, 0)
+    j = jnp.arange(Sd, dtype=jnp.int32)[None, :]
+    p = pos[:, None].astype(jnp.int32) + j                     # [Bd, Sd]
+    valid = j < length[:, None]
+    bi = jnp.clip(p // bs, 0, tbl.shape[1] - 1)
+    bid = jnp.where(valid, jnp.take_along_axis(tbl, bi, axis=1), 0)
+    flat = xh.reshape(Bd * Sd, *xh.shape[2:])
+    return pool.at[bid.reshape(-1), (p % bs).reshape(-1)].set(
+        flat.astype(pool.dtype))
+
+
 def _paged_view(pool: jax.Array, tables: jax.Array) -> jax.Array:
     """Gather per-request contiguous K/V views ``[Bd, nbt*bs, ...]`` — the
     jnp reference of what kernels.decode_attn.paged_decode_attention streams
@@ -244,6 +274,29 @@ def _paged_dec_mask(tables: jax.Array, block_size: int,
     k_pos = jnp.broadcast_to(j, (Bd, nbt * block_size))
     k_valid = j <= pos[:, None]
     return k_pos, k_valid
+
+
+def _paged_chunk_mask(tables: jax.Array, block_size: int, pos: jax.Array,
+                      length: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(k_pos, k_valid) for a verify chunk: after the chunk write the cache
+    holds positions ``0 .. pos + length - 1``; within-chunk causality comes
+    from the attention mask's q_pos/k_pos comparison."""
+    Bd, nbt = tables.shape
+    j = jnp.arange(nbt * block_size, dtype=jnp.int32)[None, :]
+    k_pos = jnp.broadcast_to(j, (Bd, nbt * block_size))
+    k_valid = j < pos[:, None] + length[:, None]
+    return k_pos, k_valid
+
+
+def _paged_kernel_mode() -> str:
+    """Paged decode-attention backend flag (ROADMAP item): empty = jnp
+    gather view (interpret-mode reference, the CPU default); ``interpret`` =
+    Pallas kernel in interpret mode (CI-testable); anything else (``1`` /
+    ``tpu``) = compiled Pallas kernel (real-TPU path).  Read at trace time —
+    step builders key their compile cache on it."""
+    import os
+    v = os.environ.get("REPRO_PAGED_ATTN_KERNEL", "").strip().lower()
+    return "" if v in ("", "0", "off", "false") else v
 
 
 def _dec_cache_pos(pos: jax.Array, sc: int) -> Tuple[jax.Array, jax.Array]:
@@ -314,31 +367,48 @@ def _attn_apply(cfg: ModelConfig, pos_idx: int, p: Dict, lr: Dict,
                     sl = (jnp.arange(plan.Sp - sc, plan.Sp) % sc)
                     new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, sl].set(kh[:, -sc:])
                     new_cache["v"] = new_cache["v"].at[Bd:Bd + plan.Bp, sl].set(vh[:, -sc:])
-        if qd is not None:       # decode: one token over the cache
-            dpos = plan.dec_pos[:, None]
-            qh = _rope_heads(qd, dpos, h, cfg.rope_theta)
-            kh = _rope_heads(kd, dpos, kv, cfg.rope_theta)[:, 0]
-            vh = vd.reshape(plan.Bd, kv, hd)
+        if qd is not None:       # decode / verify: (1 + k)-token chunk
+            Sd = plan.Sd
+            dpos = plan.dec_qpos                               # [Bd, Sd]
+            qh = _rope_heads(qd, dpos, h, cfg.rope_theta)      # [Bd,Sd,h,hd]
+            kh = _rope_heads(kd, dpos, kv, cfg.rope_theta)
+            vh = vd.reshape(plan.Bd, Sd, kv, hd)
             if plan.dec_tables is not None:  # paged: block-table gather
-                ck = _paged_write_token(new_cache["k"], kh, plan.dec_tables,
-                                        plan.dec_pos)
-                cv = _paged_write_token(new_cache["v"], vh, plan.dec_tables,
-                                        plan.dec_pos)
+                ck = _paged_write_chunk(new_cache["k"], kh, plan.dec_tables,
+                                        plan.dec_pos, plan.dec_len)
+                cv = _paged_write_chunk(new_cache["v"], vh, plan.dec_tables,
+                                        plan.dec_pos, plan.dec_len)
                 new_cache["k"], new_cache["v"] = ck, cv
-                k_pos, k_valid = _paged_dec_mask(plan.dec_tables, ck.shape[1],
-                                                 plan.dec_pos)
-                outs[2] = L.attention(qh, _paged_view(ck, plan.dec_tables),
-                                      _paged_view(cv, plan.dec_tables),
-                                      q_pos=dpos, k_pos=k_pos,
-                                      k_valid=k_valid, causal=True, window=0)
+                mode = _paged_kernel_mode()
+                if mode and Sd == 1:
+                    # real-TPU path: block tables walked by the DMA engine
+                    from repro.kernels.decode_attn import \
+                        paged_decode_attention
+                    o = paged_decode_attention(
+                        qh[:, 0], ck, cv, plan.dec_tables, plan.dec_pos,
+                        interpret=(mode == "interpret"))
+                    outs[2] = o[:, None]
+                else:
+                    k_pos, k_valid = _paged_chunk_mask(
+                        plan.dec_tables, ck.shape[1], plan.dec_pos,
+                        plan.dec_len)
+                    outs[2] = L.attention(
+                        qh, _paged_view(ck, plan.dec_tables),
+                        _paged_view(cv, plan.dec_tables), q_pos=dpos,
+                        k_pos=k_pos, k_valid=k_valid, causal=True, window=0)
             else:
+                if Sd > 1 and W > 0:
+                    raise NotImplementedError(
+                        "verify chunks need a non-rolling cache: rolled-back "
+                        "draft positions would alias live window slots")
                 sc = cache["k"].shape[1]
-                slot = plan.dec_pos % sc
-                rows = jnp.arange(plan.Bd)
+                slot = dpos % sc                               # [Bd, Sd]
+                rows = jnp.arange(plan.Bd)[:, None]
                 ck = new_cache["k"].at[rows, slot].set(kh)
                 cv = new_cache["v"].at[rows, slot].set(vh)
                 new_cache["k"], new_cache["v"] = ck, cv
-                k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
+                k_pos, k_valid = _dec_cache_pos(
+                    plan.dec_pos + plan.dec_len - 1, sc)
                 outs[2] = L.attention(qh, ck[:Bd], cv[:Bd],
                                       q_pos=dpos, k_pos=k_pos,
                                       k_valid=k_valid, causal=True, window=0)
@@ -407,32 +477,38 @@ def _mla_apply(cfg: ModelConfig, p: Dict, lr: Dict, plan: _Plan,
                 new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, sl].set(ckv[:, -sc:])
                 new_cache["kpe"] = new_cache["kpe"].at[Bd:Bd + plan.Bp, sl].set(kpe[:, -sc:])
     if qd is not None:
-        dpos = plan.dec_pos[:, None]
-        qn, qr = _split_q(qd, plan.Bd, 1)
+        Sd = plan.Sd
+        dpos = plan.dec_qpos                                   # [Bd, Sd]
+        qn, qr = _split_q(qd, plan.Bd, Sd)
         qr = L.rope(qr, dpos, cfg.rope_theta)
         ckv, kpe = _split_c(cd)
         kpe = L.rope(kpe[..., None, :], dpos, cfg.rope_theta)[..., 0, :]
         if plan.dec_tables is not None:      # paged: block-table gather
-            cc = _paged_write_token(new_cache["ckv"], ckv[:, 0],
-                                    plan.dec_tables, plan.dec_pos)
-            ce = _paged_write_token(new_cache["kpe"], kpe[:, 0],
-                                    plan.dec_tables, plan.dec_pos)
+            cc = _paged_write_chunk(new_cache["ckv"], ckv, plan.dec_tables,
+                                    plan.dec_pos, plan.dec_len)
+            ce = _paged_write_chunk(new_cache["kpe"], kpe, plan.dec_tables,
+                                    plan.dec_pos, plan.dec_len)
             new_cache["ckv"], new_cache["kpe"] = cc, ce
-            k_pos, k_valid = _paged_dec_mask(plan.dec_tables, cc.shape[1],
-                                             plan.dec_pos)
+            k_pos, k_valid = _paged_chunk_mask(plan.dec_tables, cc.shape[1],
+                                               plan.dec_pos, plan.dec_len)
             outs[2] = L.mla_attention(qn, qr, _paged_view(cc, plan.dec_tables),
                                       _paged_view(ce, plan.dec_tables),
                                       p["wuk"], p["wuv"], q_pos=dpos,
                                       k_pos=k_pos, k_valid=k_valid,
                                       causal=True, window=0)
         else:
+            if Sd > 1 and cfg.sliding_window > 0:
+                raise NotImplementedError(
+                    "verify chunks need a non-rolling cache: rolled-back "
+                    "draft positions would alias live window slots")
             sc = cache["ckv"].shape[1]
-            slot = plan.dec_pos % sc
-            rows = jnp.arange(plan.Bd)
-            cc = new_cache["ckv"].at[rows, slot].set(ckv[:, 0])
-            ce = new_cache["kpe"].at[rows, slot].set(kpe[:, 0])
+            slot = dpos % sc
+            rows = jnp.arange(plan.Bd)[:, None]
+            cc = new_cache["ckv"].at[rows, slot].set(ckv)
+            ce = new_cache["kpe"].at[rows, slot].set(kpe)
             new_cache["ckv"], new_cache["kpe"] = cc, ce
-            k_pos, k_valid = _dec_cache_pos(plan.dec_pos, sc)
+            k_pos, k_valid = _dec_cache_pos(plan.dec_pos + plan.dec_len - 1,
+                                            sc)
             outs[2] = L.mla_attention(qn, qr, cc[:Bd], ce[:Bd], p["wuk"],
                                       p["wuv"], q_pos=dpos, k_pos=k_pos,
                                       k_valid=k_valid, causal=True, window=0)
@@ -480,7 +556,7 @@ def _cross_apply(cfg: ModelConfig, p: Dict, lr: Dict, plan: _Plan,
         new_cache["xv"] = new_cache["xv"].at[Bd:Bd + plan.Bp].set(vx)
     if qd is not None:
         kx, vx = cache["xk"][:Bd], cache["xv"][:Bd]
-        outs[2] = _xattn(qd, kx, vx, plan.dec_pos[:, None])
+        outs[2] = _xattn(qd, kx, vx, plan.dec_qpos)
     o = _merge_flat(plan, *outs)
     o = dn(o, p["xwo"], None, lr.get("xwo"))
     if "xgate" in p:
@@ -544,6 +620,10 @@ def _mamba_apply(cfg: ModelConfig, p: Dict, lr: Dict, plan: _Plan,
         new_cache["conv_x"] = new_cache["conv_x"].at[Bd:Bd + plan.Bp].set(cx_fin)
         new_cache["conv_bc"] = new_cache["conv_bc"].at[Bd:Bd + plan.Bp].set(cbc_fin)
     if zd is not None:
+        if plan.Sd > 1:
+            raise NotImplementedError(
+                "mamba decode state cannot roll back rejected drafts; "
+                "speculative verify chunks are attention-only")
         B = plan.Bd
         y_x, cx_new = M.causal_conv(xd, p["conv_x"], p["conv_bx"],
                                     cache["conv_x"][:Bd])
@@ -673,7 +753,7 @@ def unified_forward(cfg: ModelConfig, params: Dict, batch: UnifiedBatch,
     if batch.pf is not None:
         toks.append(batch.pf.tokens.reshape(-1))
     if batch.dec is not None:
-        toks.append(batch.dec.tokens)
+        toks.append(batch.dec.tokens.reshape(-1))
     tokens = jnp.concatenate(toks)
     x = params["embed"].astype(dtype)[tokens]                     # [T, d]
 
@@ -727,7 +807,9 @@ def unified_forward(cfg: ModelConfig, params: Dict, batch: UnifiedBatch,
     xf, xp, xd = plan.split(x)
     ft_loss = ft_cnt = ft_logits = pf_logits = dec_logits = None
     if xd is not None:
-        dec_logits = xd[:, 0] @ head
+        # [Bd, V] for plain decode; [Bd, Sd, V] for verify chunks (one
+        # next-token distribution per chunk position, the acceptance oracle)
+        dec_logits = xd[:, 0] @ head if plan.Sd == 1 else xd @ head
     if xp is not None:
         last = jnp.maximum(batch.pf.length - 1, 0)
         h_last = xp[jnp.arange(plan.Bp), last]

@@ -33,10 +33,18 @@ class PFBatch(NamedTuple):
 
 
 class DECBatch(NamedTuple):
-    tokens: Array                    # [Bd] int32 current tokens
-    pos: Array                       # [Bd] int32 positions (= cache length)
+    """Decode/verify bucket.  ``tokens`` is ``[Bd]`` for plain one-token
+    decode, or ``[Bd, Sd]`` for the speculative *verify* chunk: each row
+    carries its current token plus up to ``Sd - 1`` drafted tokens, verified
+    in ONE forward (the prefill varlen idea applied along the time axis).
+    ``length`` gives each row's real chunk length (1 = plain decode row,
+    0 = padding row); trailing positions are inert (writes land on the null
+    block under the paged layout)."""
+    tokens: Array                    # [Bd] or [Bd, Sd] int32
+    pos: Array                       # [Bd] int32 start positions (= cache len)
     adapter: Array                   # [Bd] int32
     block_tables: Optional[Array] = None  # [Bd, nbt] int32; None = dense
+    length: Optional[Array] = None   # [Bd] int32 valid chunk lengths
 
 
 class UnifiedBatch(NamedTuple):
@@ -50,6 +58,6 @@ class ModelOut(NamedTuple):
     ft_tok_count: Optional[Array]    # [Bf] f32 valid target tokens
     ft_logits: Optional[Array]       # [Bf, Sf, V] (only if requested)
     pf_logits: Optional[Array]       # [Bp, V] logits at last valid position
-    dec_logits: Optional[Array]      # [Bd, V]
+    dec_logits: Optional[Array]      # [Bd, V]; [Bd, Sd, V] for verify chunks
     cache: Optional[dict]
     aux_loss: Array                  # scalar (MoE load-balance etc.)

@@ -52,9 +52,16 @@ class VirtualClock:
     def advance_to(self, t: float):
         self._t = max(self._t, t)
 
-    def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int) -> float:
+    def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int,
+                  dec_extra_tokens: int = 0) -> float:
+        """``dec_extra_tokens``: drafted tokens verified alongside the
+        row's current token.  Decode is memory-bound — the row already pays
+        ``decode_per_row`` for streaming weights + cache once — so extra
+        verify queries ride that stream at compute-bound (prefill-like)
+        marginal cost.  That asymmetry is the whole speculation win."""
         c = self.cost
         if pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0:
             return 0.0
         return (c.fixed + c.prefill_per_tok * pf_tokens
-                + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens)
+                + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens
+                + c.prefill_per_tok * dec_extra_tokens)

@@ -9,7 +9,7 @@ optimizer on each trainer's accumulation boundary.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +23,9 @@ from repro.serving.clock import VirtualClock, WallClock
 from repro.serving.kvcache import CacheManager, PagedCacheManager
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
-from repro.serving.slo import Metrics, SLOConfig
+from repro.serving.slo import Metrics, SLOConfig, spread_token_times
+from repro.spec import AdaptiveK, Drafter, SpecConfig, accept_greedy, \
+    make_drafter
 from repro.training.optimizer import (AdamWConfig, adamw_init, tree_add,
                                       tree_mask_slots, tree_zeros_like)
 from repro.training.trainer import MixedLoraTrainer
@@ -44,6 +46,8 @@ class EngineConfig:
     #                                   dense rows for sliding-window models)
     block_size: int = 32              # KV tokens per block (paged layout)
     n_blocks: int = 0                 # pool size; 0 = match dense capacity
+    spec: Optional[SpecConfig] = None  # speculative decoding (paged,
+    #                                   attention-only models; exact greedy)
 
 
 class UnifiedEngine:
@@ -77,6 +81,31 @@ class UnifiedEngine:
         self.finished: List[Request] = []
         self.trainers: Dict[str, MixedLoraTrainer] = {}
         self._last_tokens = np.zeros((e.capacity,), np.int64)
+        # speculative decoding: needs rollback-able K/V (paged blocks) and a
+        # positional cache — mamba SSM state cannot un-consume drafts
+        self.spec = e.spec if (e.spec is not None and e.spec.enabled
+                               and self.paged
+                               and "mamba" not in self.cfg.pattern) else None
+        self._spec: Dict[int, Tuple[Optional[Drafter], AdaptiveK]] = {}
+
+    @property
+    def spec_headroom(self) -> int:
+        """Transient +k draft tokens each resident request may hold
+        mid-verify — charged to its block budget at admission."""
+        return self.spec.k_max if self.spec else 0
+
+    def _headroom_for(self, r: Request) -> int:
+        """Per-request draft headroom: when the +k charge would push the
+        request past the whole pool (it fits its plain projection but not
+        the inflated one), admit it with NO reserved draft room instead of
+        stranding it un-admittable — its drafts then ride the best-effort
+        overshoot path in ``grow`` and are trimmed when the pool is dry."""
+        h = self.spec_headroom
+        if h and self.cachemgr.projected_blocks(
+                r.prompt_len, r.max_new_tokens + h) \
+                > self.cachemgr.total_blocks:
+            return 0
+        return h
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -134,7 +163,8 @@ class UnifiedEngine:
                 block_size=self.cachemgr.block_size, s_max=e.s_max,
                 need_fn=lambda r: self.cachemgr.fresh_need(
                     r.prompt_len, r.max_new_tokens, r.prompt, r.adapter,
-                    self._prefix_of(r)))
+                    self._prefix_of(r), headroom=self._headroom_for(r)),
+                spec_headroom=self.spec_headroom)
         else:
             decision = self.sched.decide(self.waiting, len(self.active),
                                          self.cachemgr.n_free, e.pf_capacity,
@@ -172,7 +202,8 @@ class UnifiedEngine:
                 aslot = -1
             if self.paged:
                 slot = self.cachemgr.try_admit(r.prompt, r.max_new_tokens,
-                                               r.adapter, self._prefix_of(r))
+                                               r.adapter, self._prefix_of(r),
+                                               headroom=self._headroom_for(r))
             else:
                 slot = self.cachemgr.alloc()
             if slot is None:
@@ -181,6 +212,14 @@ class UnifiedEngine:
                 self.model.store.retain(r.adapter)
             r.dec_slot = slot
             r.state = State.PREFILL
+            if self.spec:
+                kind = ("suffix" if (self.spec.drafter == "suffix"
+                                     and r.draft_suffix is not None)
+                        else "ngram")
+                self._spec[slot] = (
+                    make_drafter(kind, ngram_n=self.spec.ngram_n,
+                                 suffix=r.draft_suffix),
+                    AdaptiveK(self.spec))
             self.waiting.remove(r)
             admitted.append(r)
             # prefill writes through write_table_of: shared prefix entries
@@ -191,19 +230,50 @@ class UnifiedEngine:
                 block_table=(self.cachemgr.write_table_of(slot)
                              if self.paged else None)))
 
-        # decode bucket (static: full table when any request is active)
+        # decode / verify bucket (static: full table when any request is
+        # active; chunk width 1 + k_max whenever speculation is on, so the
+        # bucket shape compiles once)
         use_dec = bool(self.active)
+        Sd = 1 + (self.spec.k_max if (self.spec and use_dec) else 0)
+        drafts: Dict[int, np.ndarray] = {}
+        dec_lens = None
         if use_dec:
-            dec_tokens = np.zeros((e.capacity,), np.int64)
+            dec_tokens = (np.zeros((e.capacity, Sd), np.int64) if Sd > 1
+                          else np.zeros((e.capacity,), np.int64))
             dec_pos = np.zeros((e.capacity,), np.int64)
             dec_slots = np.full((e.capacity,), -1, np.int64)
+            if Sd > 1:
+                dec_lens = np.zeros((e.capacity,), np.int64)
             for slot, r in self.active.items():
+                L = int(self.cachemgr.lens[slot])
+                draft = np.zeros((0,), np.int64)
+                if Sd > 1:
+                    drafter, ctl = self._spec[slot]
+                    # clamp drafts to what the request can still emit and
+                    # to the context limit (writes land at L .. L + k)
+                    k = min(ctl.k, r.max_new_tokens - len(r.output) - 1,
+                            e.s_max - 1 - L)
+                    if k > 0 and drafter is not None:
+                        draft = np.asarray(drafter.draft(
+                            np.concatenate([np.asarray(r.prompt, np.int64),
+                                            np.asarray(r.output, np.int64)]),
+                            k), np.int64)
                 if self.paged:
-                    # copy-on-write: the next token must land in an
-                    # exclusively-owned block (no-op unless prefix-shared)
-                    self.cachemgr.ensure_writable(slot)
-                dec_tokens[slot] = self._last_tokens[slot]
-                dec_pos[slot] = self.cachemgr.lens[slot]
+                    # grow the block table over the chunk's positions and
+                    # copy-on-write any shared block in the write range; a
+                    # dry pool only trims the transient draft tail
+                    writable = self.cachemgr.prepare_write(
+                        slot, L, 1 + len(draft))
+                    draft = draft[:max(writable - 1, 0)]
+                if Sd > 1:
+                    dec_tokens[slot, 0] = self._last_tokens[slot]
+                    if len(draft):
+                        dec_tokens[slot, 1:1 + len(draft)] = draft
+                    dec_lens[slot] = 1 + len(draft)
+                    drafts[slot] = draft
+                else:
+                    dec_tokens[slot] = self._last_tokens[slot]
+                dec_pos[slot] = L
                 dec_slots[slot] = (self.model.store.slot_of(r.adapter)
                                    if r.adapter else -1)
             dec_tables = (self.cachemgr.dec_tables(self.active)
@@ -220,7 +290,8 @@ class UnifiedEngine:
             return False
 
         batch = flow.assemble(ft_rows, pf_reqs, dec_tokens, dec_pos,
-                              dec_slots, e.flow, dec_tables=dec_tables)
+                              dec_slots, e.flow, dec_tables=dec_tables,
+                              dec_lens=dec_lens)
         cache = self.cachemgr.step_cache() if (pf_reqs or use_dec) else None
 
         store = self.model.store
@@ -239,8 +310,10 @@ class UnifiedEngine:
         # ---- time accounting ----
         pf_tok = int(sum(r.prompt_len for r in admitted))
         ft_tok = int(sum(len(r.tokens) for r in ft_rows))
+        dec_extra = int(sum(len(d) for d in drafts.values()))
         if isinstance(self.clock, VirtualClock):
-            cost = self.clock.step_cost(pf_tok, len(self.active), ft_tok)
+            cost = self.clock.step_cost(pf_tok, len(self.active), ft_tok,
+                                        dec_extra_tokens=dec_extra)
             self.clock.charge(cost)
             self.metrics.busy_time += cost
         now = self.clock.now()
@@ -281,13 +354,17 @@ class UnifiedEngine:
             for slot, r in list(self.active.items()):
                 if r.state is not State.DECODE or r.t_first_token == now:
                     continue                      # just prefilled this tick
-                tok = int(dec_logits[slot].argmax())
-                r.output.append(tok)
-                r.token_times.append(now)
-                self.cachemgr.lens[slot] += 1
-                self._last_tokens[slot] = tok
-                self.metrics.decode_tokens += 1
-                self._maybe_finish(r, now)
+                if Sd > 1:
+                    self._scatter_verify(slot, r, dec_logits[slot],
+                                         drafts.get(slot), now)
+                else:
+                    tok = int(dec_logits[slot].argmax())
+                    r.output.append(tok)
+                    r.token_times.append(now)
+                    self.cachemgr.lens[slot] += 1
+                    self._last_tokens[slot] = tok
+                    self.metrics.decode_tokens += 1
+                    self._maybe_finish(r, now)
 
         if ft_rows:
             losses = np.asarray(out.ft_loss_sum)
@@ -317,6 +394,37 @@ class UnifiedEngine:
         self.metrics.elapsed = self.clock.now()
         return True
 
+    def _scatter_verify(self, slot: int, r: Request, logits: np.ndarray,
+                        draft: Optional[np.ndarray], now: float):
+        """Greedy acceptance for one verify chunk: keep the longest draft
+        prefix matching the model's argmax plus the bonus token, then roll
+        the paged cache back past the accepted length (releasing blocks the
+        rejected drafts transiently occupied)."""
+        if draft is None:
+            draft = np.zeros((0,), np.int64)
+        L = int(self.cachemgr.lens[slot])
+        n_acc, emitted = accept_greedy(draft, logits)
+        # exactness clamps: never emit past max_new_tokens, stop at eos —
+        # the same cuts plain greedy decode would have made tick by tick
+        emitted = emitted[:r.max_new_tokens - len(r.output)]
+        if r.eos_token >= 0 and r.eos_token in emitted:
+            emitted = emitted[:emitted.index(r.eos_token) + 1]
+        n_kept = len(emitted)
+        t_prev = r.token_times[-1] if r.token_times else now
+        r.token_times.extend(spread_token_times(t_prev, now, n_kept))
+        r.output.extend(emitted)
+        # cache holds K/V for [current, accepted drafts]; the bonus token is
+        # the next step's input.  Rejected draft positions are rolled back.
+        self.cachemgr.truncate(slot, L + n_kept)
+        self._last_tokens[slot] = emitted[-1]
+        self.metrics.decode_tokens += n_kept
+        if len(draft):
+            self.metrics.spec_drafted += len(draft)
+            self.metrics.spec_accepted += n_acc
+            self.metrics.spec_steps += 1
+            self._spec[slot][1].update(len(draft), n_acc)
+        self._maybe_finish(r, now)
+
     def _apply_trainer(self, tr: MixedLoraTrainer):
         store = self.model.store
         mask = store.slot_mask([tr.name])
@@ -335,6 +443,7 @@ class UnifiedEngine:
             r.state = State.DONE
             r.t_finish = now
             self.active.pop(r.dec_slot, None)
+            self._spec.pop(r.dec_slot, None)
             self.cachemgr.free(r.dec_slot)
             if r.adapter:
                 self.model.store.release(r.adapter)

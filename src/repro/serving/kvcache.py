@@ -12,11 +12,18 @@ pays ``s_max`` slots whether it uses them or not.
 
 **Paged** (``PagedCacheManager``): attention K/V lives in a flat pool of
 fixed-size blocks ``[n_blocks, block_size, ...]``; each request owns a *block
-table* (list of block ids) covering its projected length
-``ceil(min(prompt + max_new, s_max) / block_size)``.  Admission is a block
-budget, not a slot: HBM is sized for the tokens actually reserved, so many
-more mixed-length requests fit the same pool (the S-LoRA unified-paging
-design, on TPU with static shapes).  Block 0 is a reserved null block that
+table* (list of block ids).  Admission is a block budget, not a slot: a
+request is admitted only when its projected life
+``ceil(min(prompt + max_new [+ spec headroom], s_max) / block_size)`` fits
+the pool (the S-LoRA unified-paging design, on TPU with static shapes), but
+blocks are *allocated on demand*: admission allocates only the blocks the
+prompt needs now, the rest stay a **reservation** (``reserved`` /
+``reserved_debt``) that ``grow`` converts to real blocks as decoding
+advances.  The debt is subtracted from the free count the scheduler sees, so
+the admission gate can never hand out a block an admitted request will later
+need.  ``truncate`` is the inverse mutation: speculative-decoding rollback
+(and any other sequence shrink) releases now-unused tail blocks back to the
+pool, re-crediting the reservation.  Block 0 is a reserved null block that
 absorbs writes from padding rows.  Prefill writes land directly in the
 request's blocks via the table carried in the batch — commit assigns table
 entries instead of copying rows.  Only per-request *state* (Mamba SSM state,
@@ -26,7 +33,10 @@ commit.
 
 Prefix reuse: full blocks of a registered prompt prefix (same adapter, same
 tokens, same positions) are shared across requests by refcount; a write into
-a shared block goes through copy-on-write (``ensure_writable``).
+a shared block goes through copy-on-write (``ensure_writable``).  On
+``truncate`` a shared block is simply dereferenced — the registrar's (or any
+sibling's) refcount keeps it alive, so rollback never destroys a shared
+prefix (the CoW-unshare half of the speculation contract).
 """
 from __future__ import annotations
 
@@ -106,6 +116,12 @@ class CacheManager:
     @property
     def n_free(self) -> int:
         return len(self._free)
+
+    def truncate(self, slot: int, new_len: int):
+        """Roll the sequence back (speculation rollback).  Dense rows are
+        position-indexed and masked by ``k_valid``, so stale K/V beyond
+        ``new_len`` is simply invisible — only the length moves."""
+        self.lens[slot] = new_len
 
     # -- step plumbing ---------------------------------------------------------
     def step_cache(self):
@@ -225,6 +241,10 @@ class PagedCacheManager:
         self.lens = np.zeros((capacity,), np.int64)
         self.tables: Dict[int, List[int]] = {}      # state slot -> block ids
         self.shared_count: Dict[int, int] = {}      # leading shared blocks
+        # blocks earmarked for a slot's projected life beyond what it holds
+        # now (allocate-on-demand): the gate must not spend these
+        self.reserved: Dict[int, int] = {}          # slot -> reserved blocks
+        self._debt = 0                              # sum of unfilled reserves
         # prefix_id -> (adapter, prefix tokens, block ids); ordered for LRU
         self._prefixes: "OrderedDict[str, Tuple[str, np.ndarray, List[int]]]" \
             = OrderedDict()
@@ -236,7 +256,14 @@ class PagedCacheManager:
 
     @property
     def free_blocks(self) -> int:
-        return self.allocator.n_free
+        """Blocks the admission gate may spend: the allocator's free list
+        minus the outstanding reservation debt of already-admitted requests
+        (blocks they will ``grow`` into later)."""
+        return self.allocator.n_free - self._debt
+
+    @property
+    def reserved_debt(self) -> int:
+        return self._debt
 
     @property
     def total_blocks(self) -> int:
@@ -245,6 +272,9 @@ class PagedCacheManager:
     def projected_blocks(self, prompt_len: int, max_new: int) -> int:
         return projected_blocks(prompt_len, max_new, self.block_size,
                                 self.s_max)
+
+    def _debt_of(self, slot: int) -> int:
+        return max(self.reserved.get(slot, 0) - len(self.tables[slot]), 0)
 
     @property
     def reclaimable_blocks(self) -> int:
@@ -273,50 +303,126 @@ class PagedCacheManager:
         return p_bids[:n_full]
 
     def fresh_need(self, prompt_len: int, max_new: int, prompt: np.ndarray,
-                   adapter: str = "", prefix_id: str = "") -> int:
+                   adapter: str = "", prefix_id: str = "",
+                   headroom: int = 0) -> int:
         """The request's charge against the gate's ``free + reclaimable``
         budget.  Shared blocks with ref >= 2 cost nothing; shared blocks held
         only by the registry (ref == 1) are discounted from *need* but were
         also counted reclaimable, so they must still be charged — otherwise
-        the gate admits requests the manager then refuses."""
+        the gate admits requests the manager then refuses.  ``headroom`` is
+        extra projected tokens (speculative-decoding transient drafts)."""
         shared = self._lookup_shared(prompt, adapter, prefix_id)
         held_elsewhere = sum(1 for b in shared if self.allocator.ref[b] >= 2)
-        return self.projected_blocks(prompt_len, max_new) - held_elsewhere
+        return (self.projected_blocks(prompt_len, max_new + headroom)
+                - held_elsewhere)
 
     def try_admit(self, prompt: np.ndarray, max_new: int, adapter: str = "",
-                  prefix_id: str = "") -> Optional[int]:
-        """Reserve a state slot + the request's projected blocks (sharing
-        registered prefix blocks when ``prefix_id`` matches).  Returns the
-        state slot, or None when slots or blocks are exhausted."""
+                  prefix_id: str = "", headroom: int = 0) -> Optional[int]:
+        """Reserve a state slot + the request's projected block budget
+        (sharing registered prefix blocks when ``prefix_id`` matches), but
+        only *allocate* the blocks the prompt needs now — the remainder is a
+        reservation ``grow`` fills on demand.  ``headroom`` adds transient
+        speculative-draft tokens to the projected budget.  Returns the state
+        slot, or None when slots or spendable blocks are exhausted."""
         if not self._free_slots:
             return None
-        need = self.projected_blocks(len(prompt), max_new)
+        need = self.projected_blocks(len(prompt), max_new + headroom)
         shared = self._lookup_shared(prompt, adapter, prefix_id, touch=True)
-        fresh_need = need - len(shared)
-        if not self.allocator.can_alloc(fresh_need):
+        # blocks that must exist before prefill writes: the whole prompt
+        now_need = min(self.projected_blocks(len(prompt), 0), need)
+        fresh_need = need - len(shared)          # lifetime charge at the gate
+        fresh_now = max(now_need - len(shared), 0)
+        if fresh_need > self.free_blocks:
             # shed idle prefixes (oldest first) to make room
-            while self._prefixes and not self.allocator.can_alloc(fresh_need):
+            while self._prefixes and fresh_need > self.free_blocks:
                 if not self._drop_oldest_prefix(keep=prefix_id if shared
                                                 else ""):
                     break
-            if not self.allocator.can_alloc(fresh_need):
+            if fresh_need > self.free_blocks:
                 return None
         for bid in shared:
             self.allocator.incref(bid)
-        fresh = self.allocator.alloc_many(fresh_need)
+        fresh = self.allocator.alloc_many(fresh_now)
         assert fresh is not None
         slot = self._free_slots.popleft()
         self.tables[slot] = shared + fresh
         self.shared_count[slot] = len(shared)
+        self.reserved[slot] = max(need, len(self.tables[slot]))
+        self._debt += self._debt_of(slot)
         self.lens[slot] = 0
         return slot
 
     def free(self, slot: int):
+        self._debt -= self._debt_of(slot)
+        self.reserved.pop(slot, None)
         for bid in self.tables.pop(slot, []):
             self.allocator.decref(bid)
         self.shared_count.pop(slot, None)
         self.lens[slot] = 0
         self._free_slots.append(slot)
+
+    # -- sequence growth / rollback ------------------------------------------
+    def grow(self, slot: int, new_len: int) -> int:
+        """Extend ``slot``'s table to cover ``new_len`` tokens.  Growth
+        within the slot's reservation always succeeds (the debt accounting
+        guarantees the blocks exist); growth beyond it (speculative drafts
+        past the projected life) is best-effort from the spendable pool.
+        Returns the token capacity actually available."""
+        table = self.tables[slot]
+        target = min(-(-new_len // self.block_size), self.nbt)
+        while len(table) < target:
+            if len(table) >= self.reserved.get(slot, 0) \
+                    and self.free_blocks <= 0:
+                break                       # transient overshoot, pool dry
+            d0 = self._debt_of(slot)
+            bid = self.allocator.alloc()
+            assert bid is not None, "reservation debt accounting violated"
+            table.append(bid)
+            self._debt += self._debt_of(slot) - d0
+        return min(len(table) * self.block_size, self.s_max)
+
+    def truncate(self, slot: int, new_len: int):
+        """Roll ``slot`` back to ``new_len`` tokens (speculation rollback):
+        release table blocks past the new length back to the pool, restoring
+        the slot's reservation debt.  Shared (prefix/CoW) blocks are only
+        dereferenced — the registry's or a sibling's refcount keeps them
+        alive, so rollback never destroys shared state."""
+        new_len = max(int(new_len), 0)
+        table = self.tables[slot]
+        nb = -(-new_len // self.block_size)
+        if nb < len(table):
+            d0 = self._debt_of(slot)
+            dropped = len(table) - nb
+            freed = 0
+            for bid in table[nb:]:
+                self.allocator.decref(bid)
+                if self.allocator.ref[bid] == 0:
+                    freed += 1
+            del table[nb:]
+            self.shared_count[slot] = min(self.shared_count.get(slot, 0), nb)
+            # a dropped block other holders keep alive never re-enters the
+            # free list, so the slot's re-grow claim on that position is
+            # surrendered with it — re-crediting the full drop would make
+            # the debt exceed the blocks actually available and break
+            # grow()'s within-reservation guarantee
+            self.reserved[slot] = max(
+                self.reserved.get(slot, 0) - (dropped - freed), len(table))
+            self._debt += self._debt_of(slot) - d0
+        self.lens[slot] = new_len
+
+    def prepare_write(self, slot: int, start: int, n: int) -> int:
+        """Make positions ``[start, start + n)`` writable: grow the table to
+        cover them and copy-on-write every shared block in the range.
+        Returns how many of the ``n`` tokens can actually be written (less
+        than ``n`` only when drafts overshoot a dry pool)."""
+        cap = self.grow(slot, start + n)
+        end = min(start + n, cap)
+        if end <= start:
+            return 0
+        for bi in range(start // self.block_size,
+                        (end - 1) // self.block_size + 1):
+            self.ensure_writable(slot, pos=bi * self.block_size)
+        return end - start
 
     # -- prefix registry -----------------------------------------------------
     def register_prefix(self, prefix_id: str, slot: int, prompt: np.ndarray,
@@ -363,10 +469,16 @@ class PagedCacheManager:
         p = int(self.lens[slot]) if pos is None else pos
         bi = p // self.block_size
         table = self.tables[slot]
+        if bi >= len(table):                # allocate-on-demand growth
+            self.grow(slot, p + 1)
         bid = table[bi]
         if not self.allocator.is_shared(bid):
             return bid
-        new = self.allocator.alloc()
+        # CoW must not spend blocks earmarked for admitted requests' growth
+        while self._prefixes and self.free_blocks <= 0:
+            if not self._drop_oldest_prefix():
+                break
+        new = self.allocator.alloc() if self.free_blocks > 0 else None
         if new is None:
             raise RuntimeError("out of KV blocks during copy-on-write")
         self.cache = _copy_block(self.cache, jnp.int32(bid), jnp.int32(new))

@@ -28,6 +28,8 @@ class Request:
     prefix_id: str = ""                # shared-prompt handle: requests with
     # the same (prefix_id, adapter) and identical leading tokens share the
     # full KV blocks of that prefix by refcount (paged layout only)
+    draft_suffix: Optional[np.ndarray] = None  # reference token stream
+    # (prompt + expected output) for the static-suffix drafter (trace replay)
 
     state: State = State.WAITING
     output: List[int] = dataclasses.field(default_factory=list)

@@ -37,11 +37,13 @@ class Decision:
     load: float
 
 
-def projected_blocks(r: Request, block_size: int, s_max: int) -> int:
+def projected_blocks(r: Request, block_size: int, s_max: int,
+                     headroom: int = 0) -> int:
     """Blocks the request reserves for its whole projected life (the
-    manager's formula, on a Request)."""
-    return _projected_blocks(r.prompt_len, r.max_new_tokens, block_size,
-                             s_max)
+    manager's formula, on a Request); ``headroom`` adds transient
+    speculative-draft tokens."""
+    return _projected_blocks(r.prompt_len, r.max_new_tokens + headroom,
+                             block_size, s_max)
 
 
 class Scheduler:
@@ -53,11 +55,13 @@ class Scheduler:
                trainers_pending: bool, *,
                free_blocks: Optional[int] = None, total_blocks: int = 0,
                block_size: int = 0, s_max: int = 0,
-               need_fn: Optional[Callable[[Request], int]] = None
-               ) -> Decision:
+               need_fn: Optional[Callable[[Request], int]] = None,
+               spec_headroom: int = 0) -> Decision:
         """``need_fn`` (paged engines) returns the blocks a request would
         actually consume — projected blocks minus registered shared prefix
-        blocks — so the gate mirrors what admission will really reserve."""
+        blocks — so the gate mirrors what admission will really reserve.
+        ``spec_headroom`` widens the fallback projection by the transient
+        speculative-draft tokens a resident request may hold mid-verify."""
         c = self.cfg
         admit: List[Request] = []
         budget = c.max_prefill_tokens
@@ -70,7 +74,8 @@ class Scheduler:
                 break
             if blocks_left is not None:
                 need = (need_fn(r) if need_fn is not None
-                        else projected_blocks(r, block_size, s_max))
+                        else projected_blocks(r, block_size, s_max,
+                                              headroom=spec_headroom))
                 if need > blocks_left:
                     break              # memory-bound: stop admitting this tick
                 blocks_left -= need

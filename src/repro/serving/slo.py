@@ -17,6 +17,17 @@ class SLOConfig:
     max_decode_ms: float = 1000.0
 
 
+def spread_token_times(t_prev: float, now: float, n: int) -> list:
+    """Per-token completion times for a multi-token (speculative verify)
+    step: one step of latency ``now - t_prev`` produced ``n`` accepted
+    tokens, so each is charged ``step_latency / n`` — NOT one inflated
+    inter-step gap — keeping ``request_meets_slo`` meaningful under
+    speculation."""
+    assert n >= 1
+    dt = (now - t_prev) / n
+    return [t_prev + (i + 1) * dt for i in range(n)]
+
+
 def request_meets_slo(r: Request, slo: SLOConfig) -> bool:
     if r.state is not State.DONE:
         return False
@@ -49,6 +60,14 @@ class Metrics:
     steps: int = 0
     elapsed: float = 0.0
     busy_time: float = 0.0       # virtual-clock time spent executing steps
+    # speculative decoding accounting
+    spec_drafted: int = 0        # draft tokens submitted for verification
+    spec_accepted: int = 0       # drafts that matched the greedy argmax
+    spec_steps: int = 0          # verify steps with at least one draft
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.spec_accepted / max(self.spec_drafted, 1)
 
     def rates(self):
         e = max(self.elapsed, 1e-9)

@@ -4,8 +4,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.decode_attn import decode_attention, paged_decode_attention
-from repro.kernels.ref import paged_decode_ref
+from repro.kernels.decode_attn import (decode_attention,
+                                       paged_decode_attention,
+                                       paged_verify_attention)
+from repro.kernels.ref import paged_decode_ref, paged_verify_ref
 from repro.models.layers import attention
 from repro.models.model import _dec_cache_pos
 
@@ -83,6 +85,88 @@ def test_paged_decode_kernel_matches_ref(dtype, B, h, g, hd, bs, nbt):
     tol = 2e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("B,h,g,hd,bs,nbt,Sq", [
+    (2, 4, 4, 8, 8, 3, 4),     # MHA
+    (3, 8, 2, 16, 8, 5, 5),    # GQA, ragged chunk lengths
+    (1, 8, 8, 32, 16, 4, 2),
+])
+def test_paged_verify_kernel_matches_ref(B, h, g, hd, bs, nbt, Sq):
+    """Speculative verify attention (chunked query over block tables) ==
+    gather-then-attend oracle, including padding rows (len 0) and partially
+    filled chunks."""
+    ks = jax.random.split(jax.random.PRNGKey(B * Sq), 3)
+    n_blocks = nbt * B + 2
+    k_pool = jax.random.normal(ks[0], (n_blocks, bs, g, hd))
+    v_pool = jax.random.normal(ks[1], (n_blocks, bs, g, hd))
+    rng = np.random.default_rng(B)
+    pos = np.minimum(np.arange(B) * 5 + 2, nbt * bs - Sq - 1)
+    lens = rng.integers(0, Sq + 1, B)
+    tables = np.zeros((B, nbt), np.int32)
+    for b in range(B):
+        need = (pos[b] + Sq) // bs + 1
+        tables[b, :need] = rng.choice(np.arange(1, n_blocks), size=need,
+                                      replace=False)
+    q = jax.random.normal(ks[2], (B, Sq, h, hd))
+    posj = jnp.asarray(pos, jnp.int32)
+    lensj = jnp.asarray(lens, jnp.int32)
+    tj = jnp.asarray(tables)
+    y = paged_verify_attention(q, k_pool, v_pool, tj, posj, lensj,
+                               interpret=True)
+    yr = paged_verify_ref(q, k_pool, v_pool, tj, posj, lensj)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_verify_kernel_sq1_matches_decode_kernel():
+    """A one-token verify chunk IS batch decode: both kernels must agree."""
+    B, h, g, hd, bs, nbt = 2, 4, 2, 16, 8, 4
+    pos = np.array([13, 30])
+    k_pool, v_pool, tables, kq = _paged_setup(B, g, hd, bs, nbt, 16, pos)
+    q = jax.random.normal(kq, (B, h, hd))
+    posj = jnp.asarray(pos, jnp.int32)
+    y1 = paged_verify_attention(q[:, None], k_pool, v_pool, tables, posj,
+                                jnp.ones((B,), jnp.int32), interpret=True)
+    y0 = paged_decode_attention(q, k_pool, v_pool, tables, posj,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(y1[:, 0]), np.asarray(y0),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_model_decode_bucket_kernel_flag(monkeypatch):
+    """REPRO_PAGED_ATTN_KERNEL wires kernels.decode_attn into the model's
+    paged decode bucket (ROADMAP item): logits must match the jnp
+    gather-view reference path."""
+    from repro.configs import get_reduced
+    from repro.models.model import init_paged_cache, unified_forward
+    from repro.models.schema import init_params
+    from repro.models.stream import DECBatch, PFBatch, UnifiedBatch
+
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab)
+    base = jnp.full((B,), -1)
+    tbl = jnp.asarray(np.array([[3, 1, 7, 5], [2, 6, 4, 8]], np.int32))
+
+    def drive():
+        cache = init_paged_cache(cfg, 9, 8, B)
+        pf = PFBatch(tokens=toks[:, :S], length=jnp.full((B,), S),
+                     adapter=base, block_tables=tbl)
+        cache = unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                                cache=cache).cache
+        dec = DECBatch(tokens=toks[:, S], pos=jnp.full((B,), S),
+                       adapter=base, block_tables=tbl)
+        return np.asarray(unified_forward(cfg, params, UnifiedBatch(dec=dec),
+                                          cache=cache).dec_logits)
+
+    monkeypatch.delenv("REPRO_PAGED_ATTN_KERNEL", raising=False)
+    ref = drive()
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "interpret")
+    got = drive()
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
 
 
 def test_paged_kernel_matches_dense_kernel():

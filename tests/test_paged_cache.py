@@ -275,6 +275,98 @@ def test_cow_leaves_state_rows_untouched():
         np.testing.assert_array_equal(before[k], after[k])
 
 
+# ------------------------------------------- on-demand growth + truncate
+def test_blocks_allocated_on_demand_with_reservation():
+    """Admission allocates only the prompt's blocks; the rest of the
+    projected life is a reservation the gate must not spend, and ``grow``
+    converts to real blocks as the sequence advances."""
+    m = _mgr(capacity=4, n_blocks=9, bs=16)           # 8 usable
+    s = m.try_admit(np.zeros((20,), np.int32), max_new=24)  # 44 tok -> 3 blk
+    assert len(m.tables[s]) == 2                      # ceil(20/16) held now
+    assert m.reserved[s] == 3 and m.reserved_debt == 1
+    assert m.free_blocks == 8 - 3                     # debt is not spendable
+    cap = m.grow(s, 33)                               # into the 3rd block
+    assert cap >= 33 and len(m.tables[s]) == 3
+    assert m.reserved_debt == 0 and m.free_blocks == 5
+    m.free(s)
+    assert m.free_blocks == 8 and m.reserved_debt == 0
+
+
+def test_truncate_releases_blocks_and_restores_reservation():
+    """Speculation rollback: tail blocks written by rejected drafts return
+    to the pool and the reservation debt reappears (the request can still
+    grow to its projected life later)."""
+    m = _mgr(capacity=4, n_blocks=9, bs=16)
+    s = m.try_admit(np.zeros((20,), np.int32), max_new=24, headroom=8)
+    assert m.reserved[s] == 4                         # 20+24+8 tok -> 4 blk
+    m.grow(s, 52)                                     # draft overshoot
+    assert len(m.tables[s]) == 4 and m.reserved_debt == 0
+    used = m.allocator.n_used
+    m.truncate(s, 22)                                 # roll back to 2 blocks
+    assert m.lens[s] == 22
+    assert len(m.tables[s]) == 2
+    assert m.allocator.n_used == used - 2
+    assert m.reserved_debt == 2                       # earmarked again
+    assert m.grow(s, 52) >= 52                        # and re-growable
+
+
+def test_truncate_shared_prefix_blocks_survive_rollback():
+    """Rolling back through a refcounted shared-prefix block must only
+    decref it: the registry (and any sibling request) keeps it alive, and
+    the survivor's table is untouched."""
+    m = _mgr(capacity=4, n_blocks=16, bs=8)
+    prompt = np.arange(16, dtype=np.int32)            # exactly 2 full blocks
+    s1 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    m.register_prefix("sys", s1, prompt)
+    s2 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    shared = list(m.tables[s2])
+    assert shared[:2] == m.tables[s1][:2]
+    assert m.allocator.ref[shared[0]] == 3            # s1 + s2 + registry
+    m.grow(s2, 24)
+    m.truncate(s2, 4)                                 # roll back INTO block 0
+    assert m.tables[s2] == shared[:1]
+    assert m.shared_count[s2] == 1
+    assert m.allocator.ref[shared[0]] == 3            # survivor untouched
+    assert m.allocator.ref[shared[1]] == 2            # s2's ref released
+    assert m.tables[s1][:2] == shared[:2]             # sibling intact
+    # the survivor's payload is still addressable: re-admitting reuses it
+    s3 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    assert m.tables[s3][:2] == shared[:2]
+
+
+def test_truncate_through_shared_blocks_keeps_debt_invariant():
+    """Rolling back through refcounted shared blocks must not re-credit
+    debt for blocks that never returned to the pool: on a fully committed
+    pool the invariant n_free >= debt (and therefore grow()'s
+    within-reservation guarantee) has to survive."""
+    m = _mgr(capacity=8, n_blocks=6, bs=8)            # 5 usable
+    prompt = np.arange(16, dtype=np.int32)            # 2 full blocks
+    s1 = m.try_admit(prompt, max_new=8, prefix_id="p")     # 2 held, 1 debt
+    m.register_prefix("p", s1, prompt)
+    s2 = m.try_admit(prompt, max_new=8, prefix_id="p")     # shares, 1 debt
+    m.grow(s2, 17)                                    # s2 fills its reserve
+    filler = m.try_admit(np.arange(8, dtype=np.int32), max_new=0)
+    assert filler is not None
+    assert m.free_blocks == 0                         # pool fully committed
+    m.truncate(s2, 4)                                 # back through shared
+    assert m.allocator.n_free >= m.reserved_debt
+    assert m.free_blocks >= 0
+    # every within-reservation grow must still succeed: s1 to its full
+    # projected life, s2 to its (shared-drop-reduced) reservation
+    assert m.grow(s1, 24) >= 24
+    assert m.grow(s2, m.reserved[s2] * 8) >= m.reserved[s2] * 8
+
+
+def test_dense_truncate_rolls_length_only():
+    from repro.serving.kvcache import CacheManager
+    cfg = get_reduced("llama3-8b")
+    m = CacheManager(cfg, 2, 1, 64)
+    slot = m.alloc()
+    m.lens[slot] = 30
+    m.truncate(slot, 21)
+    assert m.lens[slot] == 21
+
+
 # ------------------------------------------------------- adapter eviction
 def test_adapter_store_lru_eviction_and_reload():
     cfg = get_reduced("llama3-8b")

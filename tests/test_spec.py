@@ -1,0 +1,297 @@
+"""Speculative decoding subsystem: drafters, exact greedy acceptance, the
+multi-token verify bucket, cache rollback, engine exactness (spec == greedy
+token-for-token, including under mixed fine-tune + inference batches), and
+per-token SLO accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.data import datasets
+from repro.models.model import init_paged_cache, unified_forward
+from repro.models.schema import init_params
+from repro.models.stream import DECBatch, PFBatch, UnifiedBatch
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request
+from repro.serving.slo import spread_token_times
+from repro.spec import (AdaptiveK, NgramDrafter, SpecConfig,
+                        StaticSuffixDrafter, accept_greedy)
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+# ------------------------------------------------------------------ drafters
+def test_ngram_drafter_prompt_lookup():
+    d = NgramDrafter(max_n=3)
+    ctx = np.array([5, 6, 7, 8, 1, 2, 5, 6, 7, 9, 3, 5, 6, 7])
+    # trailing trigram (5,6,7) most recently recurred at index 6 -> followed
+    # by 9, 3, 5, 6
+    np.testing.assert_array_equal(d.draft(ctx, 4), [9, 3, 5, 6])
+    np.testing.assert_array_equal(d.draft(ctx, 2), [9, 3])
+
+
+def test_ngram_drafter_backoff_and_miss():
+    d = NgramDrafter(max_n=3)
+    # no trigram/bigram recurrence, but unigram 4 recurs -> follows with 9
+    ctx = np.array([1, 2, 4, 9, 3, 4])
+    np.testing.assert_array_equal(d.draft(ctx, 1), [9])
+    # nothing recurs at all -> empty draft (row degenerates to plain decode)
+    assert len(d.draft(np.array([1, 2, 3]), 4)) == 0
+    assert len(d.draft(np.array([7]), 4)) == 0
+
+
+def test_static_suffix_drafter_trace_replay():
+    seq = np.arange(10)
+    d = StaticSuffixDrafter(seq)
+    np.testing.assert_array_equal(d.draft(seq[:6], 3), [6, 7, 8])
+    np.testing.assert_array_equal(d.draft(seq[:9], 3), [9])   # tail clamp
+    assert len(d.draft(seq, 3)) == 0                          # exhausted
+
+
+# ---------------------------------------------------------------- acceptance
+def test_accept_greedy_exactness_cases():
+    lg = np.zeros((4, 5), np.float32)
+    lg[0, 2] = lg[1, 3] = lg[2, 4] = lg[3, 1] = 1.0
+    assert accept_greedy(np.array([2, 3, 4]), lg) == (3, [2, 3, 4, 1])
+    assert accept_greedy(np.array([9, 9, 9]), lg) == (0, [2])
+    assert accept_greedy(np.array([2, 9, 9]), lg) == (1, [2, 3])
+    # empty draft == plain greedy decode of one token
+    assert accept_greedy(np.zeros((0,), int), lg[:1]) == (0, [2])
+
+
+def test_adaptive_k_walks_with_acceptance():
+    ctl = AdaptiveK(SpecConfig(k_max=4, k_min=1))
+    for _ in range(5):
+        ctl.update(4, 4)
+    assert ctl.k == 4
+    for _ in range(10):
+        ctl.update(4, 0)
+    assert ctl.k == 1
+    k_before = ctl.k
+    ctl.update(0, 0)                     # draftless steps carry no signal
+    assert ctl.k == k_before
+
+
+# ------------------------------------------------- model-level verify bucket
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-236b"])
+def test_verify_chunk_matches_sequential_decode(arch):
+    """A (1 + k)-token verify chunk must produce, at every position, the
+    same logits sequential single-token decode would — for standard
+    attention and MLA, through scattered non-contiguous blocks, with ragged
+    chunk lengths."""
+    cfg = get_reduced(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, k = 2, 10, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + k + 1), 0,
+                              cfg.vocab)
+    base = jnp.full((B,), -1)
+    tbl = jnp.asarray(np.array([[3, 1, 7, 5], [2, 6, 4, 8]], np.int32))
+
+    def prefill():
+        cache = init_paged_cache(cfg, 9, 8, B)
+        pf = PFBatch(tokens=toks[:, :S], length=jnp.full((B,), S),
+                     adapter=base, block_tables=tbl)
+        return unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                               cache=cache).cache
+
+    cache = prefill()
+    seq = []
+    for i in range(k + 1):
+        dec = DECBatch(tokens=toks[:, S + i], pos=jnp.full((B,), S + i),
+                       adapter=base, block_tables=tbl)
+        out = unified_forward(cfg, params, UnifiedBatch(dec=dec), cache=cache)
+        cache = out.cache
+        seq.append(np.asarray(out.dec_logits))
+    seq = np.stack(seq, axis=1)                        # [B, k+1, V]
+
+    lens = jnp.asarray([k + 1, k], jnp.int32)          # row 1 has a pad slot
+    dec = DECBatch(tokens=toks[:, S:S + k + 1], pos=jnp.full((B,), S),
+                   adapter=base, block_tables=tbl, length=lens)
+    out = unified_forward(cfg, params, UnifiedBatch(dec=dec),
+                          cache=prefill())
+    chunk = np.asarray(out.dec_logits)
+    assert chunk.shape[:2] == (B, k + 1)
+    np.testing.assert_allclose(chunk[0], seq[0], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(chunk[1, :k], seq[1, :k], rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------- engine
+def _engine(cfg, spec, seed=0, trainers=0, **kw):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    store.load_random("serve", jax.random.PRNGKey(seed + 2))
+    kw = {"capacity": 4, "pf_capacity": 2, "s_max": 96, "block_size": 16,
+          **kw}
+    eng = UnifiedEngine(MixedLoraModel(cfg, params, store),
+                        EngineConfig(virtual_time=True, spec=spec, **kw))
+    for i in range(trainers):
+        name = f"tr{i}"
+        store.load_random(name, jax.random.PRNGKey(seed + 10 + i))
+        rows, ev = datasets.split_eval(
+            datasets.alpaca_like(12, vocab=cfg.vocab, seed=i))
+        eng.add_trainer(MixedLoraTrainer(name, store.slot_of(name), rows, ev,
+                                         TrainerConfig(rows_per_micro=2,
+                                                       accum_steps=2,
+                                                       epochs=1)))
+    return eng
+
+
+def _reqs(cfg, n=6, seed=3, max_new=10, eos=-1):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=rng.integers(0, cfg.vocab, rng.integers(
+                        6, 24)).astype(np.int32),
+                    adapter="serve", max_new_tokens=max_new, eos_token=eos,
+                    arrival=0.2 * i) for i in range(n)]
+
+
+def test_spec_equals_greedy_token_for_token():
+    cfg = get_reduced("llama3-8b")
+    eng_p = _engine(cfg, None)
+    eng_s = _engine(cfg, SpecConfig(k_max=4, drafter="ngram"))
+    for eng in (eng_p, eng_s):
+        for r in _reqs(cfg):
+            eng.submit(r)
+        eng.run(max_ticks=5000)
+        assert len(eng.finished) == 6
+    assert ({r.rid: r.output for r in eng_p.finished}
+            == {r.rid: r.output for r in eng_s.finished})
+
+
+def test_spec_equals_greedy_with_mixed_finetune_batches():
+    """Exactness must survive co-batching: fine-tune rows + prefill + verify
+    chunks + plain decode share every unified step, and the trainers must
+    still complete."""
+    cfg = get_reduced("llama3-8b")
+    eng_p = _engine(cfg, None, trainers=1)
+    eng_s = _engine(cfg, SpecConfig(k_max=3, drafter="ngram"), trainers=1)
+    for eng in (eng_p, eng_s):
+        for r in _reqs(cfg, n=4):
+            eng.submit(r)
+        m = eng.run(max_ticks=20000)
+        assert len(eng.finished) == 4
+        assert m.finetune_tokens > 0
+        for tr in eng.trainers.values():
+            assert not tr.pending() and tr.optimizer_steps >= 1
+    assert ({r.rid: r.output for r in eng_p.finished}
+            == {r.rid: r.output for r in eng_s.finished})
+
+
+def test_trace_replay_accepts_everything_and_saves_steps():
+    """Suffix drafting from the recorded greedy trace: acceptance 1.0,
+    byte-identical outputs, strictly fewer engine steps."""
+    cfg = get_reduced("llama3-8b")
+    eng_p = _engine(cfg, None)
+    for r in _reqs(cfg):
+        eng_p.submit(r)
+    eng_p.run(max_ticks=5000)
+    trace = {r.rid: r.output for r in eng_p.finished}
+
+    eng_t = _engine(cfg, SpecConfig(k_max=4, drafter="suffix",
+                                    adaptive=False))
+    for r in _reqs(cfg):
+        r.draft_suffix = np.concatenate(
+            [r.prompt, np.asarray(trace[r.rid], np.int64)])
+        eng_t.submit(r)
+    eng_t.run(max_ticks=5000)
+    m = eng_t.metrics
+    assert {r.rid: r.output for r in eng_t.finished} == trace
+    assert m.acceptance_rate == 1.0
+    assert m.steps < eng_p.metrics.steps
+    assert m.decode_tokens == eng_p.metrics.decode_tokens
+
+
+def test_spec_respects_eos_and_max_new():
+    """The bonus/draft tail must be cut exactly where plain greedy would
+    stop: at eos or at the max_new_tokens budget — never beyond."""
+    cfg = get_reduced("llama3-8b")
+    eng_p = _engine(cfg, None)
+    for r in _reqs(cfg, n=4, max_new=6):
+        eng_p.submit(r)
+    eng_p.run(max_ticks=5000)
+    plain = {r.rid: r.output for r in eng_p.finished}
+    # pick each request's 3rd greedy token as its eos so speculation has to
+    # stop mid-chunk
+    eos_of = {rid: out[2] for rid, out in plain.items()}
+    for spec in (None, SpecConfig(k_max=4, drafter="ngram")):
+        engs = _engine(cfg, spec)
+        for r in _reqs(cfg, n=4, max_new=6):
+            r.eos_token = int(eos_of[r.rid])
+            engs.submit(r)
+        engs.run(max_ticks=5000)
+        outs = {r.rid: r.output for r in engs.finished}
+        if spec is None:
+            baseline = outs
+        else:
+            assert outs == baseline
+        for rid, out in outs.items():
+            assert len(out) <= 6
+            if eos_of[rid] in out:
+                assert out.index(eos_of[rid]) == len(out) - 1
+
+
+def test_spec_per_token_slo_accounting():
+    """A verify step emitting n tokens must record n per-token latencies of
+    step_latency / n (not one inflated gap), and token_times must stay in
+    lockstep with output length."""
+    ts = spread_token_times(1.0, 2.0, 4)
+    np.testing.assert_allclose(ts, [1.25, 1.5, 1.75, 2.0])
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, SpecConfig(k_max=4, drafter="ngram"))
+    for r in _reqs(cfg):
+        eng.submit(r)
+    eng.run(max_ticks=5000)
+    assert eng.metrics.spec_drafted > 0
+    for r in eng.finished:
+        assert len(r.token_times) == len(r.output)
+        lat = r.decode_latencies()
+        assert (lat >= 0).all()
+        # multi-token steps spread evenly: every latency is positive under
+        # the virtual clock (each tick charges nonzero cost)
+        assert lat.size == len(r.output) - 1
+
+
+def test_spec_admission_accounts_draft_headroom():
+    """With speculation on, admission must charge each request the +k
+    transient draft tokens: a pool exactly sized for the plain projection
+    admits fewer concurrent requests when spec headroom is added."""
+    cfg = get_reduced("llama3-8b")
+    # 8 usable blocks of 16; plain projection = 2 blocks per request
+    plain = _engine(cfg, None, n_blocks=9)
+    spec = _engine(cfg, SpecConfig(k_max=4), n_blocks=9)
+    prompt = np.arange(20, dtype=np.int32)
+    h = spec.spec_headroom
+    assert h == 4
+    need_plain = plain.cachemgr.fresh_need(20, 12, prompt)
+    need_spec = spec.cachemgr.fresh_need(20, 12, prompt, headroom=h)
+    assert need_spec == need_plain + 1        # 20+12+4 tokens -> 3 blocks
+    s1 = spec.cachemgr.try_admit(prompt, 12, headroom=h)
+    s2 = spec.cachemgr.try_admit(prompt, 12, headroom=h)
+    s3 = spec.cachemgr.try_admit(prompt, 12, headroom=h)
+    assert s1 is not None and s2 is not None
+    assert s3 is None                         # 3rd x 3 blocks > 8 usable
+    assert plain.cachemgr.try_admit(prompt, 12) is not None  # plain fits 3
+
+
+def test_headroom_never_strands_a_servable_request():
+    """A request that fits its plain projection but NOT projection + k_max
+    must still be admitted (with zero reserved draft room) and decode to
+    the exact greedy output — not sit in WAITING forever."""
+    cfg = get_reduced("llama3-8b")
+    # 2 usable blocks of 16: prompt 20 + max_new 8 -> exactly 2 blocks,
+    # while +4 headroom would project 3 > pool
+    outs = {}
+    for name, spec in (("plain", None),
+                       ("spec", SpecConfig(k_max=4, drafter="ngram"))):
+        eng = _engine(cfg, spec, n_blocks=3, s_max=32)
+        eng.submit(Request(rid=0,
+                           prompt=(np.arange(20) % cfg.vocab)
+                           .astype(np.int32),
+                           adapter="serve", max_new_tokens=8))
+        eng.run(max_ticks=500)
+        assert len(eng.finished) == 1 and not eng.waiting
+        outs[name] = eng.finished[0].output
+    assert outs["spec"] == outs["plain"]
