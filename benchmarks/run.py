@@ -7,8 +7,8 @@ import traceback
 
 from benchmarks import (bench_finetune, bench_inference, bench_kernels,
                         bench_loading, bench_mutable, bench_paged,
-                        bench_realworld, bench_roofline, bench_spec,
-                        bench_unified)
+                        bench_prefix, bench_realworld, bench_roofline,
+                        bench_spec, bench_unified)
 
 TABLES = [
     ("table2_loading", bench_loading.main),
@@ -21,6 +21,7 @@ TABLES = [
     ("roofline_table", bench_roofline.main),
     ("paged_cache", bench_paged.main),
     ("spec_decode", bench_spec.main),
+    ("prefix_prefill", bench_prefix.main),
 ]
 
 

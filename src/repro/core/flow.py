@@ -44,11 +44,14 @@ class FTRow:
 
 @dataclasses.dataclass
 class PFReq:
-    tokens: np.ndarray               # [L] prompt
+    tokens: np.ndarray               # [L] prompt (or uncached suffix/chunk)
     slot: int
     rid: int = -1                    # request id (engine bookkeeping)
     aux_embed: Optional[np.ndarray] = None
     block_table: Optional[np.ndarray] = None  # [nbt] int32 (paged layout)
+    cached_len: Optional[int] = None  # prefix tokens already in the blocks:
+    # ``tokens`` is the suffix starting at this absolute position (suffix-
+    # only prefill / chunked prefill).  None = full-prompt prefill.
 
 
 def bucket(n: int, buckets: Sequence[int]) -> int:
@@ -108,6 +111,11 @@ def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
     tables = None
     if reqs[0].block_table is not None:
         tables = np.zeros((Bp, len(reqs[0].block_table)), np.int32)
+    # suffix-only prefill: one row carrying a cached prefix makes the whole
+    # bucket positional (padding rows get cached_len 0, which is inert)
+    cached = None
+    if any(r.cached_len is not None for r in reqs):
+        cached = np.zeros((Bp,), np.int32)
     for i, r in enumerate(reqs):
         L = len(r.tokens)
         toks[i, :L] = r.tokens
@@ -117,11 +125,15 @@ def plan_pf(reqs: List[PFReq], fcfg: FlowConfig) -> Optional[PFBatch]:
             aux[i] = r.aux_embed
         if tables is not None:
             tables[i] = r.block_table
+        if cached is not None:
+            cached[i] = r.cached_len or 0
     return PFBatch(tokens=jnp.asarray(toks), length=jnp.asarray(length),
                    adapter=jnp.asarray(adapter),
                    aux_embed=jnp.asarray(aux) if aux is not None else None,
                    block_tables=(jnp.asarray(tables) if tables is not None
-                                 else None))
+                                 else None),
+                   cached_len=(jnp.asarray(cached) if cached is not None
+                               else None))
 
 
 def plan_dec(tokens: np.ndarray, pos: np.ndarray, slots: np.ndarray,

@@ -30,12 +30,32 @@ def smlm(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
     ``ids``/``scale_t`` are PER-TOKEN; the flow planner guarantees each
     ``block_t`` tile is adapter-uniform, so the wrapper derives per-tile
     scalars by striding.
+
+    A ragged stream (``T % block_t != 0`` — e.g. a decode tail appended to
+    the tile-aligned ft+pf segments) no longer silently falls back to the
+    dense one-hot oracle for the WHOLE stream: the tile-aligned head keeps
+    the fused kernel and only the sub-tile remainder goes through the
+    per-token BGMV path — which is also what keeps a remainder with MIXED
+    adapters (decode rows) exact, since per-token ids never get collapsed
+    into a tile scalar there.
     """
     T = x.shape[0]
     n = a.shape[0]
-    if T % block_t != 0 or b.shape[-1] % block_o != 0:
+    if b.shape[-1] % block_o != 0:
         sc = scale_t if scale_t is not None else jnp.ones((T,), jnp.float32)
         return _ref.bgmv_ref(x, a, b, ids, sc)
+    rem = T % block_t
+    if rem:
+        t0 = T - rem
+        tail = bgmv(x[t0:], a, b, ids[t0:],
+                    scale_t[t0:] if scale_t is not None else None,
+                    block_o=block_o, interpret=interpret)
+        if t0 == 0:
+            return tail
+        head = smlm(x[:t0], a, b, ids[:t0],
+                    scale_t[:t0] if scale_t is not None else None,
+                    block_t=block_t, block_o=block_o, interpret=interpret)
+        return jnp.concatenate([head, tail], axis=0)
     tile_ids = ids[::block_t]
     valid = (tile_ids >= 0) & (tile_ids < n)
     if scale_t is None:

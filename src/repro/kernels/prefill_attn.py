@@ -1,0 +1,137 @@
+"""Paged prefill attention — suffix-only prefill over a block-table KV pool.
+
+The prefix-caching counterpart of ``decode_attn.paged_verify_attention``:
+each request contributes a *suffix* of ``seg_len`` query tokens at absolute
+positions ``cached_len .. cached_len + seg_len - 1``, while its keys/values
+— the ``cached_len`` shared-prefix tokens written by an earlier request (or
+an earlier chunk of this one) PLUS the suffix tokens written this step —
+live in the flat block pool and are reached through a scalar-prefetched
+block table.  Generalizes the verify kernel's chunked-query walk to prefill
+widths: the query axis is tiled by ``block_q`` (grid axis), so a 4k-token
+suffix streams the same per-block online softmax as a 5-token verify chunk.
+
+Grid (B, nq, h, nbt): for a fixed (request, query tile, head) the block walk
+is innermost, so the VMEM accumulator carries the online softmax across the
+table exactly like the decode/verify kernels.  GQA maps query head -> kv
+head in the BlockSpec index map.  The suffix K/V must already be written to
+the pool at ``cached_len .. cached_len + seg_len - 1`` before the call (the
+model scatters them via ``_paged_write_chunk`` first) — the kernel then
+never distinguishes cached from fresh keys, which is the whole point: the
+prefix is *read*, not recomputed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(tbl_ref, cached_ref, seg_ref, q_ref, k_ref, v_ref,
+                          o_ref, acc_ref, m_ref, l_ref, *, bs: int, nbt: int,
+                          block_q: int, scale: float):
+    b = pl.program_id(0)
+    iq = pl.program_id(1)
+    ib = pl.program_id(3)
+
+    @pl.when(ib == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :]                                      # [bq, hd]
+    k = k_ref[0, :, 0, :]                                      # [bs, hd]
+    v = v_ref[0, :, 0, :]
+    cached, seg = cached_ref[b], seg_ref[b]
+    # absolute positions: key slot j of block ib; query row i of tile iq
+    j = ib * bs + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 1)
+    qi = cached + iq * block_q \
+        + jax.lax.broadcasted_iota(jnp.int32, (block_q, bs), 0)
+    # causal over absolute positions; keys valid through the end of the
+    # written span (prefix + suffix).  Padding rows (seg == 0) mask out
+    # everything and finalize to zeros; padding query rows past ``seg``
+    # produce garbage that the caller never reads (per-token independence).
+    mask = (j <= qi) & (j < cached + seg)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[...] = l_prev * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ib == nbt - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def paged_prefill_attention(q: jax.Array, k_pool: jax.Array,
+                            v_pool: jax.Array, block_tables: jax.Array,
+                            cached_len: jax.Array, seg_len: jax.Array, *,
+                            block_q: int = 128,
+                            interpret: bool = False) -> jax.Array:
+    """Suffix-only prefill attention over a paged KV pool.
+
+    q: [B, Sq, h, hd] suffix queries (already roped at positions
+        ``cached_len + 0 .. cached_len + Sq - 1``);
+    k_pool/v_pool: [n_blocks, bs, g, hd] flat block pool — the suffix's own
+        K/V must already be written at ``cached_len .. cached_len + seg - 1``;
+    block_tables: [B, nbt] int32 per-request block ids, null-padded;
+    cached_len: [B] int32 tokens of already-valid prefix K/V per request;
+    seg_len: [B] int32 valid suffix lengths (0 = padding row -> zeros).
+    Returns [B, Sq, h, hd].
+    """
+    B, Sq, h, hd = q.shape
+    bs, g = k_pool.shape[1], k_pool.shape[2]
+    m = h // g
+    nbt = block_tables.shape[1]
+    tbl = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    scale = hd ** -0.5
+    bq = min(block_q, max(Sq, 1))
+    pad = (-Sq) % bq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // bq
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, nq, h, nbt),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd),
+                         lambda b, iq, hq, ib, T_, C_, S_: (b, iq, hq, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, iq, hq, ib, T_, C_, S_:
+                         (T_[b, ib], 0, hq // m, 0)),
+            pl.BlockSpec((1, bs, 1, hd),
+                         lambda b, iq, hq, ib, T_, C_, S_:
+                         (T_[b, ib], 0, hq // m, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd),
+                               lambda b, iq, hq, ib, T_, C_, S_:
+                               (b, iq, hq, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_paged_prefill_kernel, bs=bs, nbt=nbt,
+                             block_q=bq, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq + pad, h, hd), q.dtype),
+        interpret=interpret,
+    )(tbl, cached_len.astype(jnp.int32), seg_len.astype(jnp.int32),
+      q, k_pool, v_pool)
+    return out[:, :Sq]

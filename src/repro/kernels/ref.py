@@ -68,6 +68,30 @@ def paged_verify_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                      causal=True, window=0)
 
 
+def paged_prefill_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                      block_tables: jax.Array, cached_len: jax.Array,
+                      seg_len: jax.Array) -> jax.Array:
+    """Suffix-only prefill oracle: ``Sq`` suffix queries per request at
+    absolute positions ``cached_len .. cached_len + Sq - 1`` over the
+    gathered block view; keys (shared prefix + this suffix, both already in
+    the pool) are valid through ``cached_len + seg_len - 1`` and causality
+    is positional.  q: [B, Sq, h, hd]; k_pool/v_pool: [n_blocks, bs, g, hd];
+    block_tables: [B, nbt]; cached_len/seg_len: [B]."""
+    from repro.models.layers import attention
+    B, Sq = q.shape[:2]
+    bs = k_pool.shape[1]
+    tbl = jnp.maximum(block_tables, 0)
+    nbt = tbl.shape[1]
+    k = k_pool[tbl].reshape(B, nbt * bs, *k_pool.shape[2:])
+    v = v_pool[tbl].reshape(B, nbt * bs, *v_pool.shape[2:])
+    j = jnp.arange(nbt * bs, dtype=jnp.int32)[None, :]
+    k_pos = jnp.broadcast_to(j, (B, nbt * bs))
+    k_valid = j < cached_len[:, None] + seg_len[:, None]
+    q_pos = cached_len[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None, :]
+    return attention(q, k, v, q_pos=q_pos, k_pos=k_pos, k_valid=k_valid,
+                     causal=True, window=0)
+
+
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                         lengths: jax.Array, causal: bool = True) -> jax.Array:
     """Masked GQA attention oracle (full-scores form)."""

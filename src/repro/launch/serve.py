@@ -35,6 +35,13 @@ def main():
                          "per step (prompt-lookup drafter; exact greedy)")
     ap.add_argument("--wall-clock", action="store_true",
                     help="real time instead of the calibrated virtual clock")
+    ap.add_argument("--prefill-chunk", type=int, default=0, metavar="T",
+                    help="per-tick prefill-token budget: long prompts "
+                         "prefill as bounded chunks co-batched with decode "
+                         "(0 = unchunked)")
+    ap.add_argument("--auto-prefix", action="store_true",
+                    help="hash-register hot prompt prefixes so repeated "
+                         "prompt heads get suffix-only prefill")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,7 +62,14 @@ def main():
         spec = SpecConfig(k_max=args.spec, drafter="ngram")
     eng = UnifiedEngine(model, EngineConfig(
         capacity=8, pf_capacity=4, s_max=256,
-        virtual_time=not args.wall_clock, spec=spec))
+        virtual_time=not args.wall_clock, spec=spec,
+        prefill_chunk=args.prefill_chunk, auto_prefix=args.auto_prefix))
+    if args.prefill_chunk and not eng.chunk_budget:
+        print("note: --prefill-chunk is inactive for this model "
+              "(needs the paged cache and an attention-only pattern)")
+    if args.auto_prefix and not (eng.paged and eng.suffix_prefill):
+        print("note: --auto-prefix registers prefixes but suffix-only "
+              "prefill is inactive for this model")
 
     rng = np.random.default_rng(args.seed)
     aux = None
@@ -90,6 +104,10 @@ def main():
     if args.spec > 0:
         print(f"spec: drafted={m.spec_drafted} accepted={m.spec_accepted} "
               f"acceptance={m.acceptance_rate:.2f} steps={m.steps}")
+    if m.reused_prefix_tokens or args.prefill_chunk:
+        print(f"prefix: reused={m.reused_prefix_tokens} "
+              f"computed={m.prefill_tokens} "
+              f"max_pf_step={m.max_pf_tokens_step}")
     if args.finetune:
         tr = eng.trainers[names[0]]
         print(f"finetune: tokens={tr.tokens_trained} "

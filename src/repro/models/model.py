@@ -65,8 +65,15 @@ class _Plan:
             self.ft_valid = ft.mask
         if pf is not None:
             ar = jnp.arange(self.Sp, dtype=jnp.int32)
-            self.pf_pos = jnp.broadcast_to(ar, (self.Bp, self.Sp))
+            # suffix-only prefill: row positions start at the cached span
+            self.pf_cached = pf.cached_len
+            if pf.cached_len is not None:
+                self.pf_pos = pf.cached_len[:, None] + ar[None, :]
+            else:
+                self.pf_pos = jnp.broadcast_to(ar, (self.Bp, self.Sp))
             self.pf_valid = ar[None, :] < pf.length[:, None]
+        else:
+            self.pf_cached = None
         if dec is not None:
             self.dec_pos = dec.pos
             # per-query positions of the (1 + k)-token chunk, and per-row
@@ -350,15 +357,45 @@ def _attn_apply(cfg: ModelConfig, pos_idx: int, p: Dict, lr: Dict,
             qh = _rope_heads(qp, plan.pf_pos, h, cfg.rope_theta)
             kh = _rope_heads(kp, plan.pf_pos, kv, cfg.rope_theta)
             vh = vp.reshape(plan.Bp, plan.Sp, kv, hd)
-            outs[1] = L.attention(qh, kh, vh, q_pos=plan.pf_pos,
-                                  k_pos=plan.pf_pos, k_valid=plan.pf_valid,
-                                  causal=True, window=W, chunk=attn_chunk)
-            if plan.pf_tables is not None:   # paged: straight into the blocks
+            if plan.pf_tables is not None and plan.pf_cached is not None:
+                # suffix-only prefill: scatter the suffix K/V at its offset
+                # (never touching shared prefix blocks — all writes land at
+                # positions >= cached_len), then attend over the pooled view
+                # so cached prefix tokens are READ instead of recomputed
+                ck = _paged_write_chunk(new_cache["k"], kh, plan.pf_tables,
+                                        plan.pf_cached, plan.pf.length)
+                cv = _paged_write_chunk(new_cache["v"], vh, plan.pf_tables,
+                                        plan.pf_cached, plan.pf.length)
+                new_cache["k"], new_cache["v"] = ck, cv
+                mode = _paged_kernel_mode()
+                if mode:
+                    from repro.kernels.prefill_attn import \
+                        paged_prefill_attention
+                    outs[1] = paged_prefill_attention(
+                        qh, ck, cv, plan.pf_tables, plan.pf_cached,
+                        plan.pf.length, interpret=(mode == "interpret"))
+                else:
+                    k_pos, k_valid = _paged_chunk_mask(
+                        plan.pf_tables, ck.shape[1], plan.pf_cached,
+                        plan.pf.length)
+                    outs[1] = L.attention(
+                        qh, _paged_view(ck, plan.pf_tables),
+                        _paged_view(cv, plan.pf_tables), q_pos=plan.pf_pos,
+                        k_pos=k_pos, k_valid=k_valid, causal=True, window=0,
+                        chunk=attn_chunk)
+            else:
+                outs[1] = L.attention(qh, kh, vh, q_pos=plan.pf_pos,
+                                      k_pos=plan.pf_pos,
+                                      k_valid=plan.pf_valid,
+                                      causal=True, window=W,
+                                      chunk=attn_chunk)
+            if plan.pf_tables is not None and plan.pf_cached is None:
+                # paged full-prompt prefill: straight into the blocks
                 new_cache["k"] = _paged_write_prompt(new_cache["k"], kh,
                                                      plan.pf_tables)
                 new_cache["v"] = _paged_write_prompt(new_cache["v"], vh,
                                                      plan.pf_tables)
-            else:
+            elif plan.pf_tables is None:
                 sc = cache["k"].shape[1]
                 if plan.Sp <= sc:
                     new_cache["k"] = new_cache["k"].at[Bd:Bd + plan.Bp, :plan.Sp].set(kh)
@@ -457,17 +494,36 @@ def _mla_apply(cfg: ModelConfig, p: Dict, lr: Dict, plan: _Plan,
         qr = L.rope(qr, plan.pf_pos, cfg.rope_theta)
         ckv, kpe = _split_c(cp)
         kpe = L.rope(kpe[..., None, :], plan.pf_pos, cfg.rope_theta)[..., 0, :]
-        outs[1] = L.mla_attention(qn, qr, ckv, kpe, p["wuk"], p["wuv"],
-                                  q_pos=plan.pf_pos, k_pos=plan.pf_pos,
-                                  k_valid=plan.pf_valid, causal=True,
-                                  window=cfg.sliding_window,
-                                  chunk=attn_chunk)
-        if plan.pf_tables is not None:       # paged: straight into the blocks
+        if plan.pf_tables is not None and plan.pf_cached is not None:
+            # suffix-only prefill: offset-scatter the latent, attend over
+            # the pooled view so the cached prefix latent is read, not
+            # recomputed (same contract as the standard-attention path)
+            cc = _paged_write_chunk(new_cache["ckv"], ckv, plan.pf_tables,
+                                    plan.pf_cached, plan.pf.length)
+            ce = _paged_write_chunk(new_cache["kpe"], kpe, plan.pf_tables,
+                                    plan.pf_cached, plan.pf.length)
+            new_cache["ckv"], new_cache["kpe"] = cc, ce
+            k_pos, k_valid = _paged_chunk_mask(plan.pf_tables, cc.shape[1],
+                                               plan.pf_cached, plan.pf.length)
+            outs[1] = L.mla_attention(qn, qr, _paged_view(cc, plan.pf_tables),
+                                      _paged_view(ce, plan.pf_tables),
+                                      p["wuk"], p["wuv"], q_pos=plan.pf_pos,
+                                      k_pos=k_pos, k_valid=k_valid,
+                                      causal=True, window=0,
+                                      chunk=attn_chunk)
+        else:
+            outs[1] = L.mla_attention(qn, qr, ckv, kpe, p["wuk"], p["wuv"],
+                                      q_pos=plan.pf_pos, k_pos=plan.pf_pos,
+                                      k_valid=plan.pf_valid, causal=True,
+                                      window=cfg.sliding_window,
+                                      chunk=attn_chunk)
+        if plan.pf_tables is not None and plan.pf_cached is None:
+            # paged full-prompt prefill: straight into the blocks
             new_cache["ckv"] = _paged_write_prompt(new_cache["ckv"], ckv,
                                                    plan.pf_tables)
             new_cache["kpe"] = _paged_write_prompt(new_cache["kpe"], kpe,
                                                    plan.pf_tables)
-        else:
+        elif plan.pf_tables is None:
             sc = cache["ckv"].shape[1]
             if plan.Sp <= sc:
                 new_cache["ckv"] = new_cache["ckv"].at[Bd:Bd + plan.Bp, :plan.Sp].set(ckv)

@@ -24,12 +24,20 @@ class FTBatch(NamedTuple):
 
 
 class PFBatch(NamedTuple):
+    """Prefill bucket.  With ``cached_len`` set (paged layout only), rows
+    are *suffixes*: ``tokens``/``length`` cover only the uncached span of
+    each prompt, whose absolute positions start at ``cached_len`` — the
+    shared-prefix (or earlier-chunk) K/V already sits in the request's
+    blocks and is read, not recomputed.  RoPE, the causal mask, validity,
+    and last-token logit extraction are all offset by the cached span."""
     tokens: Array                    # [Bp, Sp] int32 (right-padded)
-    length: Array                    # [Bp] int32 true lengths
+    length: Array                    # [Bp] int32 true (suffix) lengths
     adapter: Array                   # [Bp] int32
     aux_embed: Optional[Array] = None  # [Bp, F, d]
     block_tables: Optional[Array] = None  # [Bp, nbt] int32 (paged KV layout;
     #                                  null-padded with block 0); None = dense
+    cached_len: Optional[Array] = None  # [Bp] int32 tokens of prefix K/V
+    #                                  already valid in the blocks; None = 0
 
 
 class DECBatch(NamedTuple):

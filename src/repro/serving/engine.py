@@ -9,6 +9,8 @@ optimizer on each trainer's accumulation boundary.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -19,7 +21,7 @@ from repro.core import flow
 from repro.core.unified import make_apply_step, make_forward_step, make_grad_step
 from repro.core.virtualization import MixedLoraModel
 from repro.models.stream import UnifiedBatch
-from repro.serving.clock import VirtualClock, WallClock
+from repro.serving.clock import CostModel, VirtualClock, WallClock
 from repro.serving.kvcache import CacheManager, PagedCacheManager
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
@@ -48,6 +50,15 @@ class EngineConfig:
     n_blocks: int = 0                 # pool size; 0 = match dense capacity
     spec: Optional[SpecConfig] = None  # speculative decoding (paged,
     #                                   attention-only models; exact greedy)
+    prefill_chunk: int = 0            # per-tick prefill-token budget: long
+    #                                   prompts prefill as a sequence of
+    #                                   bounded chunks that co-batch with
+    #                                   decode/ft rows (0 = unchunked)
+    auto_prefix: bool = False         # hash-register hot prompt prefixes so
+    #                                   reuse needs no caller-side prefix_id
+    auto_prefix_blocks: int = 4       # leading full blocks hashed (and
+    #                                   registered) for auto prefixes
+    cost: Optional[CostModel] = None  # virtual-clock cost model override
 
 
 class UnifiedEngine:
@@ -65,8 +76,18 @@ class UnifiedEngine:
             self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
                                          e.s_max)
         self.sched = Scheduler(e.scheduler, e.capacity)
-        self.clock = VirtualClock() if e.virtual_time else WallClock()
+        self.clock = VirtualClock(e.cost) if e.virtual_time else WallClock()
         self.metrics = Metrics()
+        # suffix-only prefill reads shared-prefix K/V through the block
+        # tables instead of recomputing it; chunked prefill additionally
+        # needs per-chunk resumability.  Both require a positional paged
+        # cache — mamba SSM state cannot resume mid-prompt from blocks.
+        self.suffix_prefill = self.paged and "mamba" not in self.cfg.pattern
+        self.chunk_budget = (e.prefill_chunk
+                             if e.prefill_chunk > 0 and self.suffix_prefill
+                             else 0)
+        self.prefilling: Dict[int, Request] = {}  # slot -> partial prefill
+        self._auto_seen: "OrderedDict[Tuple, int]" = OrderedDict()  # -> rid
 
         self.forward_step = make_forward_step(self.cfg, attn_chunk=e.attn_chunk)
         self.grad_step = make_grad_step(self.cfg, attn_chunk=e.attn_chunk)
@@ -132,6 +153,57 @@ class UnifiedEngine:
         which the (adapter, tokens) prefix identity cannot capture."""
         return "" if r.aux_embed is not None else r.prefix_id
 
+    def _maybe_auto_prefix(self, r: Request):
+        """Hot-prefix auto-detection: hash the request's leading full blocks
+        (keyed by adapter — K/V depend on the LoRA) and promote the hash to
+        a synthetic ``prefix_id`` once a second request carries it, so
+        shared system prompts get block reuse without callers ever passing
+        an explicit id.  First sight only marks the hash; the second
+        request registers after its prefill, the third onward reuses."""
+        e = self.ecfg
+        if (not e.auto_prefix or not self.paged or r.prefix_id
+                or r.aux_embed is not None):
+            return
+        # the digest is immutable per request — memoize it on the request
+        # so a deep backlog doesn't re-hash every waiting prompt every tick
+        key = getattr(r, "_auto_key", None)
+        if key is None:
+            bs = self.cachemgr.block_size
+            n = min(max(r.prompt_len - 1, 0) // bs, e.auto_prefix_blocks)
+            if n <= 0:
+                r._auto_key = ()                      # ineligible sentinel
+                return
+            head = np.ascontiguousarray(np.asarray(r.prompt[:n * bs],
+                                                   np.int64))
+            digest = hashlib.sha1(head.tobytes()).hexdigest()[:16]
+            key = r._auto_key = (r.adapter, n, digest)
+        elif key == ():
+            return
+        if key in self._auto_seen:
+            # only a DIFFERENT request proves the head is hot — the marker
+            # itself re-scans every tick it waits and must not self-promote
+            # (that would register every unique cold prompt)
+            if self._auto_seen[key] != r.rid:
+                self._auto_seen.move_to_end(key)
+                r.prefix_id = "auto:{}:{}:{}".format(*key)
+        else:
+            self._auto_seen[key] = r.rid
+            while len(self._auto_seen) > 1024:        # bounded memory
+                self._auto_seen.popitem(last=False)
+
+    def _register_span(self, r: Request) -> np.ndarray:
+        """Prompt span ``register_prefix`` publishes: the whole prompt for
+        explicit prefix ids (caller vouches for the template), only the
+        hashed leading blocks for auto-detected ones — reusers matched on
+        the hash may diverge right after it."""
+        if r.prefix_id.startswith("auto:"):
+            # the hashed block count is baked into the synthetic id
+            # ("auto:<adapter>:<n>:<digest>") — registering exactly that
+            # span keeps the registered tokens equal to the hashed ones
+            n = int(r.prefix_id.rsplit(":", 2)[1])
+            return np.asarray(r.prompt[:n * self.cachemgr.block_size])
+        return r.prompt
+
     def _pull_arrivals(self):
         now = self.clock.now()
         while self.future and self.future[0].arrival <= now:
@@ -142,6 +214,31 @@ class UnifiedEngine:
         """One scheduling + execution round; returns False when idle."""
         self._pull_arrivals()
         e = self.ecfg
+        # prefill rows this tick: continuing partial-prefill chunks first
+        # (they already hold slots), then fresh admissions.  ``chunks``
+        # parallels ``pf_reqs``: (request, computed tokens, final chunk?).
+        pf_reqs: List[flow.PFReq] = []
+        chunks: List[Tuple[Request, int, bool]] = []
+        budget_left = self.chunk_budget if self.chunk_budget else None
+        if self.paged:
+            for slot, r in list(self.prefilling.items()):
+                if len(pf_reqs) >= e.pf_capacity:
+                    break
+                if budget_left is not None and budget_left <= 0:
+                    break
+                rem = r.prompt_len - r.prefilled
+                take = rem if budget_left is None else min(rem, budget_left)
+                if budget_left is not None:
+                    budget_left -= take
+                pf_reqs.append(flow.PFReq(
+                    tokens=r.prompt[r.prefilled:r.prefilled + take],
+                    rid=r.rid,
+                    slot=(self.model.store.slot_of(r.adapter)
+                          if r.adapter else -1),
+                    aux_embed=r.aux_embed,
+                    block_table=self.cachemgr.table_of(slot),
+                    cached_len=r.prefilled))
+                chunks.append((r, take, r.prefilled + take >= r.prompt_len))
         if self.paged:
             # a request whose projected blocks can never fit is unservable
             for r in list(self.waiting):
@@ -152,8 +249,16 @@ class UnifiedEngine:
                     r.t_finish = self.clock.now()
                     self.waiting.remove(r)
                     self.finished.append(r)
+            if e.auto_prefix:
+                for r in self.waiting:
+                    self._maybe_auto_prefix(r)
+            suffix_fn = None
+            if self.suffix_prefill:
+                suffix_fn = lambda r: r.prompt_len - self.cachemgr.\
+                    reused_tokens(r.prompt, r.adapter, self._prefix_of(r))
             decision = self.sched.decide(
-                self.waiting, len(self.active), self.cachemgr.n_free,
+                self.waiting, len(self.active) + len(self.prefilling),
+                self.cachemgr.n_free,
                 e.pf_capacity, self.trainers_pending(),
                 # registry-held prefix blocks are sheddable inside try_admit,
                 # so the gate must count them as available
@@ -164,7 +269,9 @@ class UnifiedEngine:
                 need_fn=lambda r: self.cachemgr.fresh_need(
                     r.prompt_len, r.max_new_tokens, r.prompt, r.adapter,
                     self._prefix_of(r), headroom=self._headroom_for(r)),
-                spec_headroom=self.spec_headroom)
+                spec_headroom=self.spec_headroom,
+                pf_rows_used=len(pf_reqs), pf_token_budget=budget_left,
+                suffix_fn=suffix_fn, chunked=bool(self.chunk_budget))
         else:
             decision = self.sched.decide(self.waiting, len(self.active),
                                          self.cachemgr.n_free, e.pf_capacity,
@@ -181,9 +288,9 @@ class UnifiedEngine:
             budget -= len(got)
 
         # prefill admissions
-        pf_reqs: List[flow.PFReq] = []
-        admitted: List[Request] = []
         for r in decision.admit:
+            if len(pf_reqs) >= e.pf_capacity:
+                break
             # resolve the adapter BEFORE reserving cache resources: acquire
             # can fail (unknown adapter, or every slot pinned/retained) and
             # must not leak a reservation or abort the tick
@@ -200,10 +307,13 @@ class UnifiedEngine:
                     break          # adapter bank saturated; retry next tick
             else:
                 aslot = -1
+            reused = 0
             if self.paged:
-                slot = self.cachemgr.try_admit(r.prompt, r.max_new_tokens,
-                                               r.adapter, self._prefix_of(r),
-                                               headroom=self._headroom_for(r))
+                adm = self.cachemgr.try_admit(r.prompt, r.max_new_tokens,
+                                              r.adapter, self._prefix_of(r),
+                                              headroom=self._headroom_for(r))
+                slot = adm[0] if adm is not None else None
+                reused = adm[1] if adm is not None else 0
             else:
                 slot = self.cachemgr.alloc()
             if slot is None:
@@ -221,14 +331,46 @@ class UnifiedEngine:
                                  suffix=r.draft_suffix),
                     AdaptiveK(self.spec))
             self.waiting.remove(r)
-            admitted.append(r)
-            # prefill writes through write_table_of: shared prefix entries
-            # are nulled so prefill never rewrites blocks it doesn't own
-            pf_reqs.append(flow.PFReq(
-                tokens=r.prompt, rid=r.rid, slot=aslot,
-                aux_embed=r.aux_embed,
-                block_table=(self.cachemgr.write_table_of(slot)
-                             if self.paged else None)))
+            if self.suffix_prefill:
+                # suffix-only prefill: shared-prefix K/V is read through the
+                # full block table; this chunk's writes land at positions
+                # >= cached_len, so they can never touch a shared block.
+                # A COLD start (no reused prefix) keeps the cheaper prompt-
+                # local attention path (cached_len=None) — there is nothing
+                # in the pool for its first chunk to read back.
+                r.prefilled = reused
+                suffix = r.prompt_len - r.prefilled
+                take = (suffix if budget_left is None
+                        else min(suffix, budget_left))
+                self.metrics.reused_prefix_tokens += reused
+                if take <= 0:
+                    # an earlier try_admit this tick shed the prefix this
+                    # request's suffix was priced against, draining the
+                    # budget: park it as a partial prefill (its slot and
+                    # blocks are held) instead of assembling a dead row
+                    self.prefilling[slot] = r
+                    continue
+                if budget_left is not None:
+                    budget_left -= take
+                pf_reqs.append(flow.PFReq(
+                    tokens=r.prompt[r.prefilled:r.prefilled + take],
+                    rid=r.rid, slot=aslot, aux_embed=r.aux_embed,
+                    block_table=(self.cachemgr.table_of(slot) if reused
+                                 else self.cachemgr.write_table_of(slot)),
+                    cached_len=r.prefilled if reused else None))
+                chunks.append((r, take, r.prefilled + take >= r.prompt_len))
+            else:
+                # full-prompt recompute (dense layout, or hybrid models
+                # whose SSM state must see every prompt token): prefill
+                # writes through write_table_of — shared prefix entries are
+                # nulled so prefill never rewrites blocks it doesn't own
+                r.prefilled = 0
+                pf_reqs.append(flow.PFReq(
+                    tokens=r.prompt, rid=r.rid, slot=aslot,
+                    aux_embed=r.aux_embed,
+                    block_table=(self.cachemgr.write_table_of(slot)
+                                 if self.paged else None)))
+                chunks.append((r, r.prompt_len, True))
 
         # decode / verify bucket (static: full table when any request is
         # active; chunk width 1 + k_max whenever speculation is on, so the
@@ -292,6 +434,12 @@ class UnifiedEngine:
         batch = flow.assemble(ft_rows, pf_reqs, dec_tokens, dec_pos,
                               dec_slots, e.flow, dec_tables=dec_tables,
                               dec_lens=dec_lens)
+        # chunked-prefill SLO invariant, checked on the ASSEMBLED batch: a
+        # step that runs prefill while requests are mid-decode must carry
+        # their decode bucket — any future path that builds a prefill step
+        # without one trips this (gated to 0 in bench_prefix / CI)
+        if pf_reqs and self.active and batch.dec is None:
+            self.metrics.starved_ticks += 1
         cache = self.cachemgr.step_cache() if (pf_reqs or use_dec) else None
 
         store = self.model.store
@@ -307,8 +455,9 @@ class UnifiedEngine:
                               else (out.pf_logits if out.pf_logits is not None
                                     else out.ft_loss_sum))
 
-        # ---- time accounting ----
-        pf_tok = int(sum(r.prompt_len for r in admitted))
+        # ---- time accounting (suffix tokens only: skipped prefix spans
+        # cost nothing, which is the whole point of the reuse) ----
+        pf_tok = int(sum(take for _, take, _ in chunks))
         ft_tok = int(sum(len(r.tokens) for r in ft_rows))
         dec_extra = int(sum(len(d) for d in drafts.values()))
         if isinstance(self.clock, VirtualClock):
@@ -321,19 +470,28 @@ class UnifiedEngine:
         # ---- scatter results back ----
         if out.cache is not None:
             self.cachemgr.update(out.cache)
-        if admitted:
+        if pf_reqs:
             pf_logits = np.asarray(out.pf_logits)
             assignments, lengths = [], []
-            for i, r in enumerate(admitted):
-                tok = int(pf_logits[i].argmax())
-                r.output.append(tok)
-                r.t_first_token = now
-                r.token_times.append(now)
-                r.state = State.DECODE
-                self._last_tokens[r.dec_slot] = tok
-                self.active[r.dec_slot] = r
+            finals: List[Request] = []
+            for i, (r, take, final) in enumerate(chunks):
+                r.prefilled += take
                 assignments.append((i, r.dec_slot))
-                lengths.append(r.prompt_len)
+                lengths.append(r.prefilled)
+                if final:
+                    tok = int(pf_logits[i].argmax())
+                    r.output.append(tok)
+                    r.t_first_token = now
+                    r.token_times.append(now)
+                    r.state = State.DECODE
+                    self._last_tokens[r.dec_slot] = tok
+                    self.active[r.dec_slot] = r
+                    self.prefilling.pop(r.dec_slot, None)
+                    finals.append(r)
+                else:
+                    # partial prefill: K/V through ``prefilled`` is in the
+                    # blocks; the next chunk attends to it via cached_len
+                    self.prefilling[r.dec_slot] = r
             # the model wrote prefill rows at [Bd, Bd+Bp): tell the manager
             # where they start (state rows only under the paged layout — the
             # K/V itself went straight into the request's blocks)
@@ -341,13 +499,16 @@ class UnifiedEngine:
                                          src_base=e.capacity if use_dec
                                          else 0)
             if self.paged:
-                for r in admitted:
+                for r in finals:
                     if self._prefix_of(r):
                         self.cachemgr.register_prefix(self._prefix_of(r),
-                                                      r.dec_slot, r.prompt,
+                                                      r.dec_slot,
+                                                      self._register_span(r),
                                                       r.adapter)
             self.metrics.prefill_tokens += pf_tok
-            for r in admitted:
+            self.metrics.max_pf_tokens_step = max(
+                self.metrics.max_pf_tokens_step, pf_tok)
+            for r in finals:
                 self._maybe_finish(r, now)
         if use_dec:
             dec_logits = np.asarray(out.dec_logits)
@@ -454,7 +615,8 @@ class UnifiedEngine:
         """Run until all inference requests finish and trainers complete."""
         for _ in range(max_ticks):
             busy = self.tick()
-            drained = (not self.waiting and not self.active and not self.future
+            drained = (not self.waiting and not self.active
+                       and not self.prefilling and not self.future
                        and not self.trainers_pending())
             if until_drained and drained:
                 break
@@ -468,5 +630,5 @@ class UnifiedEngine:
 
     @property
     def all_requests(self) -> List[Request]:
-        return self.finished + list(self.active.values()) + self.waiting \
-            + self.future
+        return self.finished + list(self.active.values()) \
+            + list(self.prefilling.values()) + self.waiting + self.future

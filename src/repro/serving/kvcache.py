@@ -287,16 +287,25 @@ class PagedCacheManager:
     # -- admission -----------------------------------------------------------
     def _lookup_shared(self, prompt: np.ndarray, adapter: str,
                        prefix_id: str, touch: bool = False) -> List[int]:
-        """Registered prefix blocks this prompt can reuse (same adapter AND
-        identical leading tokens — K/V depend on both)."""
+        """Registered prefix blocks this prompt can reuse: the LONGEST run
+        of leading full blocks whose tokens match (same adapter too — K/V
+        depend on the LoRA).  A prompt that diverges from the registered
+        template mid-way still shares the blocks before the divergence.
+        Capped so at least ONE prompt token is always left uncached:
+        suffix-only prefill needs a live query to produce the first-token
+        logits, and that token's K/V write must never land in a block the
+        registry still owns."""
         if not prefix_id or prefix_id not in self._prefixes:
             return []
         p_adapter, p_toks, p_bids = self._prefixes[prefix_id]
-        n_full = min(len(p_bids), len(prompt) // self.block_size)
-        if (p_adapter != adapter or n_full == 0 or
-                not np.array_equal(p_toks[:n_full * self.block_size],
-                                   np.asarray(prompt)[:n_full *
-                                                      self.block_size])):
+        bs = self.block_size
+        n_cap = min(len(p_bids), max(len(prompt) - 1, 0) // bs)
+        if p_adapter != adapter or n_cap == 0:
+            return []
+        eq = (p_toks[:n_cap * bs] == np.asarray(prompt)[:n_cap * bs]) \
+            .reshape(n_cap, bs).all(axis=1)
+        n_full = int(np.argmin(eq)) if not eq.all() else n_cap
+        if n_full == 0:
             return []
         if touch:
             self._prefixes.move_to_end(prefix_id)         # LRU touch
@@ -316,14 +325,27 @@ class PagedCacheManager:
         return (self.projected_blocks(prompt_len, max_new + headroom)
                 - held_elsewhere)
 
+    def reused_tokens(self, prompt: np.ndarray, adapter: str = "",
+                      prefix_id: str = "") -> int:
+        """Prompt tokens a registered prefix would serve from shared K/V —
+        the span suffix-only prefill skips.  Pure preview (no LRU touch);
+        the scheduler charges only ``prompt_len - reused_tokens`` against
+        its prefill-token budget."""
+        return len(self._lookup_shared(np.asarray(prompt), adapter,
+                                       prefix_id)) * self.block_size
+
     def try_admit(self, prompt: np.ndarray, max_new: int, adapter: str = "",
-                  prefix_id: str = "", headroom: int = 0) -> Optional[int]:
+                  prefix_id: str = "",
+                  headroom: int = 0) -> Optional[Tuple[int, int]]:
         """Reserve a state slot + the request's projected block budget
         (sharing registered prefix blocks when ``prefix_id`` matches), but
         only *allocate* the blocks the prompt needs now — the remainder is a
         reservation ``grow`` fills on demand.  ``headroom`` adds transient
-        speculative-draft tokens to the projected budget.  Returns the state
-        slot, or None when slots or spendable blocks are exhausted."""
+        speculative-draft tokens to the projected budget.  Returns
+        ``(state slot, reused prefix tokens)`` — the reused span is the
+        leading prompt tokens whose K/V arrived by refcount instead of
+        recompute, i.e. what suffix-only prefill may skip — or None when
+        slots or spendable blocks are exhausted."""
         if not self._free_slots:
             return None
         need = self.projected_blocks(len(prompt), max_new + headroom)
@@ -350,7 +372,7 @@ class PagedCacheManager:
         self.reserved[slot] = max(need, len(self.tables[slot]))
         self._debt += self._debt_of(slot)
         self.lens[slot] = 0
-        return slot
+        return slot, len(shared) * self.block_size
 
     def free(self, slot: int):
         self._debt -= self._debt_of(slot)

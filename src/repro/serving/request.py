@@ -37,6 +37,9 @@ class Request:
     t_finish: Optional[float] = None
     token_times: List[float] = dataclasses.field(default_factory=list)
     dec_slot: int = -1                 # decode-table row while active
+    prefilled: int = 0                 # prompt tokens whose K/V is already in
+    # the cache (reused shared prefix + committed prefill chunks); the
+    # request leaves PREFILL when this reaches prompt_len
 
     @property
     def prompt_len(self) -> int:

@@ -56,21 +56,41 @@ class Scheduler:
                free_blocks: Optional[int] = None, total_blocks: int = 0,
                block_size: int = 0, s_max: int = 0,
                need_fn: Optional[Callable[[Request], int]] = None,
-               spec_headroom: int = 0) -> Decision:
+               spec_headroom: int = 0, pf_rows_used: int = 0,
+               pf_token_budget: Optional[int] = None,
+               suffix_fn: Optional[Callable[[Request], int]] = None,
+               chunked: bool = False) -> Decision:
         """``need_fn`` (paged engines) returns the blocks a request would
         actually consume — projected blocks minus registered shared prefix
         blocks — so the gate mirrors what admission will really reserve.
         ``spec_headroom`` widens the fallback projection by the transient
-        speculative-draft tokens a resident request may hold mid-verify."""
+        speculative-draft tokens a resident request may hold mid-verify.
+
+        Prefix-aware accounting: ``suffix_fn`` returns the tokens prefill
+        will actually *compute* for a request (prompt minus the registered
+        shared-prefix span) — the token budget charges that, not the raw
+        prompt length.  ``pf_rows_used``/``pf_token_budget`` subtract the
+        bucket rows and tokens already claimed by in-flight partial-prefill
+        chunks.  With ``chunked`` set, a long suffix no longer monopolizes
+        a tick: admission charges only the first chunk (``min(suffix,
+        remaining budget)``) and stops when the per-tick budget is spent —
+        the engine feeds the rest as later chunks."""
         c = self.cfg
         admit: List[Request] = []
-        budget = c.max_prefill_tokens
+        budget = (c.max_prefill_tokens if pf_token_budget is None
+                  else pf_token_budget)
+        row_cap = max(min(c.max_prefill_per_tick, n_free_slots,
+                          pf_capacity) - pf_rows_used, 0)
         blocks_left = free_blocks
         for r in waiting:
-            if len(admit) >= min(c.max_prefill_per_tick, n_free_slots,
-                                 pf_capacity):
+            if len(admit) >= row_cap:
                 break
-            if r.prompt_len > budget and admit:
+            tok = suffix_fn(r) if suffix_fn is not None else r.prompt_len
+            if chunked:
+                if budget <= 0:
+                    break
+                tok = min(tok, budget)
+            elif tok > budget and admit:
                 break
             if blocks_left is not None:
                 need = (need_fn(r) if need_fn is not None
@@ -80,7 +100,7 @@ class Scheduler:
                     break              # memory-bound: stop admitting this tick
                 blocks_left -= need
             admit.append(r)
-            budget -= r.prompt_len
+            budget -= tok
 
         occupancy = n_active / max(self.capacity, 1)
         if free_blocks is not None and total_blocks > 0:

@@ -64,6 +64,14 @@ class Metrics:
     spec_drafted: int = 0        # draft tokens submitted for verification
     spec_accepted: int = 0       # drafts that matched the greedy argmax
     spec_steps: int = 0          # verify steps with at least one draft
+    # prefix caching / chunked prefill accounting.  ``prefill_tokens``
+    # counts COMPUTED suffix tokens only (what the clock charges);
+    # ``reused_prefix_tokens`` is the skipped shared-prefix span, so
+    # prompt tokens served = prefill_tokens + reused_prefix_tokens.
+    reused_prefix_tokens: int = 0
+    max_pf_tokens_step: int = 0  # per-step prefill-token high-water mark
+    starved_ticks: int = 0       # steps that ran prefill while decoders
+    #                              were active but got no decode rows
 
     @property
     def acceptance_rate(self) -> float:

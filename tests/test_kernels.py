@@ -61,6 +61,29 @@ def test_bgmv_sweep(dtype, T, d, r, n, o, bo):
                                rtol=TOLS[dtype])
 
 
+@pytest.mark.parametrize("T", [29, 41, 9, 5])
+def test_smlm_ragged_stream_keeps_fused_head(T):
+    """A ragged stream (e.g. a decode tail after the tile-aligned ft+pf
+    segments) must not fall back to the dense oracle wholesale: the aligned
+    head runs the fused kernel and the sub-tile remainder runs per-token
+    BGMV — so a remainder with MIXED adapters (decode rows) stays exact."""
+    ks = jax.random.split(jax.random.PRNGKey(T), 5)
+    d, r, n, o, bt = 16, 4, 3, 16, 8
+    x = _mk(ks[0], (T, d), jnp.float32)
+    a = _mk(ks[1], (n, d, r), jnp.float32)
+    b = _mk(ks[2], (n, r, o), jnp.float32)
+    t0 = (T // bt) * bt
+    head_ids = jnp.repeat(jax.random.randint(ks[3], (T // bt,), -1, n), bt)
+    tail_ids = jax.random.randint(ks[4], (T - t0,), -1, n)  # per-token mix
+    ids = jnp.concatenate([head_ids, tail_ids])
+    y = ops.smlm(x, a, b, ids, block_t=bt, block_o=8, interpret=True)
+    assert y.shape == (T, o)
+    scale = ((ids >= 0) & (ids < n)).astype(jnp.float32)
+    yr = ref.bgmv_ref(x, a, b, ids, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-5,
+                               atol=2e-5)
+
+
 def test_smlm_dynamic_scale():
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     T, d, r, n, o, bt = 32, 16, 4, 3, 16, 8

@@ -55,9 +55,11 @@ def test_admission_refused_when_out_of_blocks():
     # 5 usable blocks of 16 tokens; each request projects 2 blocks
     m = _mgr(capacity=4, n_blocks=6)
     prompt = np.zeros((20,), np.int32)
-    s1 = m.try_admit(prompt, max_new=8)
-    s2 = m.try_admit(prompt, max_new=8)
-    assert s1 is not None and s2 is not None
+    a1 = m.try_admit(prompt, max_new=8)
+    a2 = m.try_admit(prompt, max_new=8)
+    assert a1 is not None and a2 is not None
+    s1, reused = a1
+    assert reused == 0                    # no registered prefix to reuse
     assert m.free_blocks == 1
     assert m.try_admit(prompt, max_new=8) is None     # needs 2, only 1 free
     m.free(s1)
@@ -74,17 +76,19 @@ def test_admission_refused_when_out_of_state_slots():
 def test_prefix_sharing_and_copy_on_write():
     m = _mgr(capacity=4, n_blocks=16, bs=8)
     prompt = np.arange(20, dtype=np.int32)            # 2 full blocks + tail
-    s1 = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
+    s1, _ = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
     m.register_prefix("sys", s1, prompt, adapter="a")
     used_before = m.allocator.n_used
-    s2 = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
+    s2, reused = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
     # the two full prefix blocks are shared, only the tail + growth are fresh
+    assert reused == 16                               # 2 blocks of 8 reused
     assert m.tables[s2][:2] == m.tables[s1][:2]
     assert m.allocator.n_used == used_before + (len(m.tables[s2]) - 2)
     shared_bid = m.tables[s2][0]
     assert m.allocator.is_shared(shared_bid)
     # a different adapter must NOT reuse the prefix (K/V depend on the LoRA)
-    s3 = m.try_admit(prompt, max_new=8, adapter="b", prefix_id="sys")
+    s3, r3 = m.try_admit(prompt, max_new=8, adapter="b", prefix_id="sys")
+    assert r3 == 0
     assert m.tables[s3][0] != m.tables[s1][0]
     # copy-on-write: force a write into the shared block
     new_bid = m.ensure_writable(s2, pos=0)
@@ -102,14 +106,17 @@ def test_prefix_sharing_and_copy_on_write():
 
 def test_cow_copies_block_payload():
     m = _mgr(capacity=2, n_blocks=8, bs=16)
-    s1 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
-    m.register_prefix("p", s1, np.arange(16, dtype=np.int32))
+    prompt = np.arange(20, dtype=np.int32)            # 1 full block + tail
+    s1, _ = m.try_admit(prompt, 8, prefix_id="p")
+    m.register_prefix("p", s1, prompt)
     bid = m.tables[s1][0]
     # write a recognizable payload into the shared block of one pool leaf
     leaf = m.cache["layers"][0]["k"]
     m.cache["layers"][0]["k"] = leaf.at[:, bid].set(7.0)
-    s2 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    s2, reused = m.try_admit(prompt, 8, prefix_id="p")
+    assert reused == 16
     new_bid = m.ensure_writable(s2, pos=0)
+    assert new_bid != bid
     got = np.asarray(m.cache["layers"][0]["k"][:, new_bid])
     np.testing.assert_array_equal(got, np.full_like(got, 7.0))
 
@@ -218,14 +225,15 @@ def test_prefix_shedding_skips_unreclaimable_registrations():
     nothing — the shed loop must keep such registrations (the sharing
     metadata stays useful) and admission must simply refuse."""
     m = _mgr(capacity=8, n_blocks=5, bs=16)           # 4 usable blocks
-    prompt = np.arange(32, dtype=np.int32)            # 2 full blocks
-    s1 = m.try_admit(prompt, max_new=0, prefix_id="hot")
+    prompt = np.arange(33, dtype=np.int32)            # 2 full blocks + tail
+    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="hot")
     m.register_prefix("hot", s1, prompt)
-    s2 = m.try_admit(prompt, max_new=0, prefix_id="hot")  # shares, ref=3
-    assert m.tables[s2] == m.tables[s1]
+    s2, reused = m.try_admit(prompt, max_new=0, prefix_id="hot")  # shares 2
+    assert reused == 32
+    assert m.tables[s2][:2] == m.tables[s1][:2]
     m.free(s1)                                        # consumer s2 remains
-    # pool: 2 shared blocks (ref=2) + 2 free; a 3-block request must refuse
-    # WITHOUT destroying the still-consumed "hot" registration
+    # pool: 2 shared blocks (ref=2) + s2's tail + 1 free; a 3-block request
+    # must refuse WITHOUT destroying the still-consumed "hot" registration
     assert m.try_admit(np.arange(48, dtype=np.int32), 0) is None
     assert "hot" in m.prefixes
     m.free(s2)                                        # now only registry holds
@@ -257,8 +265,8 @@ def test_cow_leaves_state_rows_untouched():
     rewritten."""
     cfg = get_reduced("jamba-1.5-large-398b")
     m = PagedCacheManager(cfg, 2, 2, 64, block_size=16, n_blocks=8)
-    s1 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
-    m.register_prefix("p", s1, np.arange(16, dtype=np.int32))
+    s1, _ = m.try_admit(np.arange(20, dtype=np.int32), 8, prefix_id="p")
+    m.register_prefix("p", s1, np.arange(20, dtype=np.int32))
     # paint every state row so any stray write is visible
     for i, d in enumerate(m.cache["layers"]):
         for k in d:
@@ -266,7 +274,7 @@ def test_cow_leaves_state_rows_untouched():
                 m.cache["layers"][i][k] = d[k] + 3.0
     before = {k: np.asarray(v) for k, v in enumerate(
         [d.get("h") for d in m.cache["layers"]]) if v is not None}
-    s2 = m.try_admit(np.arange(16, dtype=np.int32), 8, prefix_id="p")
+    s2, _ = m.try_admit(np.arange(20, dtype=np.int32), 8, prefix_id="p")
     new_bid = m.ensure_writable(s2, pos=0)
     assert new_bid != m.tables[s1][0]
     after = {k: np.asarray(v) for k, v in enumerate(
@@ -281,7 +289,7 @@ def test_blocks_allocated_on_demand_with_reservation():
     projected life is a reservation the gate must not spend, and ``grow``
     converts to real blocks as the sequence advances."""
     m = _mgr(capacity=4, n_blocks=9, bs=16)           # 8 usable
-    s = m.try_admit(np.zeros((20,), np.int32), max_new=24)  # 44 tok -> 3 blk
+    s, _ = m.try_admit(np.zeros((20,), np.int32), max_new=24)  # 44 tok -> 3
     assert len(m.tables[s]) == 2                      # ceil(20/16) held now
     assert m.reserved[s] == 3 and m.reserved_debt == 1
     assert m.free_blocks == 8 - 3                     # debt is not spendable
@@ -297,7 +305,7 @@ def test_truncate_releases_blocks_and_restores_reservation():
     to the pool and the reservation debt reappears (the request can still
     grow to its projected life later)."""
     m = _mgr(capacity=4, n_blocks=9, bs=16)
-    s = m.try_admit(np.zeros((20,), np.int32), max_new=24, headroom=8)
+    s, _ = m.try_admit(np.zeros((20,), np.int32), max_new=24, headroom=8)
     assert m.reserved[s] == 4                         # 20+24+8 tok -> 4 blk
     m.grow(s, 52)                                     # draft overshoot
     assert len(m.tables[s]) == 4 and m.reserved_debt == 0
@@ -315,10 +323,11 @@ def test_truncate_shared_prefix_blocks_survive_rollback():
     decref it: the registry (and any sibling request) keeps it alive, and
     the survivor's table is untouched."""
     m = _mgr(capacity=4, n_blocks=16, bs=8)
-    prompt = np.arange(16, dtype=np.int32)            # exactly 2 full blocks
-    s1 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
+    s1, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
     m.register_prefix("sys", s1, prompt)
-    s2 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    s2, reused = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    assert reused == 16
     shared = list(m.tables[s2])
     assert shared[:2] == m.tables[s1][:2]
     assert m.allocator.ref[shared[0]] == 3            # s1 + s2 + registry
@@ -330,7 +339,7 @@ def test_truncate_shared_prefix_blocks_survive_rollback():
     assert m.allocator.ref[shared[1]] == 2            # s2's ref released
     assert m.tables[s1][:2] == shared[:2]             # sibling intact
     # the survivor's payload is still addressable: re-admitting reuses it
-    s3 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    s3, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
     assert m.tables[s3][:2] == shared[:2]
 
 
@@ -339,14 +348,14 @@ def test_truncate_through_shared_blocks_keeps_debt_invariant():
     debt for blocks that never returned to the pool: on a fully committed
     pool the invariant n_free >= debt (and therefore grow()'s
     within-reservation guarantee) has to survive."""
-    m = _mgr(capacity=8, n_blocks=6, bs=8)            # 5 usable
-    prompt = np.arange(16, dtype=np.int32)            # 2 full blocks
-    s1 = m.try_admit(prompt, max_new=8, prefix_id="p")     # 2 held, 1 debt
+    m = _mgr(capacity=8, n_blocks=8, bs=8)            # 7 usable
+    prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
+    s1, _ = m.try_admit(prompt, max_new=7, prefix_id="p")  # 3 held
     m.register_prefix("p", s1, prompt)
-    s2 = m.try_admit(prompt, max_new=8, prefix_id="p")     # shares, 1 debt
-    m.grow(s2, 17)                                    # s2 fills its reserve
-    filler = m.try_admit(np.arange(8, dtype=np.int32), max_new=0)
-    assert filler is not None
+    s2, reused = m.try_admit(prompt, max_new=7, prefix_id="p")
+    assert reused == 16                               # shares 2, owns tail
+    filler, _ = m.try_admit(np.arange(8, dtype=np.int32), max_new=16)
+    assert filler is not None                         # 1 held + 2 debt
     assert m.free_blocks == 0                         # pool fully committed
     m.truncate(s2, 4)                                 # back through shared
     assert m.allocator.n_free >= m.reserved_debt
@@ -355,6 +364,72 @@ def test_truncate_through_shared_blocks_keeps_debt_invariant():
     # projected life, s2 to its (shared-drop-reduced) reservation
     assert m.grow(s1, 24) >= 24
     assert m.grow(s2, m.reserved[s2] * 8) >= m.reserved[s2] * 8
+    assert m.grow(filler, 24) >= 24
+
+
+def test_truncate_reused_registered_prefix_never_frees_registry_blocks():
+    """Speculative rollback on a request that REUSED a registered prefix
+    (refcount came from the registry, not a CoW fork): repeated grow/
+    truncate cycles — including truncating all the way back into the
+    shared span — must never drop a registry-held block's refcount to
+    zero, and the prefix must stay reusable afterwards."""
+    m = _mgr(capacity=4, n_blocks=16, bs=8)
+    prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
+    s1, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    m.register_prefix("sys", s1, prompt)
+    m.free(s1)                                        # only registry holds
+    reg_bids = list(m._prefixes["sys"][2])
+    assert all(m.allocator.ref[b] == 1 for b in reg_bids)
+    s2, reused = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    assert reused == 16 and m.tables[s2][:2] == reg_bids
+    # spec-decode shape: grow over draft positions, then roll back —
+    # repeatedly, and finally into the shared prefix itself
+    for new_len in (20, 18, 17, 4):
+        m.grow(s2, 24)
+        m.truncate(s2, new_len)
+        assert all(m.allocator.ref[b] >= 1 for b in reg_bids), new_len
+        assert m.allocator.n_free >= m.reserved_debt
+    m.free(s2)
+    assert all(m.allocator.ref[b] == 1 for b in reg_bids)  # registry's ref
+    assert "sys" in m.prefixes
+    s3, r3 = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    assert r3 == 16 and m.tables[s3][:2] == reg_bids  # still reusable
+
+
+def test_engine_spec_truncate_over_reused_prefix_matches_greedy():
+    """End-to-end regression for Engine._prefix_of x speculative truncate:
+    spec decoding over a REUSED registered prefix must roll back only its
+    own draft blocks (never registry-held prefix blocks) and emit exactly
+    the plain-greedy outputs."""
+    from repro.spec import SpecConfig
+    cfg = get_reduced("llama3-8b")
+    sys_prompt = np.arange(32, dtype=np.int32)
+
+    def mk(n):
+        rng = np.random.default_rng(7)
+        return [Request(rid=i,
+                        prompt=np.concatenate([sys_prompt, rng.integers(
+                            0, cfg.vocab, 5 + i).astype(np.int32)]),
+                        adapter="serve", max_new_tokens=8,
+                        prefix_id="sys", arrival=0.3 * i) for i in range(4)]
+
+    plain = _engine(cfg, paged=True, block_size=16)
+    for r in mk(4):
+        plain.submit(r)
+    plain.run(max_ticks=5000)
+    spec = _engine(cfg, paged=True, block_size=16,
+                   spec=SpecConfig(k_max=3, drafter="ngram"))
+    for r in mk(4):
+        spec.submit(r)
+    spec.run(max_ticks=5000)
+    assert len(spec.finished) == len(plain.finished) == 4
+    assert ({r.rid: r.output for r in spec.finished}
+            == {r.rid: r.output for r in plain.finished})
+    # the registered prefix survived every rollback: its blocks are still
+    # alive under the registry's refcount
+    mgr = spec.cachemgr
+    assert "sys" in mgr.prefixes
+    assert all(mgr.allocator.ref[b] >= 1 for b in mgr._prefixes["sys"][2])
 
 
 def test_dense_truncate_rolls_length_only():
