@@ -1,0 +1,159 @@
+"""Over-admission + recompute preemption benchmark.
+
+The conservative reservation gate charges every request's worst-case block
+need up front, so a long-``max_new`` trace whose requests usually stop early
+(eos) strands most of the pool: reserved-but-unfilled debt is never lent
+out.  This benchmark replays exactly that trace at EQUAL HBM budget (same
+block pool in every arm) with the lending factor swept over
+``over_admit in {1.0, 1.25, 1.5}``:
+
+* exactness is asserted FIRST: every arm must emit byte-identical outputs —
+  over-admission (and any preemption it triggers) may change *when* tokens
+  are computed, never *what* is computed;
+* the conservative arm must show the stranding this fixes (>= 25% of the
+  pool idle on average);
+* the lending arms must convert that idle capacity into admitted
+  concurrency and decode throughput (fixed per-step cost amortizes over
+  more resident rows);
+* every arm must drain leak-free (allocator fully free, zero debt).
+
+The eos token is picked by probing the model's own greedy output on the
+first prompt, so actual generation lengths spread out (some requests stop
+early, some run to ``max_new``) while reservations stay worst-case — the
+exact gap over-admission exploits.  Emits ``BENCH_preempt.json`` for the
+run.py harness / CI gate.
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+
+import numpy as np
+
+from benchmarks.common import build_model, csv
+from repro.serving.clock import CostModel
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request, State
+from repro.serving.slo import SLOConfig, slo_attainment
+
+COST = CostModel()                     # decode-bound serving regime
+BLOCK = 16
+S_MAX = 96
+MAX_NEW = 80                           # worst-case reservation: 6 blocks/req
+N_BLOCKS = 20                          # 19 usable at equal HBM in every arm
+N_REQUESTS = 10
+FACTORS = (1.0, 1.25, 1.5)
+
+
+def _requests(vocab: int, eos: int) -> list:
+    rng = np.random.default_rng(9)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, 12).astype(np.int32),
+                    adapter="lora0", max_new_tokens=MAX_NEW, eos_token=eos,
+                    arrival=0.05 * i)
+            for i in range(N_REQUESTS)]
+
+
+def _engine(model, over_admit: float) -> UnifiedEngine:
+    return UnifiedEngine(model, EngineConfig(
+        capacity=8, pf_capacity=4, s_max=S_MAX, block_size=BLOCK,
+        n_blocks=N_BLOCKS, over_admit=over_admit, virtual_time=True,
+        cost=COST))
+
+
+def _probe_eos(model) -> int:
+    """The model's own most-repeated greedy token on the first prompt: a
+    realistic stop token that some requests emit early and others never."""
+    eng = _engine(model, 1.0)
+    probe = _requests(model.cfg.vocab, eos=-1)[0]
+    eng.submit(probe)
+    eng.run(max_ticks=10000)
+    common = Counter(probe.output).most_common(1)
+    return int(common[0][0])
+
+
+def _run_arm(model, over_admit: float, eos: int):
+    eng = _engine(model, over_admit)
+    for r in _requests(model.cfg.vocab, eos):
+        eng.submit(r)
+    utils, residents = [], []
+    mgr = eng.cachemgr
+    for _ in range(100000):
+        busy = eng.tick()
+        utils.append(mgr.allocator.n_used / mgr.allocator.usable)
+        residents.append(len(eng.active) + len(eng.prefilling))
+        if (not eng.waiting and not eng.active and not eng.prefilling
+                and not eng.future):
+            break
+        if not busy:
+            break
+    m = eng.metrics
+    assert len(eng.finished) == N_REQUESTS
+    assert all(r.state is State.DONE for r in eng.finished)
+    leak_free = (mgr.allocator.n_free == mgr.allocator.usable
+                 and mgr.reserved_debt == 0 and not mgr.tables)
+    return {"over_admit": over_admit,
+            "mean_util": float(np.mean(utils)),
+            "peak_util": float(np.max(utils)),
+            "peak_residents": int(np.max(residents)),
+            "decode_tokens": int(m.decode_tokens),
+            "elapsed_virtual": float(m.elapsed),
+            "DTPS": m.decode_tokens / max(m.elapsed, 1e-9),
+            "slo_attainment": float(slo_attainment(eng.finished,
+                                                   SLOConfig())),
+            "preemptions": int(m.preemptions),
+            "preemption_rate": m.preemptions / N_REQUESTS,
+            "preempted_tokens_recomputed": int(
+                m.preempted_tokens_recomputed),
+            "lent_blocks_peak": int(m.lent_blocks_peak),
+            "leak_free": bool(leak_free),
+            "outputs": {r.rid: list(r.output) for r in eng.finished}}
+
+
+def main():
+    model = build_model(n_adapters=1)
+    eos = _probe_eos(model)
+
+    arms = {f"{f:g}": _run_arm(model, f, eos) for f in FACTORS}
+    base = arms["1"]
+    best = max(arms.values(), key=lambda a: a["DTPS"])
+
+    # exactness before any throughput claim: preemption must change WHEN
+    # tokens are computed, never WHAT is computed
+    for name, arm in arms.items():
+        assert arm["outputs"] == base["outputs"], \
+            f"over-admission arm {name} broke exactness"
+        assert arm["leak_free"], f"arm {name} leaked blocks"
+    # the stranding this PR fixes, and the recovery that fixes it
+    idle = 1.0 - base["mean_util"]
+    assert idle >= 0.25, f"conservative arm not stranded enough: {idle:.2f}"
+    assert best["over_admit"] > 1.0
+    assert best["peak_residents"] > base["peak_residents"]
+    assert best["DTPS"] > base["DTPS"]
+
+    for name, arm in arms.items():
+        csv(f"preempt/over_admit_{name}", 0.0,
+            f"DTPS={arm['DTPS']:.0f};util={arm['mean_util']:.2f};"
+            f"residents={arm['peak_residents']};"
+            f"preempt={arm['preemptions']};slo={arm['slo_attainment']:.2f}")
+
+    speedup = best["DTPS"] / max(base["DTPS"], 1e-9)
+    out = {"exact": True,
+           "conservative_idle_frac": float(idle),
+           "speedup": float(speedup),
+           "best_factor": float(best["over_admit"]),
+           "block_size": BLOCK, "n_blocks": N_BLOCKS,
+           "workload": {"n_requests": N_REQUESTS, "max_new": MAX_NEW,
+                        "eos_probe": eos, "kind": "long-max_new-early-stop"},
+           "arms": {k: {kk: vv for kk, vv in v.items() if kk != "outputs"}
+                    for k, v in arms.items()}}
+    with open("BENCH_preempt.json", "w") as f:
+        json.dump(out, f, indent=2)
+    csv("preempt/summary", 0.0,
+        f"speedup={speedup:.2f}@over_admit={best['over_admit']:g};"
+        f"idle_recovered={idle:.0%};exact=True")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

@@ -7,8 +7,8 @@ import traceback
 
 from benchmarks import (bench_finetune, bench_inference, bench_kernels,
                         bench_loading, bench_mutable, bench_paged,
-                        bench_prefix, bench_realworld, bench_roofline,
-                        bench_spec, bench_unified)
+                        bench_preempt, bench_prefix, bench_realworld,
+                        bench_roofline, bench_spec, bench_unified)
 
 TABLES = [
     ("table2_loading", bench_loading.main),
@@ -22,6 +22,7 @@ TABLES = [
     ("paged_cache", bench_paged.main),
     ("spec_decode", bench_spec.main),
     ("prefix_prefill", bench_prefix.main),
+    ("preempt_overadmit", bench_preempt.main),
 ]
 
 

@@ -42,6 +42,11 @@ def main():
     ap.add_argument("--auto-prefix", action="store_true",
                     help="hash-register hot prompt prefixes so repeated "
                          "prompt heads get suffix-only prefill")
+    ap.add_argument("--over-admit", type=float, default=1.0, metavar="F",
+                    help="KV reservation lending factor >= 1.0: the gate "
+                         "charges only 1/F of outstanding reservation debt "
+                         "and preempts (recompute) when lending comes due "
+                         "(1.0 = conservative gate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -63,7 +68,11 @@ def main():
     eng = UnifiedEngine(model, EngineConfig(
         capacity=8, pf_capacity=4, s_max=256,
         virtual_time=not args.wall_clock, spec=spec,
-        prefill_chunk=args.prefill_chunk, auto_prefix=args.auto_prefix))
+        prefill_chunk=args.prefill_chunk, auto_prefix=args.auto_prefix,
+        over_admit=args.over_admit))
+    if args.over_admit > 1.0 and not eng.paged:
+        print("note: --over-admit needs the paged cache; using the "
+              "conservative dense layout for this model")
     if args.prefill_chunk and not eng.chunk_budget:
         print("note: --prefill-chunk is inactive for this model "
               "(needs the paged cache and an attention-only pattern)")
@@ -104,6 +113,11 @@ def main():
     if args.spec > 0:
         print(f"spec: drafted={m.spec_drafted} accepted={m.spec_accepted} "
               f"acceptance={m.acceptance_rate:.2f} steps={m.steps}")
+    if args.over_admit > 1.0 or m.preemptions:
+        print(f"over-admit: factor={args.over_admit} "
+              f"preemptions={m.preemptions} "
+              f"recomputed={m.preempted_tokens_recomputed} "
+              f"lent_peak={m.lent_blocks_peak}")
     if m.reused_prefix_tokens or args.prefill_chunk:
         print(f"prefix: reused={m.reused_prefix_tokens} "
               f"computed={m.prefill_tokens} "

@@ -22,7 +22,8 @@ from repro.core.unified import make_apply_step, make_forward_step, make_grad_ste
 from repro.core.virtualization import MixedLoraModel
 from repro.models.stream import UnifiedBatch
 from repro.serving.clock import CostModel, VirtualClock, WallClock
-from repro.serving.kvcache import CacheManager, PagedCacheManager
+from repro.serving.kvcache import (CacheManager, OutOfBlocksError,
+                                   PagedCacheManager)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.slo import Metrics, SLOConfig, spread_token_times
@@ -48,6 +49,13 @@ class EngineConfig:
     #                                   dense rows for sliding-window models)
     block_size: int = 32              # KV tokens per block (paged layout)
     n_blocks: int = 0                 # pool size; 0 = match dense capacity
+    over_admit: float = 1.0           # reservation lending factor (>= 1):
+    #                                   the admission gate charges only a
+    #                                   1/over_admit slice of outstanding
+    #                                   reservation debt and lends the rest
+    #                                   to new admissions; growth failures
+    #                                   are repaid by recompute preemption
+    #                                   (1.0 = conservative gate, no lending)
     spec: Optional[SpecConfig] = None  # speculative decoding (paged,
     #                                   attention-only models; exact greedy)
     prefill_chunk: int = 0            # per-tick prefill-token budget: long
@@ -71,7 +79,8 @@ class UnifiedEngine:
         if self.paged:
             self.cachemgr = PagedCacheManager(
                 self.cfg, e.capacity, e.pf_capacity, e.s_max,
-                block_size=e.block_size, n_blocks=e.n_blocks)
+                block_size=e.block_size, n_blocks=e.n_blocks,
+                over_admit=e.over_admit)
         else:
             self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
                                          e.s_max)
@@ -123,7 +132,7 @@ class UnifiedEngine:
         overshoot path in ``grow`` and are trimmed when the pool is dry."""
         h = self.spec_headroom
         if h and self.cachemgr.projected_blocks(
-                r.prompt_len, r.max_new_tokens + h) \
+                r.prompt_len, r.remaining_new + h) \
                 > self.cachemgr.total_blocks:
             return 0
         return h
@@ -192,8 +201,10 @@ class UnifiedEngine:
                 self._auto_seen.popitem(last=False)
 
     def _register_span(self, r: Request) -> np.ndarray:
-        """Prompt span ``register_prefix`` publishes: the whole prompt for
-        explicit prefix ids (caller vouches for the template), only the
+        """Prompt span ``register_prefix`` publishes: the SUBMITTED prompt
+        for explicit prefix ids (caller vouches for the template — never
+        the output tokens a preemption rolled in, which no sibling would
+        match and whose blocks would strand in the registry), only the
         hashed leading blocks for auto-detected ones — reusers matched on
         the hash may diverge right after it."""
         if r.prefix_id.startswith("auto:"):
@@ -202,7 +213,7 @@ class UnifiedEngine:
             # span keeps the registered tokens equal to the hashed ones
             n = int(r.prefix_id.rsplit(":", 2)[1])
             return np.asarray(r.prompt[:n * self.cachemgr.block_size])
-        return r.prompt
+        return np.asarray(r.prompt[:r.prompt_len - r.rolled])
 
     def _pull_arrivals(self):
         now = self.clock.now()
@@ -240,18 +251,32 @@ class UnifiedEngine:
                     cached_len=r.prefilled))
                 chunks.append((r, take, r.prefilled + take >= r.prompt_len))
         if self.paged:
-            # a request whose projected blocks can never fit is unservable
+            if e.auto_prefix:
+                for r in self.waiting:
+                    self._maybe_auto_prefix(r)
+            # a request is unservable only when its FRESH block need —
+            # projected blocks minus registered-prefix blocks it shares —
+            # can never fit the pool.  Gating on raw projected blocks
+            # wrongly FAILED long prompts that fit suffix-only over a
+            # shared prefix.  (Auto-prefix promotion above runs first so a
+            # hot head can rescue an otherwise-unservable prompt.)
             for r in list(self.waiting):
-                need = self.cachemgr.projected_blocks(r.prompt_len,
-                                                      r.max_new_tokens)
+                # cheap precheck: fresh_need <= projected_blocks always, so
+                # the prefix-token compare can only change the verdict when
+                # the raw projection already overflows the pool — a deep
+                # backlog must not pay an O(prefix) sweep per tick
+                if self.cachemgr.projected_blocks(
+                        r.prompt_len, r.remaining_new) \
+                        <= self.cachemgr.total_blocks:
+                    continue
+                need = self.cachemgr.fresh_need(
+                    r.prompt_len, r.remaining_new, r.prompt, r.adapter,
+                    self._prefix_of(r))
                 if need > self.cachemgr.total_blocks:
                     r.state = State.FAILED
                     r.t_finish = self.clock.now()
                     self.waiting.remove(r)
                     self.finished.append(r)
-            if e.auto_prefix:
-                for r in self.waiting:
-                    self._maybe_auto_prefix(r)
             suffix_fn = None
             if self.suffix_prefill:
                 suffix_fn = lambda r: r.prompt_len - self.cachemgr.\
@@ -267,11 +292,15 @@ class UnifiedEngine:
                 total_blocks=self.cachemgr.total_blocks,
                 block_size=self.cachemgr.block_size, s_max=e.s_max,
                 need_fn=lambda r: self.cachemgr.fresh_need(
-                    r.prompt_len, r.max_new_tokens, r.prompt, r.adapter,
+                    r.prompt_len, r.remaining_new, r.prompt, r.adapter,
                     self._prefix_of(r), headroom=self._headroom_for(r)),
                 spec_headroom=self.spec_headroom,
                 pf_rows_used=len(pf_reqs), pf_token_budget=budget_left,
-                suffix_fn=suffix_fn, chunked=bool(self.chunk_budget))
+                suffix_fn=suffix_fn, chunked=bool(self.chunk_budget),
+                # actually-lent debt fraction: the preemption precursor
+                # that makes fine-tuning yield before inference is evicted
+                lent_frac=(self.cachemgr.lent_blocks
+                           / max(self.cachemgr.reserved_debt, 1)))
         else:
             decision = self.sched.decide(self.waiting, len(self.active),
                                          self.cachemgr.n_free, e.pf_capacity,
@@ -309,7 +338,7 @@ class UnifiedEngine:
                 aslot = -1
             reused = 0
             if self.paged:
-                adm = self.cachemgr.try_admit(r.prompt, r.max_new_tokens,
+                adm = self.cachemgr.try_admit(r.prompt, r.remaining_new,
                                               r.adapter, self._prefix_of(r),
                                               headroom=self._headroom_for(r))
                 slot = adm[0] if adm is not None else None
@@ -379,14 +408,16 @@ class UnifiedEngine:
         Sd = 1 + (self.spec.k_max if (self.spec and use_dec) else 0)
         drafts: Dict[int, np.ndarray] = {}
         dec_lens = None
+        plans: List[Tuple[int, Request, int, np.ndarray]] = []
         if use_dec:
-            dec_tokens = (np.zeros((e.capacity, Sd), np.int64) if Sd > 1
-                          else np.zeros((e.capacity,), np.int64))
-            dec_pos = np.zeros((e.capacity,), np.int64)
-            dec_slots = np.full((e.capacity,), -1, np.int64)
-            if Sd > 1:
-                dec_lens = np.zeros((e.capacity,), np.int64)
-            for slot, r in self.active.items():
+            # phase 1 — drafts + block growth, with recompute preemption as
+            # the growth-failure backstop.  Slots carrying a prefill row
+            # this tick are pinned: their PFReq already snapshot a block
+            # table, so freeing them would hand the model dangling blocks.
+            pinned = frozenset(c[0].dec_slot for c in chunks)
+            for slot, r in list(self.active.items()):
+                if slot not in self.active:
+                    continue              # preempted as an earlier victim
                 L = int(self.cachemgr.lens[slot])
                 draft = np.zeros((0,), np.int64)
                 if Sd > 1:
@@ -396,17 +427,41 @@ class UnifiedEngine:
                     k = min(ctl.k, r.max_new_tokens - len(r.output) - 1,
                             e.s_max - 1 - L)
                     if k > 0 and drafter is not None:
+                        # prompt already embeds output[:rolled] after a
+                        # preemption — append only the unrolled tail, or
+                        # the history duplicates tokens and the suffix
+                        # drafter's position index drifts
                         draft = np.asarray(drafter.draft(
                             np.concatenate([np.asarray(r.prompt, np.int64),
-                                            np.asarray(r.output, np.int64)]),
+                                            np.asarray(r.output[r.rolled:],
+                                                       np.int64)]),
                             k), np.int64)
                 if self.paged:
                     # grow the block table over the chunk's positions and
                     # copy-on-write any shared block in the write range; a
-                    # dry pool only trims the transient draft tail
-                    writable = self.cachemgr.prepare_write(
-                        slot, L, 1 + len(draft))
+                    # dry pool trims the transient draft tail, and — under
+                    # over-admission — preempts when even the committed
+                    # token at L no longer fits
+                    writable = self._grow_or_preempt(slot, r, L,
+                                                     1 + len(draft), pinned)
+                    if slot not in self.active:
+                        continue          # became its own victim
                     draft = draft[:max(writable - 1, 0)]
+                plans.append((slot, r, L, draft))
+            # a slot planned early may have been preempted as a victim of a
+            # later grower — only survivors get a decode row
+            plans = [p for p in plans if p[0] in self.active]
+            use_dec = bool(plans)
+        planned = frozenset(p[0] for p in plans)
+        if use_dec:
+            # phase 2 — assemble the bucket from surviving rows
+            dec_tokens = (np.zeros((e.capacity, Sd), np.int64) if Sd > 1
+                          else np.zeros((e.capacity,), np.int64))
+            dec_pos = np.zeros((e.capacity,), np.int64)
+            dec_slots = np.full((e.capacity,), -1, np.int64)
+            if Sd > 1:
+                dec_lens = np.zeros((e.capacity,), np.int64)
+            for slot, r, L, draft in plans:
                 if Sd > 1:
                     dec_tokens[slot, 0] = self._last_tokens[slot]
                     if len(draft):
@@ -476,12 +531,22 @@ class UnifiedEngine:
             finals: List[Request] = []
             for i, (r, take, final) in enumerate(chunks):
                 r.prefilled += take
+                if r.recount_pending:
+                    # post-preemption recompute, charged per chunk actually
+                    # computed (never the whole suffix up front — a second
+                    # preemption mid-prefill would double-count the rest)
+                    self.metrics.preempted_tokens_recomputed += take
+                    if final:
+                        r.recount_pending = False
                 assignments.append((i, r.dec_slot))
                 lengths.append(r.prefilled)
                 if final:
                     tok = int(pf_logits[i].argmax())
                     r.output.append(tok)
-                    r.t_first_token = now
+                    if r.t_first_token is None:
+                        # a preempted request keeps its original first-token
+                        # time: the re-prefill is recompute, not a new TTFT
+                        r.t_first_token = now
                     r.token_times.append(now)
                     r.state = State.DECODE
                     self._last_tokens[r.dec_slot] = tok
@@ -513,8 +578,8 @@ class UnifiedEngine:
         if use_dec:
             dec_logits = np.asarray(out.dec_logits)
             for slot, r in list(self.active.items()):
-                if r.state is not State.DECODE or r.t_first_token == now:
-                    continue                      # just prefilled this tick
+                if r.state is not State.DECODE or slot not in planned:
+                    continue    # just (re-)prefilled this tick: no dec row
                 if Sd > 1:
                     self._scatter_verify(slot, r, dec_logits[slot],
                                          drafts.get(slot), now)
@@ -553,7 +618,81 @@ class UnifiedEngine:
 
         self.metrics.steps += 1
         self.metrics.elapsed = self.clock.now()
+        if self.paged:
+            self.metrics.lent_blocks_peak = self.cachemgr.lent_blocks_peak
         return True
+
+    # ---------------------------------------------- preemption (over-admit)
+    def _grow_or_preempt(self, slot: int, r: Request, L: int, n: int,
+                         pinned: frozenset) -> int:
+        """``prepare_write`` with the over-admission backstop.  A short grow
+        (or a copy-on-write that finds the pool dry) that cannot cover even
+        the committed token at ``L`` means a lent-out reservation came due:
+        preempt the lowest-priority resident and retry.  ``pinned`` slots
+        hold prefill rows already assembled this tick and must survive; the
+        requesting slot competes on priority like everyone else and preempts
+        itself when it IS the lowest."""
+        while True:
+            try:
+                writable = self.cachemgr.prepare_write(slot, L, n)
+            except OutOfBlocksError:
+                writable = 0
+            if writable >= 1:
+                return writable
+            victim = self._pick_victim(exclude=pinned)
+            if victim is None or victim == slot:
+                self._preempt(slot)
+                return 0
+            self._preempt(victim)
+
+    def _pick_victim(self, exclude: frozenset) -> Optional[int]:
+        """Lowest-priority resident: latest arrival, tie-broken toward the
+        lowest speculative acceptance rate (the row burning the most verify
+        compute per emitted token), then the latest rid for determinism."""
+        cands = [(s, r) for s, r in list(self.active.items())
+                 + list(self.prefilling.items()) if s not in exclude]
+        if not cands:
+            return None
+
+        def badness(item):
+            s, r = item
+            ctl = self._spec.get(s)
+            acc = ctl[1].rate if ctl is not None else 0.0
+            return (r.arrival, -acc, r.rid)
+
+        return max(cands, key=badness)[0]
+
+    def _preempt(self, slot: int):
+        """Recompute preemption (vLLM-style, cheap here because suffix-only
+        prefill reuses any prefix blocks that stay registry-resident): roll
+        the victim's emitted tokens into its prompt, free its blocks
+        (decref-only through shared/registered prefixes), and requeue it at
+        the HEAD of ``waiting``.  ``arrival`` and ``t_first_token`` are kept
+        — preemption shows up as decode latency, never as a reset — and
+        re-prefill of prompt+output re-derives the exact greedy state, so
+        outputs stay byte-identical to the conservative gate."""
+        r = self.active.pop(slot, None)
+        if r is None:
+            r = self.prefilling.pop(slot)
+        if len(r.output) > r.rolled:
+            # only the not-yet-rolled tail: a request preempted twice must
+            # not duplicate its first resume's tokens inside the prompt
+            r.prompt = np.concatenate(
+                [np.asarray(r.prompt),
+                 np.asarray(r.output[r.rolled:],
+                            np.asarray(r.prompt).dtype)])
+            r.rolled = len(r.output)
+        r.prefilled = 0
+        r.dec_slot = -1
+        r.state = State.WAITING
+        r.preemptions += 1
+        r.recount_pending = True
+        self._spec.pop(slot, None)
+        self.cachemgr.free(slot)
+        if r.adapter:
+            self.model.store.release(r.adapter)
+        self.waiting.insert(0, r)
+        self.metrics.preemptions += 1
 
     def _scatter_verify(self, slot: int, r: Request, logits: np.ndarray,
                         draft: Optional[np.ndarray], now: float):

@@ -31,6 +31,18 @@ conv tails, cross-attention K/V), which does not grow with sequence length,
 still uses dense rows ``[0, capacity + pf_capacity)`` with the row-copy
 commit.
 
+Over-admission (``over_admit`` >= 1.0): the reservation gate above is
+conservative — reserved-but-unfilled blocks are never lent out, so
+worst-case-length requests strand pool capacity they may never claim.  With
+``over_admit > 1`` the gate charges only a ``1 / over_admit`` slice of the
+outstanding debt (``charged_debt``) and lends the rest to new admissions
+(the vLLM/S-LoRA bet: most requests stop early).  The price is that a
+within-reservation ``grow`` can now find the pool empty; instead of the
+conservative mode's ``KVAccountingError`` it returns a short capacity — the
+growth-failure signal the engine answers with recompute preemption (free a
+victim's blocks, requeue it at the head of the waiting queue, re-prefill its
+context suffix-only over whatever prefix blocks survived).
+
 Prefix reuse: full blocks of a registered prompt prefix (same adapter, same
 tokens, same positions) are shared across requests by refcount; a write into
 a shared block goes through copy-on-write (``ensure_writable``).  On
@@ -41,6 +53,7 @@ prefix (the CoW-unshare half of the speculation contract).
 from __future__ import annotations
 
 import functools
+import math
 from collections import OrderedDict, deque
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -79,6 +92,22 @@ def _copy_block(cache, src: jax.Array, dst: jax.Array):
          for k, v in d.items()}
         for d in cache["layers"])
     return {"layers": layers}
+
+
+class KVAccountingError(RuntimeError):
+    """A block-accounting invariant was violated: refcount misuse, or a
+    within-reservation ``grow`` finding an empty pool under the conservative
+    gate (which guarantees ``n_free >= debt``).  A real exception — not an
+    ``assert`` — because these checks are load-bearing control flow and must
+    survive ``python -O``."""
+
+
+class OutOfBlocksError(RuntimeError):
+    """The pool could not supply a block for a *mandatory* write (a
+    copy-on-write fork, or within-reservation growth whose earmarked block
+    was lent out by over-admission).  Not a bug: under ``over_admit > 1``
+    this is the growth-failure signal the engine answers by preempting a
+    resident request to reclaim capacity."""
 
 
 def projected_blocks(prompt_len: int, max_new: int, block_size: int,
@@ -196,11 +225,13 @@ class BlockAllocator:
         return [self.alloc() for _ in range(n)]
 
     def incref(self, bid: int):
-        assert bid != 0 and self.ref[bid] > 0, f"incref of dead block {bid}"
+        if bid == 0 or self.ref[bid] <= 0:
+            raise KVAccountingError(f"incref of dead block {bid}")
         self.ref[bid] += 1
 
     def decref(self, bid: int):
-        assert bid != 0 and self.ref[bid] > 0, f"decref of dead block {bid}"
+        if bid == 0 or self.ref[bid] <= 0:
+            raise KVAccountingError(f"decref of dead block {bid}")
         self.ref[bid] -= 1
         if self.ref[bid] == 0:
             self._free.append(bid)
@@ -221,11 +252,15 @@ class PagedCacheManager:
 
     def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
                  s_max: int, block_size: int = 32, n_blocks: int = 0,
-                 dtype=None):
+                 over_admit: float = 1.0, dtype=None):
         if cfg.sliding_window > 0:
             raise ValueError("paged cache does not support sliding windows; "
                              "use the dense CacheManager")
+        if over_admit < 1.0:
+            raise ValueError("over_admit is a lending factor >= 1.0")
         self.cfg = cfg
+        self.over_admit = float(over_admit)
+        self.lent_blocks_peak = 0
         self.capacity = capacity          # state rows == max concurrent reqs
         self.pf_capacity = pf_capacity
         self.s_max = s_max
@@ -255,15 +290,36 @@ class PagedCacheManager:
         return len(self._free_slots)
 
     @property
+    def charged_debt(self) -> int:
+        """Reservation debt the admission gate actually charges.  The
+        conservative gate (``over_admit == 1``) charges all of it; a lending
+        gate charges only a ``1 / over_admit`` slice and lends the rest out,
+        betting that admitted requests rarely all reach their worst-case
+        length at once — ``grow`` failures (and the engine's recompute
+        preemption) cover the bet when it loses."""
+        return math.ceil(self._debt / self.over_admit)
+
+    @property
     def free_blocks(self) -> int:
         """Blocks the admission gate may spend: the allocator's free list
-        minus the outstanding reservation debt of already-admitted requests
-        (blocks they will ``grow`` into later)."""
-        return self.allocator.n_free - self._debt
+        minus the *charged* reservation debt of already-admitted requests
+        (blocks they will ``grow`` into later).  Negative while lent-out
+        reservations are actually being claimed."""
+        return self.allocator.n_free - self.charged_debt
 
     @property
     def reserved_debt(self) -> int:
         return self._debt
+
+    @property
+    def lent_blocks(self) -> int:
+        """Reservation-debt blocks not currently backed by the free list —
+        capacity the gate has *actually* lent out (0 under the conservative
+        gate, which keeps ``n_free >= debt`` invariant)."""
+        return max(self._debt - self.allocator.n_free, 0)
+
+    def _touch_lent(self):
+        self.lent_blocks_peak = max(self.lent_blocks_peak, self.lent_blocks)
 
     @property
     def total_blocks(self) -> int:
@@ -365,13 +421,16 @@ class PagedCacheManager:
         for bid in shared:
             self.allocator.incref(bid)
         fresh = self.allocator.alloc_many(fresh_now)
-        assert fresh is not None
+        if fresh is None:       # gate passed but the pool cannot back it:
+            raise KVAccountingError(  # free_blocks <= n_free was violated
+                "admission gate passed but the pool cannot back the prompt")
         slot = self._free_slots.popleft()
         self.tables[slot] = shared + fresh
         self.shared_count[slot] = len(shared)
         self.reserved[slot] = max(need, len(self.tables[slot]))
         self._debt += self._debt_of(slot)
         self.lens[slot] = 0
+        self._touch_lent()
         return slot, len(shared) * self.block_size
 
     def free(self, slot: int):
@@ -385,22 +444,40 @@ class PagedCacheManager:
 
     # -- sequence growth / rollback ------------------------------------------
     def grow(self, slot: int, new_len: int) -> int:
-        """Extend ``slot``'s table to cover ``new_len`` tokens.  Growth
-        within the slot's reservation always succeeds (the debt accounting
-        guarantees the blocks exist); growth beyond it (speculative drafts
-        past the projected life) is best-effort from the spendable pool.
-        Returns the token capacity actually available."""
+        """Extend ``slot``'s table to cover ``new_len`` tokens.  Under the
+        conservative gate, growth within the slot's reservation always
+        succeeds (the debt accounting guarantees the blocks exist) and an
+        empty pool there raises ``KVAccountingError``.  Under over-admission
+        the earmarked block may have been lent out: growth stops early and
+        the SHORT RETURN VALUE is the failure signal — the engine compares
+        the returned token capacity against what it must write and preempts
+        a resident request when the committed token no longer fits.  Growth
+        beyond the reservation (speculative drafts past the projected life)
+        is best-effort from the spendable pool in either mode."""
         table = self.tables[slot]
         target = min(-(-new_len // self.block_size), self.nbt)
         while len(table) < target:
-            if len(table) >= self.reserved.get(slot, 0) \
-                    and self.free_blocks <= 0:
+            within = len(table) < self.reserved.get(slot, 0)
+            if not within and self.free_blocks <= 0:
                 break                       # transient overshoot, pool dry
             d0 = self._debt_of(slot)
             bid = self.allocator.alloc()
-            assert bid is not None, "reservation debt accounting violated"
+            # shedding an idle registry prefix (ref == 1) is free compared
+            # with the alternatives — a KVAccountingError here or, under
+            # lending, an engine preemption that recomputes a whole context
+            while bid is None and self._drop_oldest_prefix():
+                bid = self.allocator.alloc()
+            if bid is None:
+                if within and self.over_admit <= 1.0:
+                    raise KVAccountingError(
+                        "reservation debt accounting violated: within-"
+                        "reservation grow found an empty pool under the "
+                        "conservative gate")
+                break                       # lent-out reservation: growth
+            #                                 fails, engine preempts
             table.append(bid)
             self._debt += self._debt_of(slot) - d0
+        self._touch_lent()
         return min(len(table) * self.block_size, self.s_max)
 
     def truncate(self, slot: int, new_len: int):
@@ -453,7 +530,11 @@ class PagedCacheManager:
         registry holds its own refcount, so the blocks outlive the request."""
         if not prefix_id or prefix_id in self._prefixes:
             return
-        n_full = len(prompt) // self.block_size
+        # clamp to blocks the table still holds: a slot truncated (or only
+        # partially grown) below the prompt's full-block span must register
+        # the span it can actually vouch for — an over-long (or empty)
+        # block list would poison lookups and wedge the shed loop
+        n_full = min(len(prompt) // self.block_size, len(self.tables[slot]))
         if n_full == 0:
             return
         bids = self.tables[slot][:n_full]
@@ -472,7 +553,7 @@ class PagedCacheManager:
         for pid, (_, _, bids) in self._prefixes.items():
             if pid == keep:
                 continue
-            if any(self.allocator.ref[b] == 1 for b in bids):
+            if not bids or any(self.allocator.ref[b] == 1 for b in bids):
                 self._prefixes.pop(pid)
                 for bid in bids:
                     self.allocator.decref(bid)
@@ -496,16 +577,27 @@ class PagedCacheManager:
         bid = table[bi]
         if not self.allocator.is_shared(bid):
             return bid
-        # CoW must not spend blocks earmarked for admitted requests' growth
-        while self._prefixes and self.free_blocks <= 0:
+        # conservative gate: CoW must not spend blocks earmarked for
+        # admitted requests' growth.  Over-admission lends those earmarks
+        # out anyway, and a CoW fork is a MANDATORY write — spend any truly
+        # free block and let preemption settle the debt if it comes due.
+        # The shed loop uses the SAME spendable notion as the alloc below:
+        # under lending, free_blocks sits <= 0 for long stretches while the
+        # free list is non-empty, and shedding then would destroy exactly
+        # the registry-resident prefixes that make preemption cheap.
+        def _spendable():
+            return (self.free_blocks if self.over_admit <= 1.0
+                    else self.allocator.n_free)
+        while self._prefixes and _spendable() <= 0:
             if not self._drop_oldest_prefix():
                 break
-        new = self.allocator.alloc() if self.free_blocks > 0 else None
+        new = self.allocator.alloc() if _spendable() > 0 else None
         if new is None:
-            raise RuntimeError("out of KV blocks during copy-on-write")
+            raise OutOfBlocksError("out of KV blocks during copy-on-write")
         self.cache = _copy_block(self.cache, jnp.int32(bid), jnp.int32(new))
         self.allocator.decref(bid)
         table[bi] = new
+        self._touch_lent()
         return new
 
     # -- batch assembly ------------------------------------------------------

@@ -40,10 +40,29 @@ class Request:
     prefilled: int = 0                 # prompt tokens whose K/V is already in
     # the cache (reused shared prefix + committed prefill chunks); the
     # request leaves PREFILL when this reaches prompt_len
+    preemptions: int = 0               # recompute-preemption count: each one
+    # rolled the emitted tokens into ``prompt`` and requeued the request;
+    # ``arrival``/``t_first_token`` are never reset, so preemption surfaces
+    # as decode latency in the SLO accounting, not as a fresh request
+    rolled: int = 0                    # leading ``output`` tokens already
+    # rolled into ``prompt`` by preemption: a second preemption must append
+    # only ``output[rolled:]`` (or the prompt would duplicate tokens), and
+    # the drafter context is ``prompt + output[rolled:]``
+    recount_pending: bool = False      # preempted and not yet re-prefilled:
+    # the next admission charges its recomputed suffix to
+    # ``Metrics.preempted_tokens_recomputed``
 
     @property
     def prompt_len(self) -> int:
         return int(len(self.prompt))
+
+    @property
+    def remaining_new(self) -> int:
+        """Tokens the request may still emit.  Equals ``max_new_tokens``
+        until a preemption rolls already-emitted tokens into the prompt —
+        admission must project the remainder, not the original budget,
+        or a resumed request could double-reserve its own output."""
+        return max(self.max_new_tokens - len(self.output), 0)
 
     @property
     def done(self) -> bool:

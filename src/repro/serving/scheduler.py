@@ -28,6 +28,11 @@ class SchedulerConfig:
     ft_rows_max: int = 4               # fine-tuning rows when idle
     ft_token_budget: int = 2048        # cap ft tokens per tick
     concede_at_queue: int = 1          # waiting reqs at which ft fully yields
+    lent_full_yield: float = 0.25      # lent-debt fraction at which ft fully
+    #                                    yields: over-admitted lending is a
+    #                                    preemption precursor, so fine-tuning
+    #                                    concedes BEFORE inference requests
+    #                                    start getting preempted
 
 
 @dataclasses.dataclass
@@ -59,7 +64,8 @@ class Scheduler:
                spec_headroom: int = 0, pf_rows_used: int = 0,
                pf_token_budget: Optional[int] = None,
                suffix_fn: Optional[Callable[[Request], int]] = None,
-               chunked: bool = False) -> Decision:
+               chunked: bool = False,
+               lent_frac: float = 0.0) -> Decision:
         """``need_fn`` (paged engines) returns the blocks a request would
         actually consume — projected blocks minus registered shared prefix
         blocks — so the gate mirrors what admission will really reserve.
@@ -74,7 +80,14 @@ class Scheduler:
         chunks.  With ``chunked`` set, a long suffix no longer monopolizes
         a tick: admission charges only the first chunk (``min(suffix,
         remaining budget)``) and stops when the per-tick budget is spent —
-        the engine feeds the rest as later chunks."""
+        the engine feeds the rest as later chunks.
+
+        ``lent_frac`` is the fraction of outstanding reservation debt the
+        over-admission gate has actually lent out (0 under the conservative
+        gate).  Lending is the precursor of preemption, so it feeds the
+        fine-tuning concession directly: ft rows ramp to zero by
+        ``lent_full_yield`` — the trainer yields capacity *before* any
+        inference request has to be preempted."""
         c = self.cfg
         admit: List[Request] = []
         budget = (c.max_prefill_tokens if pf_token_budget is None
@@ -100,19 +113,27 @@ class Scheduler:
                     break              # memory-bound: stop admitting this tick
                 blocks_left -= need
             admit.append(r)
-            budget -= tok
+            # an over-budget FIRST request still runs (unchunked prefill
+            # cannot split it), but its charge is clamped to the budget it
+            # actually had — a negative balance would wrongly veto requests
+            # whose suffix is fully cached (0 computed tokens) and disagree
+            # with the chunked boundary, which never over-charges
+            budget = max(budget - tok, 0)
 
         occupancy = n_active / max(self.capacity, 1)
         if free_blocks is not None and total_blocks > 0:
+            # free_blocks goes negative while over-admitted lending is
+            # claimed; occupancy saturates at 1 rather than overshooting
             occupancy = max(occupancy,
-                            1.0 - (free_blocks / total_blocks))
+                            min(1.0, 1.0 - (free_blocks / total_blocks)))
         queue_pressure = min(1.0, (len(waiting) - len(admit))
                              / max(c.concede_at_queue, 1))
-        load = max(occupancy, queue_pressure)
+        lent_load = min(1.0, lent_frac / max(c.lent_full_yield, 1e-9))
+        load = max(occupancy, queue_pressure, lent_load)
         if not trainers_pending:
             ft_rows = 0
         else:
-            ft_rows = int(round(c.ft_rows_max * (1.0 - load)))
+            ft_rows = max(int(round(c.ft_rows_max * (1.0 - load))), 0)
             if len(waiting) - len(admit) >= c.concede_at_queue:
                 ft_rows = 0
         return Decision(admit=admit, ft_rows=ft_rows, load=load)

@@ -72,6 +72,15 @@ class Metrics:
     max_pf_tokens_step: int = 0  # per-step prefill-token high-water mark
     starved_ticks: int = 0       # steps that ran prefill while decoders
     #                              were active but got no decode rows
+    # over-admission / preemption accounting.  Preempted requests keep
+    # their arrival and t_first_token, so the SLO cost of a preemption is
+    # visible as decode latency; these count the mechanism itself.
+    preemptions: int = 0         # recompute preemptions (victim requeued)
+    preempted_tokens_recomputed: int = 0  # context tokens re-prefilled
+    #                              after preemption (net of surviving
+    #                              registry-resident prefix blocks)
+    lent_blocks_peak: int = 0    # peak reservation debt not backed by the
+    #                              free list (capacity actually lent out)
 
     @property
     def acceptance_rate(self) -> float:

@@ -14,7 +14,8 @@ from repro.models.model import init_cache, init_paged_cache, unified_forward
 from repro.models.schema import init_params
 from repro.models.stream import DECBatch, PFBatch, UnifiedBatch
 from repro.serving.engine import EngineConfig, UnifiedEngine
-from repro.serving.kvcache import BlockAllocator, PagedCacheManager
+from repro.serving.kvcache import (BlockAllocator, KVAccountingError,
+                                   PagedCacheManager)
 from repro.serving.request import Request, State
 
 LCFG = LoRAConfig(n_slots=4, r=4)
@@ -40,8 +41,11 @@ def test_block_allocator_lifecycle():
 def test_block_allocator_null_block_reserved():
     a = BlockAllocator(4)
     assert 0 not in a.alloc_many(3)
-    with pytest.raises(AssertionError):
+    # a real exception, not an assert: the invariant must survive python -O
+    with pytest.raises(KVAccountingError):
         a.decref(0)
+    with pytest.raises(KVAccountingError):
+        a.incref(0)
 
 
 # ------------------------------------------------------------- manager

@@ -1,0 +1,451 @@
+"""Over-admission + recompute preemption: the lending gate
+(``EngineConfig.over_admit``), the growth-failure signal, engine preemption
+exactness (byte-identical outputs vs the conservative gate), the
+fresh_need-based unservable check, the scheduler's budget clamp and
+lent-fraction fine-tuning concession, and a hypothesis property test for
+block conservation under randomized admit/grow/preempt/truncate/finish
+sequences."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.models.schema import init_params
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import (KVAccountingError, PagedCacheManager,
+                                   projected_blocks)
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from _hyputil import given, hyp as _hyp, settings, st
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+def _mgr(capacity=4, n_blocks=8, s_max=64, bs=16, over_admit=1.0):
+    cfg = get_reduced("llama3-8b")
+    return PagedCacheManager(cfg, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks, over_admit=over_admit)
+
+
+# --------------------------------------------------------- lending gate
+def test_over_admit_rejects_sub_one_factor():
+    with pytest.raises(ValueError):
+        _mgr(over_admit=0.5)
+
+
+def test_charged_debt_is_a_slice_of_reservations():
+    m = _mgr(n_blocks=16, bs=16, over_admit=2.0)          # 15 usable
+    s, _ = m.try_admit(np.zeros((8,), np.int32), max_new=56)  # 4 blk life
+    assert len(m.tables[s]) == 1 and m.reserved_debt == 3
+    assert m.charged_debt == 2                            # ceil(3 / 2.0)
+    assert m.free_blocks == 15 - 1 - 2
+    assert m.lent_blocks == 0                             # nothing claimed yet
+
+
+def test_over_admission_admits_what_conservative_refuses():
+    prompt = np.zeros((8,), np.int32)
+    cons = _mgr(n_blocks=8, bs=16)                        # 7 usable
+    assert cons.try_admit(prompt, max_new=40) is not None  # 3-block life
+    assert cons.try_admit(prompt, max_new=40) is not None
+    assert cons.try_admit(prompt, max_new=40) is None     # debt 4, free 1
+    lend = _mgr(n_blocks=8, bs=16, over_admit=2.0)
+    s0, _ = lend.try_admit(prompt, max_new=40)
+    s1, _ = lend.try_admit(prompt, max_new=40)
+    s2, _ = lend.try_admit(prompt, max_new=40)
+    assert s2 is not None                                 # lent capacity
+    # growth within the first two reservations still succeeds...
+    assert lend.grow(s0, 48) >= 48
+    assert lend.grow(s1, 48) >= 48
+    # ...but s2's earmarked blocks were lent out: growth fails SHORT (the
+    # preemption signal), it does not raise
+    assert lend.grow(s2, 48) < 48
+    assert lend.lent_blocks > 0 and lend.lent_blocks_peak > 0
+    # freeing a resident repays the loan and growth completes
+    lend.free(s0)
+    assert lend.grow(s2, 48) >= 48
+
+
+def test_conservative_grow_violation_raises_real_exception():
+    """Under the conservative gate a within-reservation grow finding an
+    empty pool is an accounting bug and must raise even under python -O."""
+    m = _mgr(n_blocks=8, bs=16)
+    s, _ = m.try_admit(np.zeros((8,), np.int32), max_new=40)  # debt 2
+    while m.allocator.alloc() is not None:                # corrupt: drain
+        pass                                              # the free list
+    with pytest.raises(KVAccountingError):
+        m.grow(s, 48)
+
+
+# ----------------------------------------------------------- scheduler
+def test_scheduler_budget_clamp_never_negative():
+    """An over-budget FIRST request is still admitted (unchunked prefill
+    cannot split it) but must not drive the token budget negative: a
+    follow-up whose suffix is fully cached (0 computed tokens) is free and
+    must still admit."""
+    sched = Scheduler(SchedulerConfig(max_prefill_tokens=64), capacity=8)
+    rs = [Request(rid=0, prompt=np.zeros((100,), np.int32), adapter=""),
+          Request(rid=1, prompt=np.zeros((60,), np.int32), adapter=""),
+          Request(rid=2, prompt=np.zeros((60,), np.int32), adapter="")]
+    suffix = {0: 100, 1: 0, 2: 5}
+    d = sched.decide(rs, 0, 8, 4, False, free_blocks=1000, total_blocks=1000,
+                     block_size=16, s_max=256,
+                     suffix_fn=lambda r: suffix[r.rid])
+    # rid 0 over-budget (admitted alone previously drove budget to -36 and
+    # vetoed the free rid 1); rid 2 still costs tokens and must wait
+    assert [r.rid for r in d.admit] == [0, 1]
+
+
+def test_scheduler_lent_fraction_concedes_finetune_first():
+    sched = Scheduler(SchedulerConfig(), capacity=8)
+    idle = sched.decide([], 0, 8, 4, True)
+    assert idle.ft_rows == SchedulerConfig().ft_rows_max
+    part = sched.decide([], 0, 8, 4, True, lent_frac=0.125)
+    assert 0 < part.ft_rows < idle.ft_rows                # ramping down
+    full = sched.decide([], 0, 8, 4, True, lent_frac=0.3)
+    assert full.ft_rows == 0 and full.load == 1.0         # yields before
+    #                                                       any preemption
+
+
+def test_scheduler_load_saturates_when_lending_claimed():
+    """free_blocks goes negative while lent reservations are claimed; load
+    and ft_rows must saturate instead of overshooting/undershooting."""
+    sched = Scheduler(SchedulerConfig(), capacity=8)
+    d = sched.decide([], 2, 8, 4, True, free_blocks=-3, total_blocks=16,
+                     block_size=16, s_max=64)
+    assert d.load == 1.0 and d.ft_rows == 0
+
+
+# ------------------------------------------------------------- engine
+def _engine(cfg, seed=0, **kw):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    store.load_random("serve", jax.random.PRNGKey(seed + 2))
+    kw = {"capacity": 4, "pf_capacity": 2, "s_max": 64, "virtual_time": True,
+          "paged": True, "block_size": 16, **kw}
+    return UnifiedEngine(MixedLoraModel(cfg, params, store),
+                         EngineConfig(**kw))
+
+
+def _overload_reqs(n=3, prompt_len=8, max_new=40):
+    rng = np.random.default_rng(11)
+    cfg = get_reduced("llama3-8b")
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, prompt_len)
+                    .astype(np.int32),
+                    adapter="serve", max_new_tokens=max_new,
+                    arrival=0.1 * i) for i in range(n)]
+
+
+def test_forced_preemption_outputs_byte_identical():
+    """Three 3-block-life requests in a 7-block pool: the conservative gate
+    serves two then the third; over-admission serves all three and must
+    preempt mid-decode when the lent reservations come due.  Outputs must
+    be byte-identical — preemption changes WHEN tokens are computed, never
+    WHAT is computed — and the pool must drain leak-free."""
+    cfg = get_reduced("llama3-8b")
+    eng_c = _engine(cfg, n_blocks=8)
+    eng_o = _engine(cfg, n_blocks=8, over_admit=2.0)
+    for eng in (eng_c, eng_o):
+        for r in _overload_reqs():
+            eng.submit(r)
+        eng.run(max_ticks=5000)
+        assert len(eng.finished) == 3
+        assert all(r.state is State.DONE for r in eng.finished)
+        # zero leaks: allocator fully free, no debt, no tables after drain
+        mgr = eng.cachemgr
+        assert mgr.allocator.n_free == mgr.allocator.usable
+        assert mgr.reserved_debt == 0 and not mgr.tables
+    assert eng_c.metrics.preemptions == 0
+    assert eng_o.metrics.preemptions >= 1
+    assert eng_o.metrics.preempted_tokens_recomputed > 0
+    assert eng_o.metrics.lent_blocks_peak > 0
+    assert ({r.rid: r.output for r in eng_o.finished}
+            == {r.rid: r.output for r in eng_c.finished})
+
+
+def test_preemption_is_latency_not_a_reset():
+    """A preempted request keeps its arrival and first-token time: the
+    preemption must surface as a decode-latency gap, never as a new TTFT."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, n_blocks=8, over_admit=2.0)
+    for r in _overload_reqs():
+        eng.submit(r)
+    eng.run(max_ticks=5000)
+    assert eng.metrics.preemptions >= 1
+    victims = [r for r in eng.finished if r.preemptions > 0]
+    assert victims
+    for r in victims:
+        assert r.state is State.DONE
+        assert r.t_first_token is not None
+        # token times span the preemption: monotone, with the re-prefill
+        # gap charged as inter-token latency
+        tt = np.asarray(r.token_times)
+        assert len(tt) == len(r.output)
+        assert (np.diff(tt) >= 0).all()
+        # the rolled-in prompt absorbed the pre-preemption context; the
+        # output stream is still the full requested generation
+        assert len(r.output) == r.max_new_tokens
+
+
+def test_unservable_check_uses_fresh_need():
+    """A long prompt whose RAW projection exceeds the pool must not be
+    insta-FAILED while a resident sibling shares its registered prefix
+    (fresh_need subtracts ref>=2 shared blocks); it fails only once the
+    sharing evaporates and the need is definitively unmeetable."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, n_blocks=8, s_max=176)             # 7 usable blocks
+    sys_prompt = np.arange(64, dtype=np.int32)            # 4 full blocks
+    rng = np.random.default_rng(5)
+    a = Request(rid=0,
+                prompt=np.concatenate([sys_prompt, rng.integers(
+                    0, cfg.vocab, 4).astype(np.int32)]),
+                adapter="serve", max_new_tokens=24, prefix_id="sys",
+                arrival=0.0)
+    # raw projection: ceil((72 + 104) / 16) = 11 > 7 usable -> the old gate
+    # FAILED this instantly; with 4 registered blocks shared at ref >= 2 the
+    # fresh need is 7 <= 7 and it must stay queued.  b arrives after a's
+    # prefill has registered "sys" (and well before a finishes).
+    b = Request(rid=1,
+                prompt=np.concatenate([sys_prompt, rng.integers(
+                    0, cfg.vocab, 8).astype(np.int32)]),
+                adapter="serve", max_new_tokens=104, prefix_id="sys",
+                arrival=0.2)
+    assert projected_blocks(b.prompt_len, b.max_new_tokens, 16, 176) == 11
+    eng.submit(a)
+    eng.submit(b)
+    for _ in range(12):                                   # a registers "sys"
+        eng.tick()                                        # and decodes; b
+        assert b.state is not State.FAILED                # arrives and waits
+    assert a.state is State.DECODE and b.state is State.WAITING
+    eng.run(max_ticks=5000)
+    assert a.state is State.DONE
+    # once a finished, the prefix dropped to registry-only (ref == 1), the
+    # discount vanished and b's 11-block need is definitively unservable
+    assert b.state is State.FAILED
+
+
+def test_preempted_request_readmits_with_remaining_budget():
+    """After preemption the emitted tokens live in the prompt; admission
+    must project prompt + REMAINING tokens, or a resumed request near its
+    context limit would wrongly appear unservable."""
+    r = Request(rid=0, prompt=np.zeros((8,), np.int32), adapter="",
+                max_new_tokens=40)
+    r.output = list(range(24))
+    r.prompt = np.concatenate([r.prompt, np.asarray(r.output, np.int32)])
+    assert r.remaining_new == 16
+    # raw re-projection (32 + 40 tokens) would claim 5 blocks; the true
+    # remaining life (32 + 16) needs only 3
+    assert projected_blocks(r.prompt_len, r.max_new_tokens, 16, 96) == 5
+    assert projected_blocks(r.prompt_len, r.remaining_new, 16, 96) == 3
+
+
+def test_double_preemption_never_duplicates_rolled_tokens():
+    """A request preempted TWICE must roll only the not-yet-rolled output
+    tail into its prompt each time — re-concatenating the whole output
+    would duplicate tokens inside the prompt, corrupting the re-prefill
+    and breaking byte-exactness."""
+    cfg = get_reduced("llama3-8b")
+    clean = _engine(cfg, n_blocks=40)
+    victim_src = _overload_reqs(n=2, max_new=24)
+    for r in victim_src:
+        clean.submit(r)
+    clean.run(max_ticks=5000)
+    expect = {r.rid: r.output for r in clean.finished}
+
+    eng = _engine(cfg, n_blocks=40)
+    reqs = _overload_reqs(n=2, max_new=24)
+    for r in reqs:
+        eng.submit(r)
+    victim = reqs[1]
+    orig_len = victim.prompt_len
+    hits = 0
+    for _ in range(2000):
+        eng.tick()
+        if (hits < 2 and victim.state is State.DECODE
+                and len(victim.output) >= 2 + hits * 3):
+            eng._preempt(victim.dec_slot)
+            hits += 1
+            # prompt grew by exactly the newly-rolled tail, no duplicates
+            assert victim.prompt_len == orig_len + victim.rolled
+            assert victim.rolled == len(victim.output)
+        if all(r.done for r in reqs):
+            break
+    assert hits == 2 and victim.preemptions == 2
+    assert {r.rid: r.output for r in eng.finished} == expect
+    assert eng.metrics.preempted_tokens_recomputed > 0
+
+
+def test_suffix_drafter_survives_preemption():
+    """Trace-replay speculation across a preemption: the drafter context is
+    prompt + output[rolled:], so the reference-stream position index stays
+    aligned after the emitted tokens move into the prompt — acceptance must
+    stay high on resume, and outputs stay exact."""
+    from repro.spec import SpecConfig
+    cfg = get_reduced("llama3-8b")
+    clean = _engine(cfg, n_blocks=40)
+    src = _overload_reqs(n=1, max_new=24)
+    for r in src:
+        clean.submit(r)
+    clean.run(max_ticks=5000)
+    expect = {r.rid: r.output for r in clean.finished}
+
+    eng = _engine(cfg, n_blocks=40,
+                  spec=SpecConfig(k_max=3, drafter="suffix"))
+    reqs = _overload_reqs(n=1, max_new=24)
+    reqs[0].draft_suffix = np.concatenate(
+        [reqs[0].prompt, np.asarray(expect[0], np.int64)])
+    eng.submit(reqs[0])
+    preempted = False
+    for _ in range(2000):
+        eng.tick()
+        if (not preempted and reqs[0].state is State.DECODE
+                and len(reqs[0].output) >= 4):
+            eng._preempt(reqs[0].dec_slot)
+            preempted = True
+        if reqs[0].done:
+            break
+    assert preempted
+    assert {r.rid: r.output for r in eng.finished} == expect
+    # a drifted position index would reject every post-resume draft
+    assert eng.metrics.spec_drafted > 0
+    assert eng.metrics.acceptance_rate > 0.9
+
+
+def test_cow_under_lending_spares_registered_prefixes():
+    """With over-admission, free_blocks sits <= 0 while the free list is
+    non-empty; a copy-on-write fork must spend a truly free block WITHOUT
+    shedding registered prefixes (they are what makes preemption cheap)."""
+    m = _mgr(capacity=6, n_blocks=12, bs=8, s_max=96, over_admit=2.0)
+    prompt = np.arange(17, dtype=np.int32)                # 2 full blocks+tail
+    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="sys")
+    m.register_prefix("sys", s1, prompt)
+    s2, reused = m.try_admit(prompt, max_new=0, prefix_id="sys")
+    assert reused == 16
+    short = np.zeros((8,), np.int32)
+    s3, _ = m.try_admit(short, max_new=24)                # 1 held + 3 debt
+    s4, _ = m.try_admit(short, max_new=24)
+    assert s3 is not None and s4 is not None
+    assert m.grow(s3, 32) >= 32                           # claim lent blocks
+    assert m.free_blocks <= 0 < m.allocator.n_free        # lending active
+    new_bid = m.ensure_writable(s2, pos=0)                # CoW the shared blk
+    assert new_bid != m.tables[s1][0]
+    assert "sys" in m.prefixes, "CoW shed a prefix it did not need to"
+
+
+def test_grow_sheds_idle_prefix_before_failing():
+    """A pool-dry grow must shed idle registry prefixes (ref == 1) before
+    signaling growth failure: dropping a registration is free, preempting a
+    resident recomputes a whole context."""
+    m = _mgr(capacity=6, n_blocks=8, bs=16, over_admit=2.0)   # 7 usable
+    prompt = np.arange(17, dtype=np.int32)
+    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="sys")
+    m.register_prefix("sys", s1, prompt)                      # 1 full block
+    m.free(s1)                                                # idle: ref 1
+    s2, _ = m.try_admit(np.zeros((8,), np.int32), max_new=56)  # 4-block life
+    while m.allocator.alloc() is not None:                    # pool dry,
+        pass                                                  # registry idle
+    assert "sys" in m.prefixes
+    # s2's within-reservation grow finds the free list empty; the idle
+    # "sys" block must be shed and fuel the growth — one block's worth, no
+    # failure signal for it, no engine preemption
+    assert m.grow(s2, 64) == 32
+    assert "sys" not in m.prefixes
+
+
+def test_register_span_excludes_rolled_output():
+    """Re-registering an explicit prefix after preemption (its original
+    registration was shed meanwhile) must publish only the SUBMITTED
+    prompt: rolled-in output is this request's private generation — no
+    sibling matches it, and registering it would strand those blocks in
+    the registry."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, n_blocks=40)
+    orig = np.arange(40, dtype=np.int32)
+    r = Request(rid=0, prompt=orig.copy(), adapter="serve",
+                max_new_tokens=32, prefix_id="sys")
+    r.output = [7, 8, 9]
+    r.rolled = 3
+    r.prompt = np.concatenate([orig, np.asarray(r.output, np.int32)])
+    np.testing.assert_array_equal(eng._register_span(r), orig)
+    # never-preempted requests still publish their whole prompt
+    clean = Request(rid=1, prompt=orig.copy(), adapter="serve",
+                    max_new_tokens=32, prefix_id="sys")
+    np.testing.assert_array_equal(eng._register_span(clean), orig)
+
+
+# ------------------------------------------- block-conservation property
+def _check_conservation(m: PagedCacheManager, over_admit: float):
+    a = m.allocator
+    held: dict = {}
+    for t in m.tables.values():
+        for b in t:
+            held[b] = held.get(b, 0) + 1
+    for _, _, bids in m._prefixes.values():
+        for b in bids:
+            held[b] = held.get(b, 0) + 1
+    free = set(a._free)
+    assert len(free) == len(a._free), "free list holds duplicates"
+    for bid in range(1, a.n_blocks):
+        assert int(a.ref[bid]) == held.get(bid, 0), \
+            f"refcount drift on block {bid}"
+        assert (int(a.ref[bid]) == 0) == (bid in free), \
+            f"free-list drift on block {bid}"
+    assert a.n_used == sum(1 for bid in range(1, a.n_blocks)
+                           if held.get(bid, 0) > 0)
+    assert m.reserved_debt == sum(m._debt_of(s) for s in m.tables)
+    assert m.reserved_debt >= 0
+    if over_admit <= 1.0:
+        assert a.n_free >= m.reserved_debt, "conservative invariant broken"
+    assert len(m.tables) + len(m._free_slots) == m.capacity, "slot leak"
+
+
+@_hyp(lambda: [settings(max_examples=20, deadline=None),
+              given(ops=st.lists(st.tuples(st.integers(0, 5),
+                                           st.integers(0, 7),
+                                           st.integers(0, 80)),
+                                 min_size=1, max_size=60),
+                    over_admit=st.sampled_from([1.0, 1.75]))])
+def test_block_conservation_property(ops, over_admit):
+    """Randomized admit/grow/preempt/truncate/finish/register sequences:
+    refcounts must equal table+registry holds exactly, the free list must
+    mirror ref==0, debt must track per-slot reservations (never spendable),
+    no state slot may leak, and a full drain must return the pool to
+    pristine."""
+    m = _mgr(capacity=6, n_blocks=13, s_max=96, bs=8, over_admit=over_admit)
+    live: list = []
+    rng = np.random.default_rng(0)
+    for kind, pick, amount in ops:
+        if kind == 0:                                     # admit
+            prompt = rng.integers(0, 1000, 1 + amount % 40).astype(np.int32)
+            pid = f"p{pick % 3}" if pick % 2 else ""
+            got = m.try_admit(prompt, max_new=amount % 48, prefix_id=pid)
+            if got is not None:
+                live.append((got[0], prompt, pid))
+        elif kind == 1 and live:                          # grow (decode)
+            slot, _, _ = live[pick % len(live)]
+            cap = m.grow(slot, int(m.lens[slot]) + 1 + amount % 24)
+            assert cap <= m.s_max
+            m.lens[slot] = min(cap, int(m.lens[slot]) + 1 + amount % 24)
+        elif kind == 2 and live:                          # truncate (spec)
+            slot, _, _ = live[pick % len(live)]
+            m.truncate(slot, max(int(m.lens[slot]) - amount % 16, 0))
+        elif kind == 3 and live:                          # preempt / finish
+            slot, _, _ = live.pop(pick % len(live))
+            m.free(slot)
+        elif kind == 4 and live:                          # register prefix
+            slot, prompt, pid = live[pick % len(live)]
+            if pid:
+                m.register_prefix(pid, slot, prompt)
+        elif kind == 5 and live:                          # grow to capacity
+            slot, _, _ = live[pick % len(live)]
+            m.grow(slot, m.reserved.get(slot, 1) * m.block_size)
+        _check_conservation(m, over_admit)
+    for slot, _, _ in live:                               # drain
+        m.free(slot)
+    _check_conservation(m, over_admit)
+    while m._prefixes:
+        assert m._drop_oldest_prefix()
+    assert m.allocator.n_free == m.allocator.usable
+    assert m.reserved_debt == 0
