@@ -55,10 +55,14 @@ def _requests(vocab: int, eos: int) -> list:
 
 
 def _engine(model, over_admit: float) -> UnifiedEngine:
+    # hash dedup is off so the utilization sweep measures over-admission
+    # alone: index-held cache blocks would count as "used" and mask the
+    # idle-pool stranding this bench exists to show (dedup x preemption
+    # interplay is covered by bench_dedup's preempt_resume arm)
     return UnifiedEngine(model, EngineConfig(
         capacity=8, pf_capacity=4, s_max=S_MAX, block_size=BLOCK,
         n_blocks=N_BLOCKS, over_admit=over_admit, virtual_time=True,
-        cost=COST))
+        cost=COST, hash_dedup=False))
 
 
 def _probe_eos(model) -> int:

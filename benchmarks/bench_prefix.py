@@ -5,12 +5,12 @@ prefill-bound regime: 0.1 ms/prefill-token, the long-prompt serving shape
 prefix caching targets), at EQUAL HBM budget (same block pool in every arm):
 
 * ``throughput`` — templated traffic: N prompts sharing an ~80% prefix.
-  Arms: ``plain`` (no sharing — every prompt recomputes everything),
-  ``shared`` (registered prefix -> suffix-only prefill), and ``chunked``
-  (suffix-only + per-tick prefill-token budget).  Exactness is asserted
-  (all arms byte-identical tokens) before any throughput is reported;
-  the headline is prompt tokens per second — suffix-only compute serves
-  the same prompt tokens in less time.
+  Arms: ``plain`` (``hash_dedup=False`` — every prompt recomputes
+  everything), ``shared`` (content-hash adoption -> suffix-only prefill),
+  and ``chunked`` (suffix-only + per-tick prefill-token budget).
+  Exactness is asserted (all arms byte-identical tokens) before any
+  throughput is reported; the headline is prompt tokens per second —
+  suffix-only compute serves the same prompt tokens in less time.
 * ``ttft_under_load`` — a long prompt lands while short requests decode.
   Unchunked, its whole prefill rides one step and every decoder stalls
   behind it; chunked, the budget bounds each step and decode rows flow in
@@ -38,8 +38,8 @@ BLOCK = 32
 
 def _shared_requests(vocab: int, n: int, seed: int) -> list:
     """Templated prompts: one hot system/few-shot prefix + per-request
-    tail.  The first request arrives alone so its prefill registers the
-    prefix before the rest admit."""
+    tail.  The first request arrives alone so its prefill publishes the
+    prefix blocks before the rest admit."""
     rng = np.random.default_rng(seed)
     prefix = rng.integers(0, vocab, PREFIX).astype(np.int32)
     out = []
@@ -47,7 +47,7 @@ def _shared_requests(vocab: int, n: int, seed: int) -> list:
         tail = rng.integers(0, vocab, PROMPT - PREFIX).astype(np.int32)
         out.append(Request(rid=i, prompt=np.concatenate([prefix, tail]),
                            adapter="lora0", max_new_tokens=1,
-                           prefix_id="sys", arrival=0.0 if i == 0 else 0.3))
+                           arrival=0.0 if i == 0 else 0.3))
     return out
 
 
@@ -107,16 +107,12 @@ def main(n_requests: int = 6, chunk: int = 128):
     model = build_model(n_adapters=1)
     vocab = model.cfg.vocab
 
-    def reqs(prefix: bool):
-        rs = _shared_requests(vocab, n_requests, seed=3)
-        if not prefix:
-            for r in rs:
-                r.prefix_id = ""
-        return rs
+    def reqs():
+        return _shared_requests(vocab, n_requests, seed=3)
 
-    plain = _run_arm(model, reqs(False))
-    shared = _run_arm(model, reqs(True))
-    chunked = _run_arm(model, reqs(True), prefill_chunk=chunk)
+    plain = _run_arm(model, reqs(), hash_dedup=False)
+    shared = _run_arm(model, reqs())
+    chunked = _run_arm(model, reqs(), prefill_chunk=chunk)
     # exactness first: suffix-only and chunked prefill must be
     # byte-identical to full-prompt prefill
     assert shared["outputs"] == plain["outputs"], \

@@ -1,0 +1,142 @@
+"""Bench-gate runner: the single place CI thresholds live.
+
+Each benchmark writes a ``BENCH_<name>.json`` artifact; this script loads
+the artifact named by ``benchmarks/gates.json`` for the given bench and
+asserts every declared check.  One checked-in, unit-tested gate instead of
+four copy-pasted YAML heredocs: thresholds are data, not workflow strings.
+
+    python benchmarks/gate.py dedup [--gates benchmarks/gates.json] [--dir .]
+
+Check schema (``gates.json``):
+
+    {"<bench>": {"artifact": "BENCH_<bench>.json",
+                 "checks": [{"lhs": "<path>", "op": "<op>"[, "rhs": <v>]}]}}
+
+* ``lhs`` is a dotted path into the artifact.  A segment may be ``*``
+  (fan out over every value of a dict — the check must hold for ALL
+  matches) or ``{other.path}`` (interpolated from the artifact root,
+  floats formatted with ``%g`` — e.g. ``arms.{best_factor}.DTPS`` selects
+  the best arm recorded by the bench itself).
+* ``op`` is one of ``>= > <= < == != truthy``.
+* ``rhs`` is a literal, or a path string resolved the same way as ``lhs``
+  (must resolve to exactly one value).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import operator
+import os
+import sys
+from typing import Any, List
+
+OPS = {">=": operator.ge, ">": operator.gt, "<=": operator.le,
+       "<": operator.lt, "==": operator.eq, "!=": operator.ne}
+
+
+class GateError(AssertionError):
+    """A gate check failed or could not be evaluated."""
+
+
+def _fmt(v: Any) -> str:
+    """Dict-key form of an interpolated value (floats via %g, so the
+    ``1.5`` a bench stored as ``best_factor`` finds its ``"1.5"`` arm and
+    ``1.0`` finds ``"1"`` — mirroring the f"{x:g}" keys benches emit)."""
+    if isinstance(v, bool):
+        return str(v).lower()
+    if isinstance(v, float):
+        return f"{v:g}"
+    return str(v)
+
+
+def resolve(doc: Any, path: str) -> List[Any]:
+    """All values at ``path`` (one value unless a ``*`` segment fans out).
+    Raises GateError on a dangling path — a gate that checks nothing must
+    fail loudly, not pass vacuously."""
+    nodes = [doc]
+    for seg in path.split("."):
+        if seg.startswith("{") and seg.endswith("}"):
+            inner = resolve(doc, seg[1:-1])
+            if len(inner) != 1:
+                raise GateError(f"interpolation {seg} in {path!r} must "
+                                f"resolve to exactly one value")
+            seg = _fmt(inner[0])
+        nxt: List[Any] = []
+        for node in nodes:
+            if seg == "*":
+                if not isinstance(node, dict):
+                    raise GateError(f"wildcard over non-object at {path!r}")
+                nxt.extend(node.values())
+            elif isinstance(node, dict) and seg in node:
+                nxt.append(node[seg])
+            else:
+                raise GateError(f"path {path!r} missing segment {seg!r}")
+        nodes = nxt
+    return nodes
+
+
+def run_check(doc: Any, check: dict) -> str:
+    """Evaluate one check; returns a human line, raises GateError on fail."""
+    lhs_path = check["lhs"]
+    lhs = resolve(doc, lhs_path)
+    op = check["op"]
+    if op == "truthy":
+        bad = [v for v in lhs if not v]
+        if bad:
+            raise GateError(f"{lhs_path} not truthy: {bad!r}")
+        return f"ok  {lhs_path} truthy ({len(lhs)} value(s))"
+    if op not in OPS:
+        raise GateError(f"unknown op {op!r} for {lhs_path}")
+    rhs = check["rhs"]
+    rhs_disp = rhs
+    if isinstance(rhs, str):
+        got = resolve(doc, rhs)
+        if len(got) != 1:
+            raise GateError(f"rhs path {rhs!r} must resolve to one value")
+        rhs_disp = f"{rhs}={got[0]!r}"
+        rhs = got[0]
+    bad = [v for v in lhs if not OPS[op](v, rhs)]
+    if bad:
+        raise GateError(f"{lhs_path} {op} {rhs_disp}: violated by {bad!r}")
+    return f"ok  {lhs_path} {op} {rhs_disp} (got {lhs!r})"
+
+
+def run_gate(bench: str, gates_path: str, artifact_dir: str = ".") -> int:
+    with open(gates_path) as f:
+        gates = json.load(f)
+    if bench not in gates:
+        raise GateError(f"no gate defined for bench {bench!r} "
+                        f"(have: {sorted(gates)})")
+    spec = gates[bench]
+    artifact = os.path.join(artifact_dir, spec["artifact"])
+    if not os.path.exists(artifact):
+        raise GateError(f"artifact {artifact} missing — did the benchmark "
+                        f"run (and write its BENCH json)?")
+    with open(artifact) as f:
+        doc = json.load(f)
+    checks = spec["checks"]
+    if not checks:
+        raise GateError(f"gate for {bench!r} declares no checks")
+    for check in checks:
+        print(run_check(doc, check))
+    print(f"PASS {bench}: {len(checks)} check(s) against {spec['artifact']}")
+    return len(checks)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", help="gate name (key in gates.json)")
+    ap.add_argument("--gates", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "gates.json"))
+    ap.add_argument("--dir", default=".", help="artifact directory")
+    args = ap.parse_args(argv)
+    try:
+        run_gate(args.bench, args.gates, args.dir)
+    except GateError as e:
+        print(f"FAIL {args.bench}: {e}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

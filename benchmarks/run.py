@@ -1,36 +1,57 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_finetune, bench_inference, bench_kernels,
-                        bench_loading, bench_mutable, bench_paged,
-                        bench_preempt, bench_prefix, bench_realworld,
-                        bench_roofline, bench_spec, bench_unified)
+from benchmarks import (bench_dedup, bench_finetune, bench_inference,
+                        bench_kernels, bench_loading, bench_mutable,
+                        bench_paged, bench_preempt, bench_prefix,
+                        bench_realworld, bench_roofline, bench_spec,
+                        bench_unified)
 
+# (table name, entry point, BENCH artifact the run must (re)write — None
+# for CSV-only benches).  A registered artifact that is missing or stale
+# after the run is a FAILURE: the CI bench matrix gates on these files, and
+# a silently-skipped write would green-pass on yesterday's numbers.
 TABLES = [
-    ("table2_loading", bench_loading.main),
-    ("fig2_inference", bench_inference.main),
-    ("fig3_finetune", bench_finetune.main),
-    ("fig4_unified", bench_unified.main),
-    ("fig5_mutable", bench_mutable.main),
-    ("fig6_realworld", bench_realworld.main),
-    ("kernels_micro", bench_kernels.main),
-    ("roofline_table", bench_roofline.main),
-    ("paged_cache", bench_paged.main),
-    ("spec_decode", bench_spec.main),
-    ("prefix_prefill", bench_prefix.main),
-    ("preempt_overadmit", bench_preempt.main),
+    ("table2_loading", bench_loading.main, None),
+    ("fig2_inference", bench_inference.main, None),
+    ("fig3_finetune", bench_finetune.main, None),
+    ("fig4_unified", bench_unified.main, None),
+    ("fig5_mutable", bench_mutable.main, None),
+    ("fig6_realworld", bench_realworld.main, None),
+    ("kernels_micro", bench_kernels.main, None),
+    ("roofline_table", bench_roofline.main, None),
+    ("paged_cache", bench_paged.main, "BENCH_paged.json"),
+    ("spec_decode", bench_spec.main, "BENCH_spec.json"),
+    ("prefix_prefill", bench_prefix.main, "BENCH_prefix.json"),
+    ("preempt_overadmit", bench_preempt.main, "BENCH_preempt.json"),
+    ("hash_dedup", bench_dedup.main, "BENCH_dedup.json"),
 ]
+
+
+def check_artifact(artifact, started_at: float) -> str:
+    """'' when the registered artifact exists and was written during this
+    run; otherwise a reason string (missing, or stale from an earlier
+    run)."""
+    if artifact is None:
+        return ""
+    if not os.path.exists(artifact):
+        return f"benchmark wrote no {artifact}"
+    if os.path.getmtime(artifact) < started_at:
+        return f"{artifact} is stale (not rewritten by this run)"
+    return ""
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn in TABLES:
+    for name, fn, artifact in TABLES:
         t0 = time.monotonic()
+        wall0 = time.time()
         print(f"# --- {name} ---")
         try:
             fn()
@@ -38,6 +59,11 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{name},0.0,ERROR={type(e).__name__}")
+        else:
+            reason = check_artifact(artifact, wall0)
+            if reason:
+                failures += 1
+                print(f"{name},0.0,ERROR=MissingArtifact ({reason})")
         print(f"# {name} took {time.monotonic() - t0:.1f}s")
     if failures:
         sys.exit(1)

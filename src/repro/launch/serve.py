@@ -39,9 +39,10 @@ def main():
                     help="per-tick prefill-token budget: long prompts "
                          "prefill as bounded chunks co-batched with decode "
                          "(0 = unchunked)")
-    ap.add_argument("--auto-prefix", action="store_true",
-                    help="hash-register hot prompt prefixes so repeated "
-                         "prompt heads get suffix-only prefill")
+    ap.add_argument("--no-hash-dedup", action="store_true",
+                    help="disable content-hash KV block dedup (and the "
+                         "prefix-aware admission that rides on it): every "
+                         "request recomputes and re-stores its whole prompt")
     ap.add_argument("--over-admit", type=float, default=1.0, metavar="F",
                     help="KV reservation lending factor >= 1.0: the gate "
                          "charges only 1/F of outstanding reservation debt "
@@ -68,7 +69,8 @@ def main():
     eng = UnifiedEngine(model, EngineConfig(
         capacity=8, pf_capacity=4, s_max=256,
         virtual_time=not args.wall_clock, spec=spec,
-        prefill_chunk=args.prefill_chunk, auto_prefix=args.auto_prefix,
+        prefill_chunk=args.prefill_chunk,
+        hash_dedup=not args.no_hash_dedup,
         over_admit=args.over_admit))
     if args.over_admit > 1.0 and not eng.paged:
         print("note: --over-admit needs the paged cache; using the "
@@ -76,9 +78,10 @@ def main():
     if args.prefill_chunk and not eng.chunk_budget:
         print("note: --prefill-chunk is inactive for this model "
               "(needs the paged cache and an attention-only pattern)")
-    if args.auto_prefix and not (eng.paged and eng.suffix_prefill):
-        print("note: --auto-prefix registers prefixes but suffix-only "
-              "prefill is inactive for this model")
+    if eng.hash_dedup and not eng.suffix_prefill:
+        print("note: hash dedup shares block STORAGE for this model but "
+              "suffix-only prefill (compute skip) is inactive "
+              "(needs the paged cache and an attention-only pattern)")
 
     rng = np.random.default_rng(args.seed)
     aux = None
@@ -122,6 +125,10 @@ def main():
         print(f"prefix: reused={m.reused_prefix_tokens} "
               f"computed={m.prefill_tokens} "
               f"max_pf_step={m.max_pf_tokens_step}")
+    if eng.hash_dedup:
+        print(f"dedup: hash_hits={m.hash_hits} "
+              f"resident_blocks={m.hash_blocks_resident} "
+              f"probe_admissions={m.probe_admissions}")
     if args.finetune:
         tr = eng.trainers[names[0]]
         print(f"finetune: tokens={tr.tokens_trained} "

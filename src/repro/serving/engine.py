@@ -9,8 +9,6 @@ optimizer on each trainer's accumulation boundary.
 from __future__ import annotations
 
 import dataclasses
-import hashlib
-from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -62,10 +60,14 @@ class EngineConfig:
     #                                   prompts prefill as a sequence of
     #                                   bounded chunks that co-batch with
     #                                   decode/ft rows (0 = unchunked)
-    auto_prefix: bool = False         # hash-register hot prompt prefixes so
-    #                                   reuse needs no caller-side prefix_id
-    auto_prefix_blocks: int = 4       # leading full blocks hashed (and
-    #                                   registered) for auto prefixes
+    hash_dedup: bool = True           # content-hash block dedup: every full
+    #                                   KV block is indexed by a chained
+    #                                   sha1(adapter, parent, tokens) key,
+    #                                   admission adopts resident runs (no
+    #                                   recompute, no caller-side id), and
+    #                                   the scheduler prefers admitting
+    #                                   requests whose prefixes are resident
+    #                                   (False = escape hatch: no reuse)
     cost: Optional[CostModel] = None  # virtual-clock cost model override
 
 
@@ -80,7 +82,7 @@ class UnifiedEngine:
             self.cachemgr = PagedCacheManager(
                 self.cfg, e.capacity, e.pf_capacity, e.s_max,
                 block_size=e.block_size, n_blocks=e.n_blocks,
-                over_admit=e.over_admit)
+                over_admit=e.over_admit, hash_dedup=e.hash_dedup)
         else:
             self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
                                          e.s_max)
@@ -96,7 +98,7 @@ class UnifiedEngine:
                              if e.prefill_chunk > 0 and self.suffix_prefill
                              else 0)
         self.prefilling: Dict[int, Request] = {}  # slot -> partial prefill
-        self._auto_seen: "OrderedDict[Tuple, int]" = OrderedDict()  # -> rid
+        self.hash_dedup = self.paged and e.hash_dedup
 
         self.forward_step = make_forward_step(self.cfg, attn_chunk=e.attn_chunk)
         self.grad_step = make_grad_step(self.cfg, attn_chunk=e.attn_chunk)
@@ -155,65 +157,29 @@ class UnifiedEngine:
     def trainers_pending(self) -> bool:
         return any(t.pending() for t in self.trainers.values())
 
-    @staticmethod
-    def _prefix_of(r: Request) -> str:
-        """Effective prefix id: requests with modality embeddings never
-        share — cross-attention makes deeper-layer K/V depend on aux_embed,
-        which the (adapter, tokens) prefix identity cannot capture."""
-        return "" if r.aux_embed is not None else r.prefix_id
+    def _keys_of(self, r: Request) -> Optional[List[str]]:
+        """The request's block-key chain for the dedup index, or None when
+        the request must not share — modality embeddings make deeper-layer
+        K/V depend on aux_embed, which the (adapter, tokens) content
+        identity cannot capture.  Memoized on the request (keyed by prompt
+        length, which only changes when a preemption rolls output tokens
+        into the prompt) so a deep backlog doesn't re-hash every waiting
+        prompt every tick."""
+        if not self.hash_dedup or r.aux_embed is not None:
+            return None
+        memo = getattr(r, "_hash_keys", None)
+        if memo is None or memo[0] != r.prompt_len:
+            memo = (r.prompt_len,
+                    self.cachemgr.chain_keys(r.prompt, r.adapter))
+            r._hash_keys = memo
+        return memo[1]
 
-    def _maybe_auto_prefix(self, r: Request):
-        """Hot-prefix auto-detection: hash the request's leading full blocks
-        (keyed by adapter — K/V depend on the LoRA) and promote the hash to
-        a synthetic ``prefix_id`` once a second request carries it, so
-        shared system prompts get block reuse without callers ever passing
-        an explicit id.  First sight only marks the hash; the second
-        request registers after its prefill, the third onward reuses."""
-        e = self.ecfg
-        if (not e.auto_prefix or not self.paged or r.prefix_id
-                or r.aux_embed is not None):
-            return
-        # the digest is immutable per request — memoize it on the request
-        # so a deep backlog doesn't re-hash every waiting prompt every tick
-        key = getattr(r, "_auto_key", None)
-        if key is None:
-            bs = self.cachemgr.block_size
-            n = min(max(r.prompt_len - 1, 0) // bs, e.auto_prefix_blocks)
-            if n <= 0:
-                r._auto_key = ()                      # ineligible sentinel
-                return
-            head = np.ascontiguousarray(np.asarray(r.prompt[:n * bs],
-                                                   np.int64))
-            digest = hashlib.sha1(head.tobytes()).hexdigest()[:16]
-            key = r._auto_key = (r.adapter, n, digest)
-        elif key == ():
-            return
-        if key in self._auto_seen:
-            # only a DIFFERENT request proves the head is hot — the marker
-            # itself re-scans every tick it waits and must not self-promote
-            # (that would register every unique cold prompt)
-            if self._auto_seen[key] != r.rid:
-                self._auto_seen.move_to_end(key)
-                r.prefix_id = "auto:{}:{}:{}".format(*key)
-        else:
-            self._auto_seen[key] = r.rid
-            while len(self._auto_seen) > 1024:        # bounded memory
-                self._auto_seen.popitem(last=False)
-
-    def _register_span(self, r: Request) -> np.ndarray:
-        """Prompt span ``register_prefix`` publishes: the SUBMITTED prompt
-        for explicit prefix ids (caller vouches for the template — never
-        the output tokens a preemption rolled in, which no sibling would
-        match and whose blocks would strand in the registry), only the
-        hashed leading blocks for auto-detected ones — reusers matched on
-        the hash may diverge right after it."""
-        if r.prefix_id.startswith("auto:"):
-            # the hashed block count is baked into the synthetic id
-            # ("auto:<adapter>:<n>:<digest>") — registering exactly that
-            # span keeps the registered tokens equal to the hashed ones
-            n = int(r.prefix_id.rsplit(":", 2)[1])
-            return np.asarray(r.prompt[:n * self.cachemgr.block_size])
-        return np.asarray(r.prompt[:r.prompt_len - r.rolled])
+    def _resident_tokens(self, r: Request) -> int:
+        """Prompt tokens the dedup index would serve without recompute."""
+        keys = self._keys_of(r)
+        if keys is None:
+            return 0
+        return self.cachemgr.probe(r.prompt, r.adapter, keys=keys)
 
     def _pull_arrivals(self):
         now = self.clock.now()
@@ -251,15 +217,17 @@ class UnifiedEngine:
                     cached_len=r.prefilled))
                 chunks.append((r, take, r.prefilled + take >= r.prompt_len))
         if self.paged:
-            if e.auto_prefix:
-                for r in self.waiting:
-                    self._maybe_auto_prefix(r)
             # a request is unservable only when its FRESH block need —
-            # projected blocks minus registered-prefix blocks it shares —
+            # projected blocks minus index-resident blocks it would adopt —
             # can never fit the pool.  Gating on raw projected blocks
             # wrongly FAILED long prompts that fit suffix-only over a
-            # shared prefix.  (Auto-prefix promotion above runs first so a
-            # hot head can rescue an otherwise-unservable prompt.)
+            # shared prefix.  Only ref >= 2 shared blocks discount
+            # (fresh_need's held_elsewhere): an index-only (ref == 1) block
+            # has no concurrent payer, so this request's own footprint
+            # would include it — adopting it does not shrink the total the
+            # pool must hold for this request, and if that total exceeds
+            # the pool the request truly can never fit (admitting it would
+            # just wedge in the waiting queue forever instead).
             for r in list(self.waiting):
                 # cheap precheck: fresh_need <= projected_blocks always, so
                 # the prefix-token compare can only change the verdict when
@@ -271,7 +239,8 @@ class UnifiedEngine:
                     continue
                 need = self.cachemgr.fresh_need(
                     r.prompt_len, r.remaining_new, r.prompt, r.adapter,
-                    self._prefix_of(r))
+                    keys=self._keys_of(r),
+                    shareable=r.aux_embed is None)
                 if need > self.cachemgr.total_blocks:
                     r.state = State.FAILED
                     r.t_finish = self.clock.now()
@@ -279,28 +248,34 @@ class UnifiedEngine:
                     self.finished.append(r)
             suffix_fn = None
             if self.suffix_prefill:
-                suffix_fn = lambda r: r.prompt_len - self.cachemgr.\
-                    reused_tokens(r.prompt, r.adapter, self._prefix_of(r))
+                suffix_fn = lambda r: r.prompt_len - self._resident_tokens(r)
             decision = self.sched.decide(
                 self.waiting, len(self.active) + len(self.prefilling),
                 self.cachemgr.n_free,
                 e.pf_capacity, self.trainers_pending(),
-                # registry-held prefix blocks are sheddable inside try_admit,
-                # so the gate must count them as available
+                # index-held blocks are sheddable inside try_admit, so the
+                # gate must count them as available
                 free_blocks=(self.cachemgr.free_blocks
                              + self.cachemgr.reclaimable_blocks),
                 total_blocks=self.cachemgr.total_blocks,
                 block_size=self.cachemgr.block_size, s_max=e.s_max,
                 need_fn=lambda r: self.cachemgr.fresh_need(
                     r.prompt_len, r.remaining_new, r.prompt, r.adapter,
-                    self._prefix_of(r), headroom=self._headroom_for(r)),
+                    headroom=self._headroom_for(r), keys=self._keys_of(r),
+                    shareable=r.aux_embed is None),
                 spec_headroom=self.spec_headroom,
                 pf_rows_used=len(pf_reqs), pf_token_budget=budget_left,
                 suffix_fn=suffix_fn, chunked=bool(self.chunk_budget),
                 # actually-lent debt fraction: the preemption precursor
                 # that makes fine-tuning yield before inference is evicted
                 lent_frac=(self.cachemgr.lent_blocks
-                           / max(self.cachemgr.reserved_debt, 1)))
+                           / max(self.cachemgr.reserved_debt, 1)),
+                # prefix-aware admission: prefer requests whose prompt heads
+                # are index-resident (their prefill is mostly free), bounded
+                # by the fairness ramp so cold requests cannot starve
+                probe_fn=(self._resident_tokens if self.hash_dedup
+                          else None),
+                now=self.clock.now())
         else:
             decision = self.sched.decide(self.waiting, len(self.active),
                                          self.cachemgr.n_free, e.pf_capacity,
@@ -339,8 +314,10 @@ class UnifiedEngine:
             reused = 0
             if self.paged:
                 adm = self.cachemgr.try_admit(r.prompt, r.remaining_new,
-                                              r.adapter, self._prefix_of(r),
-                                              headroom=self._headroom_for(r))
+                                              r.adapter,
+                                              headroom=self._headroom_for(r),
+                                              shareable=r.aux_embed is None,
+                                              keys=self._keys_of(r))
                 slot = adm[0] if adm is not None else None
                 reused = adm[1] if adm is not None else 0
             else:
@@ -560,16 +537,12 @@ class UnifiedEngine:
             # the model wrote prefill rows at [Bd, Bd+Bp): tell the manager
             # where they start (state rows only under the paged layout — the
             # K/V itself went straight into the request's blocks)
+            # commit is also the dedup publication point: every full prompt
+            # block the chunk filled enters the hash index (no caller-side
+            # registration — content is the identity)
             self.cachemgr.commit_prefill(assignments, lengths,
                                          src_base=e.capacity if use_dec
                                          else 0)
-            if self.paged:
-                for r in finals:
-                    if self._prefix_of(r):
-                        self.cachemgr.register_prefix(self._prefix_of(r),
-                                                      r.dec_slot,
-                                                      self._register_span(r),
-                                                      r.adapter)
             self.metrics.prefill_tokens += pf_tok
             self.metrics.max_pf_tokens_step = max(
                 self.metrics.max_pf_tokens_step, pf_tok)
@@ -587,7 +560,10 @@ class UnifiedEngine:
                     tok = int(dec_logits[slot].argmax())
                     r.output.append(tok)
                     r.token_times.append(now)
-                    self.cachemgr.lens[slot] += 1
+                    # position L holds the K/V of this step's INPUT token —
+                    # committing it may fill (and publish) a block
+                    self.cachemgr.commit_tokens(
+                        slot, [int(self._last_tokens[slot])])
                     self._last_tokens[slot] = tok
                     self.metrics.decode_tokens += 1
                     self._maybe_finish(r, now)
@@ -618,8 +594,12 @@ class UnifiedEngine:
 
         self.metrics.steps += 1
         self.metrics.elapsed = self.clock.now()
+        self.metrics.probe_admissions += decision.probe_admissions
         if self.paged:
             self.metrics.lent_blocks_peak = self.cachemgr.lent_blocks_peak
+            self.metrics.hash_hits = self.cachemgr.hash_hits
+            self.metrics.hash_blocks_resident = \
+                self.cachemgr.hash_blocks_resident
         return True
 
     # ---------------------------------------------- preemption (over-admit)
@@ -664,9 +644,10 @@ class UnifiedEngine:
 
     def _preempt(self, slot: int):
         """Recompute preemption (vLLM-style, cheap here because suffix-only
-        prefill reuses any prefix blocks that stay registry-resident): roll
+        prefill re-adopts any of the victim's published blocks that stay
+        index-resident — its own full blocks are its resume capital): roll
         the victim's emitted tokens into its prompt, free its blocks
-        (decref-only through shared/registered prefixes), and requeue it at
+        (decref-only through shared/index-held blocks), and requeue it at
         the HEAD of ``waiting``.  ``arrival`` and ``t_first_token`` are kept
         — preemption shows up as decode latency, never as a reset — and
         re-prefill of prompt+output re-derives the exact greedy state, so
@@ -714,8 +695,12 @@ class UnifiedEngine:
         r.token_times.extend(spread_token_times(t_prev, now, n_kept))
         r.output.extend(emitted)
         # cache holds K/V for [current, accepted drafts]; the bonus token is
-        # the next step's input.  Rejected draft positions are rolled back.
+        # the next step's input.  Rejected draft positions are rolled back,
+        # then the accepted INPUT tokens ([current] + accepted drafts) are
+        # committed — which may fill and publish blocks into the dedup index
         self.cachemgr.truncate(slot, L + n_kept)
+        self.cachemgr.commit_tokens(
+            slot, [int(self._last_tokens[slot])] + list(emitted[:-1]))
         self._last_tokens[slot] = emitted[-1]
         self.metrics.decode_tokens += n_kept
         if len(draft):

@@ -43,19 +43,31 @@ growth-failure signal the engine answers with recompute preemption (free a
 victim's blocks, requeue it at the head of the waiting queue, re-prefill its
 context suffix-only over whatever prefix blocks survived).
 
-Prefix reuse: full blocks of a registered prompt prefix (same adapter, same
-tokens, same positions) are shared across requests by refcount; a write into
-a shared block goes through copy-on-write (``ensure_writable``).  On
-``truncate`` a shared block is simply dereferenced — the registrar's (or any
-sibling's) refcount keeps it alive, so rollback never destroys a shared
-prefix (the CoW-unshare half of the speculation contract).
+Content-hash block dedup (``hash_dedup``, vLLM-style): every *full,
+immutable* block is content-addressed by a chained key
+``sha1(adapter, parent_key, block_tokens)`` — the key pins the block's whole
+left context (and the LoRA, since K/V depend on it), so two blocks with
+equal keys hold K/V for identical (adapter, position, token-history) and are
+interchangeable.  ``try_admit`` walks the prompt's key chain and *adopts*
+the longest resident run (incref — no recompute, no re-storage; the span
+suffix-only prefill then skips), ``commit_prefill`` / ``commit_tokens``
+*publish* each newly-filled full block into the index (the index holds its
+own refcount, so published blocks outlive their request and a write into one
+always copy-on-writes first — a published block's payload is immutable by
+construction, the index can never go stale), and eviction sheds index-only
+(ref == 1) blocks on demand, zero-hit blocks first, then the lowest hit
+count.  This subsumes both the explicit ``prefix_id`` registry and the
+two-sighting ``auto_prefix`` heuristic of earlier revisions: reuse needs no
+caller-side id and starts at the SECOND sighting of any shared head, at
+per-block granularity.
 """
 from __future__ import annotations
 
 import functools
+import hashlib
 import math
 from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +132,20 @@ def projected_blocks(prompt_len: int, max_new: int, block_size: int,
     return -(-tokens // block_size)
 
 
+def block_key(adapter: str, parent: str, tokens: np.ndarray) -> str:
+    """Content-hash identity of one full KV block: the adapter (K/V depend
+    on the LoRA), the parent block's key (pins the whole left context —
+    identical tokens at different positions must not collide), and the
+    block's own tokens."""
+    h = hashlib.sha1()
+    h.update(adapter.encode())
+    h.update(b"\x00")
+    h.update(parent.encode())
+    h.update(b"\x00")
+    h.update(np.ascontiguousarray(np.asarray(tokens, np.int64)).tobytes())
+    return h.hexdigest()
+
+
 class CacheManager:
     """Dense slot-per-request cache (legacy layout; kept for sliding-window
     models and as the equivalence baseline for the paged path)."""
@@ -151,6 +177,12 @@ class CacheManager:
         position-indexed and masked by ``k_valid``, so stale K/V beyond
         ``new_len`` is simply invisible — only the length moves."""
         self.lens[slot] = new_len
+
+    def commit_tokens(self, slot: int, toks: Sequence[int]):
+        """Advance the committed length past freshly-written decode/verify
+        positions.  The dense layout has no block identity to publish — only
+        the length moves (mirrors ``PagedCacheManager.commit_tokens``)."""
+        self.lens[slot] += len(toks)
 
     # -- step plumbing ---------------------------------------------------------
     def step_cache(self):
@@ -246,13 +278,15 @@ class PagedCacheManager:
     Engine-facing surface mirrors ``CacheManager`` (``alloc`` is replaced by
     ``try_admit`` which takes the request's projected token need), plus block
     bookkeeping: ``table_of``, ``dec_tables``, ``ensure_writable`` (COW), and
-    the prefix registry (``reuse``/``register`` inside ``try_admit`` /
-    ``register_prefix``).
+    the content-hash dedup index (``chain_keys`` / ``probe`` / adoption
+    inside ``try_admit`` / publication inside ``commit_prefill`` and
+    ``commit_tokens``).
     """
 
     def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
                  s_max: int, block_size: int = 32, n_blocks: int = 0,
-                 over_admit: float = 1.0, dtype=None):
+                 over_admit: float = 1.0, hash_dedup: bool = True,
+                 dtype=None):
         if cfg.sliding_window > 0:
             raise ValueError("paged cache does not support sliding windows; "
                              "use the dense CacheManager")
@@ -260,7 +294,9 @@ class PagedCacheManager:
             raise ValueError("over_admit is a lending factor >= 1.0")
         self.cfg = cfg
         self.over_admit = float(over_admit)
+        self.hash_dedup = bool(hash_dedup)
         self.lent_blocks_peak = 0
+        self.hash_hits = 0                # blocks adopted via the index
         self.capacity = capacity          # state rows == max concurrent reqs
         self.pf_capacity = pf_capacity
         self.s_max = s_max
@@ -275,14 +311,31 @@ class PagedCacheManager:
         self._free_slots: Deque[int] = deque(range(capacity))
         self.lens = np.zeros((capacity,), np.int64)
         self.tables: Dict[int, List[int]] = {}      # state slot -> block ids
-        self.shared_count: Dict[int, int] = {}      # leading shared blocks
+        self.shared_count: Dict[int, int] = {}      # leading adopted blocks
         # blocks earmarked for a slot's projected life beyond what it holds
         # now (allocate-on-demand): the gate must not spend these
         self.reserved: Dict[int, int] = {}          # slot -> reserved blocks
         self._debt = 0                              # sum of unfilled reserves
-        # prefix_id -> (adapter, prefix tokens, block ids); ordered for LRU
-        self._prefixes: "OrderedDict[str, Tuple[str, np.ndarray, List[int]]]" \
-            = OrderedDict()
+        # content-hash index: chained block key -> block id.  The index holds
+        # its OWN refcount on every published block, so index residents can
+        # never be rewritten in place (any write copy-on-writes first) and an
+        # index entry is stale-proof by construction.  Ordered for LRU
+        # (publication order, moved-to-end on adoption).
+        self._index: "OrderedDict[str, int]" = OrderedDict()
+        self._hashed: Dict[int, str] = {}           # inverse: block id -> key
+        self._hits: Dict[str, int] = {}             # key -> adoption count
+        # per-slot dedup state: the token record (an s_max-sized buffer — a
+        # per-token np.concatenate would make decode bookkeeping O(L^2) per
+        # request — holding the prompt at admission, extended in place by
+        # commit_tokens, valid through _seq_len), the key chain of its
+        # leading full blocks, the adapter the keys were derived under, and
+        # whether the slot may share at all (aux-embedding requests must
+        # not — their K/V depend on state the token identity cannot capture)
+        self._seqs: Dict[int, np.ndarray] = {}
+        self._seq_len: Dict[int, int] = {}
+        self._chains: Dict[int, List[str]] = {}
+        self._adapters: Dict[int, str] = {}
+        self._share: Dict[int, bool] = {}
 
     # -- budget --------------------------------------------------------------
     @property
@@ -334,92 +387,139 @@ class PagedCacheManager:
 
     @property
     def reclaimable_blocks(self) -> int:
-        """Blocks held only by the prefix registry — sheddable on demand by
-        ``try_admit``.  The scheduler's admission gate must count these as
-        available, or registry-held prefixes starve admission forever."""
-        return int(sum(1 for _, _, bids in self._prefixes.values()
-                       for bid in bids if self.allocator.ref[bid] == 1))
+        """Blocks held only by the hash index (ref == 1) — pure cache,
+        sheddable on demand by ``try_admit``/``grow``/CoW.  The scheduler's
+        admission gate must count these as available, or index-held blocks
+        would starve admission forever.  Evaluated every tick, and the
+        index can approach pool size — so one vectorized refcount gather,
+        not a per-block Python loop."""
+        if not self._hashed:
+            return 0
+        bids = np.fromiter(self._hashed, np.int64, len(self._hashed))
+        return int(np.count_nonzero(self.allocator.ref[bids] == 1))
 
-    # -- admission -----------------------------------------------------------
-    def _lookup_shared(self, prompt: np.ndarray, adapter: str,
-                       prefix_id: str, touch: bool = False) -> List[int]:
-        """Registered prefix blocks this prompt can reuse: the LONGEST run
-        of leading full blocks whose tokens match (same adapter too — K/V
-        depend on the LoRA).  A prompt that diverges from the registered
-        template mid-way still shares the blocks before the divergence.
-        Capped so at least ONE prompt token is always left uncached:
-        suffix-only prefill needs a live query to produce the first-token
-        logits, and that token's K/V write must never land in a block the
-        registry still owns."""
-        if not prefix_id or prefix_id not in self._prefixes:
-            return []
-        p_adapter, p_toks, p_bids = self._prefixes[prefix_id]
+    @property
+    def hash_blocks_resident(self) -> int:
+        """Current index population (full blocks adoptable by content)."""
+        return len(self._index)
+
+    @property
+    def pristine(self) -> bool:
+        """Post-drain invariant: no live tables, no reservation debt, and
+        every non-free block is held ONLY by the hash index (pure cache,
+        fully reclaimable).  The leak check benches and tests gate on —
+        cache residency is not a leak."""
+        return (not self.tables and self._debt == 0
+                and self.allocator.n_free + self.reclaimable_blocks
+                == self.allocator.usable)
+
+    # -- content-hash chain --------------------------------------------------
+    def chain_keys(self, prompt: np.ndarray, adapter: str = "") -> List[str]:
+        """The prompt's block-key chain: one chained content hash per
+        leading full block, capped so at least ONE prompt token is always
+        left uncached — suffix-only prefill needs a live query to produce
+        the first-token logits, and that token's K/V write must never land
+        in a block the index still owns."""
         bs = self.block_size
-        n_cap = min(len(p_bids), max(len(prompt) - 1, 0) // bs)
-        if p_adapter != adapter or n_cap == 0:
-            return []
-        eq = (p_toks[:n_cap * bs] == np.asarray(prompt)[:n_cap * bs]) \
-            .reshape(n_cap, bs).all(axis=1)
-        n_full = int(np.argmin(eq)) if not eq.all() else n_cap
-        if n_full == 0:
-            return []
-        if touch:
-            self._prefixes.move_to_end(prefix_id)         # LRU touch
-        return p_bids[:n_full]
+        p = np.asarray(prompt)
+        keys: List[str] = []
+        parent = ""
+        for i in range(max(len(p) - 1, 0) // bs):
+            parent = block_key(adapter, parent, p[i * bs:(i + 1) * bs])
+            keys.append(parent)
+        return keys
 
-    def fresh_need(self, prompt_len: int, max_new: int, prompt: np.ndarray,
-                   adapter: str = "", prefix_id: str = "",
-                   headroom: int = 0) -> int:
+    def _resident_run(self, keys: Sequence[str]) -> List[int]:
+        """Longest leading run of index-resident blocks for a key chain.
+        The walk stops at the first gap: a resident child behind a missing
+        parent is unreachable (its key pins the parent's content, which we
+        would have to recompute anyway)."""
+        bids: List[int] = []
+        for k in keys:
+            bid = self._index.get(k)
+            if bid is None:
+                break
+            bids.append(bid)
+        return bids
+
+    def probe(self, prompt: np.ndarray, adapter: str = "",
+              keys: Optional[Sequence[str]] = None) -> int:
+        """Prompt tokens the index would serve from resident K/V — the span
+        suffix-only prefill skips.  Pure preview (no incref, no LRU touch):
+        the scheduler uses it both to charge only the computed suffix
+        against its prefill-token budget and to score waiting requests for
+        prefix-aware admission."""
+        if not self.hash_dedup:
+            return 0
+        if keys is None:
+            keys = self.chain_keys(prompt, adapter)
+        return len(self._resident_run(keys)) * self.block_size
+
+    def fresh_need(self, prompt_len: int, max_new: int,
+                   prompt: Optional[np.ndarray] = None, adapter: str = "",
+                   headroom: int = 0, keys: Optional[Sequence[str]] = None,
+                   shareable: bool = True) -> int:
         """The request's charge against the gate's ``free + reclaimable``
-        budget.  Shared blocks with ref >= 2 cost nothing; shared blocks held
-        only by the registry (ref == 1) are discounted from *need* but were
-        also counted reclaimable, so they must still be charged — otherwise
-        the gate admits requests the manager then refuses.  ``headroom`` is
-        extra projected tokens (speculative-decoding transient drafts)."""
-        shared = self._lookup_shared(prompt, adapter, prefix_id)
-        held_elsewhere = sum(1 for b in shared if self.allocator.ref[b] >= 2)
+        budget.  Adoptable blocks with ref >= 2 cost nothing; adoptable
+        blocks held only by the index (ref == 1) are discounted from *need*
+        but were also counted reclaimable, so they must still be charged —
+        otherwise the gate admits requests the manager then refuses.
+        ``headroom`` is extra projected tokens (speculative-decoding
+        transient drafts)."""
+        held_elsewhere = 0
+        if self.hash_dedup and shareable and prompt is not None:
+            if keys is None:
+                keys = self.chain_keys(prompt, adapter)
+            held_elsewhere = sum(1 for b in self._resident_run(keys)
+                                 if self.allocator.ref[b] >= 2)
         return (self.projected_blocks(prompt_len, max_new + headroom)
                 - held_elsewhere)
 
-    def reused_tokens(self, prompt: np.ndarray, adapter: str = "",
-                      prefix_id: str = "") -> int:
-        """Prompt tokens a registered prefix would serve from shared K/V —
-        the span suffix-only prefill skips.  Pure preview (no LRU touch);
-        the scheduler charges only ``prompt_len - reused_tokens`` against
-        its prefill-token budget."""
-        return len(self._lookup_shared(np.asarray(prompt), adapter,
-                                       prefix_id)) * self.block_size
-
+    # -- admission -----------------------------------------------------------
     def try_admit(self, prompt: np.ndarray, max_new: int, adapter: str = "",
-                  prefix_id: str = "",
-                  headroom: int = 0) -> Optional[Tuple[int, int]]:
-        """Reserve a state slot + the request's projected block budget
-        (sharing registered prefix blocks when ``prefix_id`` matches), but
-        only *allocate* the blocks the prompt needs now — the remainder is a
-        reservation ``grow`` fills on demand.  ``headroom`` adds transient
-        speculative-draft tokens to the projected budget.  Returns
-        ``(state slot, reused prefix tokens)`` — the reused span is the
-        leading prompt tokens whose K/V arrived by refcount instead of
-        recompute, i.e. what suffix-only prefill may skip — or None when
-        slots or spendable blocks are exhausted."""
+                  headroom: int = 0, shareable: bool = True,
+                  keys: Optional[Sequence[str]] = None
+                  ) -> Optional[Tuple[int, int]]:
+        """Reserve a state slot + the request's projected block budget,
+        adopting the longest index-resident run of the prompt's block-key
+        chain (incref — those blocks arrive by refcount instead of
+        recompute), but only *allocate* the blocks the prompt needs now —
+        the remainder is a reservation ``grow`` fills on demand.
+        ``headroom`` adds transient speculative-draft tokens to the
+        projected budget; ``shareable=False`` (aux-embedding requests)
+        disables both adoption and later publication.  Returns
+        ``(state slot, reused prefix tokens)`` — the reused span is what
+        suffix-only prefill may skip — or None when slots or spendable
+        blocks are exhausted."""
         if not self._free_slots:
             return None
         need = self.projected_blocks(len(prompt), max_new + headroom)
-        shared = self._lookup_shared(prompt, adapter, prefix_id, touch=True)
+        share = bool(self.hash_dedup and shareable)
+        adopt_keys: List[str] = []
+        shared: List[int] = []
+        if share:
+            if keys is None:
+                keys = self.chain_keys(prompt, adapter)
+            shared = self._resident_run(keys)
+            adopt_keys = list(keys[:len(shared)])
         # blocks that must exist before prefill writes: the whole prompt
         now_need = min(self.projected_blocks(len(prompt), 0), need)
         fresh_need = need - len(shared)          # lifetime charge at the gate
         fresh_now = max(now_need - len(shared), 0)
         if fresh_need > self.free_blocks:
-            # shed idle prefixes (oldest first) to make room
-            while self._prefixes and fresh_need > self.free_blocks:
-                if not self._drop_oldest_prefix(keep=prefix_id if shared
-                                                else ""):
+            # shed idle index blocks (zero-hit first, then coldest) to make
+            # room — but never the run this admission is about to adopt
+            protect = frozenset(shared)
+            while self._index and fresh_need > self.free_blocks:
+                if not self._shed_one(protect=protect):
                     break
             if fresh_need > self.free_blocks:
                 return None
-        for bid in shared:
+        for k, bid in zip(adopt_keys, shared):
             self.allocator.incref(bid)
+            self._hits[k] = self._hits.get(k, 0) + 1
+            self._index.move_to_end(k)                # LRU touch
+            self.hash_hits += 1
         fresh = self.allocator.alloc_many(fresh_now)
         if fresh is None:       # gate passed but the pool cannot back it:
             raise KVAccountingError(  # free_blocks <= n_free was violated
@@ -430,6 +530,14 @@ class PagedCacheManager:
         self.reserved[slot] = max(need, len(self.tables[slot]))
         self._debt += self._debt_of(slot)
         self.lens[slot] = 0
+        n_rec = min(len(prompt), self.s_max)
+        buf = np.zeros((self.s_max,), np.int64)
+        buf[:n_rec] = np.asarray(prompt[:n_rec], np.int64)
+        self._seqs[slot] = buf
+        self._seq_len[slot] = n_rec
+        self._chains[slot] = adopt_keys
+        self._adapters[slot] = adapter
+        self._share[slot] = share
         self._touch_lent()
         return slot, len(shared) * self.block_size
 
@@ -439,6 +547,11 @@ class PagedCacheManager:
         for bid in self.tables.pop(slot, []):
             self.allocator.decref(bid)
         self.shared_count.pop(slot, None)
+        self._seqs.pop(slot, None)
+        self._seq_len.pop(slot, None)
+        self._chains.pop(slot, None)
+        self._adapters.pop(slot, None)
+        self._share.pop(slot, None)
         self.lens[slot] = 0
         self._free_slots.append(slot)
 
@@ -462,10 +575,10 @@ class PagedCacheManager:
                 break                       # transient overshoot, pool dry
             d0 = self._debt_of(slot)
             bid = self.allocator.alloc()
-            # shedding an idle registry prefix (ref == 1) is free compared
-            # with the alternatives — a KVAccountingError here or, under
-            # lending, an engine preemption that recomputes a whole context
-            while bid is None and self._drop_oldest_prefix():
+            # shedding an idle index block (ref == 1) is free compared with
+            # the alternatives — a KVAccountingError here or, under lending,
+            # an engine preemption that recomputes a whole context
+            while bid is None and self._shed_one():
                 bid = self.allocator.alloc()
             if bid is None:
                 if within and self.over_admit <= 1.0:
@@ -483,9 +596,14 @@ class PagedCacheManager:
     def truncate(self, slot: int, new_len: int):
         """Roll ``slot`` back to ``new_len`` tokens (speculation rollback):
         release table blocks past the new length back to the pool, restoring
-        the slot's reservation debt.  Shared (prefix/CoW) blocks are only
-        dereferenced — the registry's or a sibling's refcount keeps them
-        alive, so rollback never destroys shared state."""
+        the slot's reservation debt.  Shared (adopted/CoW/index-held) blocks
+        are only dereferenced — the index's or a sibling's refcount keeps
+        them alive, so rollback never destroys shared state.  The slot's own
+        dedup bookkeeping is de-published: its committed-token record and
+        key chain shrink with the length, so a later re-fill with different
+        content publishes fresh keys (the index entries for the OLD content
+        stay valid — they still name blocks that hold exactly that
+        content)."""
         new_len = max(int(new_len), 0)
         table = self.tables[slot]
         nb = -(-new_len // self.block_size)
@@ -507,6 +625,10 @@ class PagedCacheManager:
             self.reserved[slot] = max(
                 self.reserved.get(slot, 0) - (dropped - freed), len(table))
             self._debt += self._debt_of(slot) - d0
+        if slot in self._seqs:
+            self._seq_len[slot] = min(self._seq_len[slot], new_len)
+            chain = self._chains[slot]
+            del chain[new_len // self.block_size:]
         self.lens[slot] = new_len
 
     def prepare_write(self, slot: int, start: int, n: int) -> int:
@@ -523,46 +645,87 @@ class PagedCacheManager:
             self.ensure_writable(slot, pos=bi * self.block_size)
         return end - start
 
-    # -- prefix registry -----------------------------------------------------
-    def register_prefix(self, prefix_id: str, slot: int, prompt: np.ndarray,
-                        adapter: str = ""):
-        """Publish the full blocks of ``slot``'s prompt for reuse.  The
-        registry holds its own refcount, so the blocks outlive the request."""
-        if not prefix_id or prefix_id in self._prefixes:
-            return
-        # clamp to blocks the table still holds: a slot truncated (or only
-        # partially grown) below the prompt's full-block span must register
-        # the span it can actually vouch for — an over-long (or empty)
-        # block list would poison lookups and wedge the shed loop
-        n_full = min(len(prompt) // self.block_size, len(self.tables[slot]))
-        if n_full == 0:
-            return
-        bids = self.tables[slot][:n_full]
-        for bid in bids:
-            self.allocator.incref(bid)
-        self._prefixes[prefix_id] = (adapter,
-                                     np.asarray(prompt)[:n_full *
-                                                        self.block_size]
-                                     .copy(), bids)
+    # -- content-hash publication --------------------------------------------
+    def commit_tokens(self, slot: int, toks: Sequence[int]):
+        """Record freshly-committed decode/verify input tokens (the token
+        whose K/V was written at each position) and publish any block the
+        advance fills.  The committed length lands at the end of the
+        recorded sequence — callers that wrote a verify chunk first
+        ``truncate`` back past the rejected drafts, then commit the
+        accepted inputs here.  Writes in place into the slot's s_max
+        buffer: O(n) per call, not O(history)."""
+        sl = self._seq_len[slot]
+        n = min(len(toks), self.s_max - sl)
+        if n:
+            self._seqs[slot][sl:sl + n] = np.asarray(toks[:n], np.int64)
+            self._seq_len[slot] = sl + n
+        self.lens[slot] = self._seq_len[slot]
+        self._publish_upto(slot)
 
-    def _drop_oldest_prefix(self, keep: str = "") -> bool:
-        """Shed the oldest prefix registration that would actually free at
-        least one block (some block at ref == 1).  Dropping a prefix whose
-        blocks are all still held by active consumers frees nothing and
-        only destroys reusable sharing metadata."""
-        for pid, (_, _, bids) in self._prefixes.items():
-            if pid == keep:
+    def _publish_upto(self, slot: int):
+        """Publish ``slot``'s newly-filled full blocks into the hash index.
+        The index increfs each published block, which makes its payload
+        immutable: any later write into it (rollback past a block boundary,
+        then regrowth) is forced through copy-on-write, so an index entry
+        can never describe content that changed under it.  A key that is
+        already resident keeps the incumbent block — our copy stays private
+        (publishing both would strand one of them)."""
+        if not self._share.get(slot, False):
+            return
+        bs = self.block_size
+        seq = self._seqs[slot]
+        chain = self._chains[slot]
+        table = self.tables[slot]
+        adapter = self._adapters.get(slot, "")
+        n_full = min(int(self.lens[slot]), self._seq_len[slot]) // bs
+        n_full = min(n_full, len(table))
+        while len(chain) < n_full:
+            i = len(chain)
+            parent = chain[-1] if chain else ""
+            key = block_key(adapter, parent, seq[i * bs:(i + 1) * bs])
+            chain.append(key)
+            bid = table[i]
+            if bid == 0 or key in self._index or bid in self._hashed:
                 continue
-            if not bids or any(self.allocator.ref[b] == 1 for b in bids):
-                self._prefixes.pop(pid)
-                for bid in bids:
-                    self.allocator.decref(bid)
-                return True
-        return False
+            self._index[key] = bid
+            self._hashed[bid] = key
+            self._hits.setdefault(key, 0)
+            self.allocator.incref(bid)
 
-    @property
-    def prefixes(self) -> List[str]:
-        return list(self._prefixes)
+    def _depublish(self, key: str):
+        bid = self._index.pop(key)
+        del self._hashed[bid]
+        self._hits.pop(key, None)
+        self.allocator.decref(bid)
+
+    def _shed_one(self, protect: frozenset = frozenset()) -> bool:
+        """Evict one index entry whose block only the index holds
+        (ref == 1; blocks still held by live tables are not cache, they are
+        working state — never sheddable from here).  Preference: zero-hit
+        blocks first (publication-order LRU among them), then the lowest
+        adoption count — the blocks whose loss costs the least recompute."""
+        best = None
+        for k, bid in self._index.items():
+            if bid in protect or self.allocator.ref[bid] != 1:
+                continue
+            score = self._hits.get(k, 0)
+            if best is None or score < best[0]:
+                best = (score, k)
+                if score == 0:
+                    break         # oldest zero-hit entry: cannot do better
+        if best is None:
+            return False
+        self._depublish(best[1])
+        return True
+
+    def flush_index(self) -> int:
+        """Shed every reclaimable index entry (tests/benches: distinguishes
+        cache residency from a real leak — after a drain plus a flush the
+        allocator must be fully free).  Returns entries shed."""
+        n = 0
+        while self._shed_one():
+            n += 1
+        return n
 
     # -- copy-on-write -------------------------------------------------------
     def ensure_writable(self, slot: int, pos: Optional[int] = None) -> int:
@@ -584,12 +747,12 @@ class PagedCacheManager:
         # The shed loop uses the SAME spendable notion as the alloc below:
         # under lending, free_blocks sits <= 0 for long stretches while the
         # free list is non-empty, and shedding then would destroy exactly
-        # the registry-resident prefixes that make preemption cheap.
+        # the index-resident blocks that make preemption cheap.
         def _spendable():
             return (self.free_blocks if self.over_admit <= 1.0
                     else self.allocator.n_free)
-        while self._prefixes and _spendable() <= 0:
-            if not self._drop_oldest_prefix():
+        while self._index and _spendable() <= 0:
+            if not self._shed_one():
                 break
         new = self.allocator.alloc() if _spendable() > 0 else None
         if new is None:
@@ -597,6 +760,13 @@ class PagedCacheManager:
         self.cache = _copy_block(self.cache, jnp.int32(bid), jnp.int32(new))
         self.allocator.decref(bid)
         table[bi] = new
+        # the fork de-publishes the slot's claim on this position: its key
+        # chain must not extend past a block whose payload is about to
+        # diverge from the hashed content (the index entry itself stays —
+        # it names the ORIGINAL block, whose payload is untouched)
+        chain = self._chains.get(slot)
+        if chain is not None:
+            del chain[bi:]
         self._touch_lent()
         return new
 
@@ -609,9 +779,9 @@ class PagedCacheManager:
         return t
 
     def write_table_of(self, slot: int) -> np.ndarray:
-        """Prefill-write table: shared prefix entries are nulled so prefill
-        never rewrites blocks it does not exclusively own.  The shared
-        blocks already hold the registrar's K/V (same adapter + tokens +
+        """Prefill-write table: adopted prefix entries are nulled so prefill
+        never rewrites blocks it does not exclusively own.  The adopted
+        blocks already hold the publisher's K/V (same adapter + tokens +
         positions); rewriting them would be benign only if recompute were
         bitwise-identical, which batch-composition-dependent paths (MoE
         capacity dropping) do not guarantee."""
@@ -641,7 +811,10 @@ class PagedCacheManager:
                        lengths: List[int], src_base: Optional[int] = None):
         """Prefill K/V was written straight into the request's blocks via its
         table — committing is just the per-request *state* row copy (Mamba
-        SSM/conv state, cross-attention K/V) plus length assignment."""
+        SSM/conv state, cross-attention K/V) plus length assignment, and the
+        publication point for the prompt blocks the chunk filled (chunked
+        prefill publishes as it goes, so a sibling admitted mid-prefill
+        already adopts the committed span)."""
         if not assignments:
             return
         state = self._state_subtree()
@@ -652,6 +825,7 @@ class PagedCacheManager:
             self._merge_state(_commit(state, src, dst))
         for (_, slot), ln in zip(assignments, lengths):
             self.lens[slot] = ln
+            self._publish_upto(slot)
 
     def _state_subtree(self):
         layers = tuple({k: d[k] for k in d if k in STATE_KEYS}

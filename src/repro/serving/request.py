@@ -25,9 +25,9 @@ class Request:
     arrival: float = 0.0               # submit time (clock units)
     eos_token: int = -1                # -1 = never stop early
     aux_embed: Optional[np.ndarray] = None
-    prefix_id: str = ""                # shared-prompt handle: requests with
-    # the same (prefix_id, adapter) and identical leading tokens share the
-    # full KV blocks of that prefix by refcount (paged layout only)
+    # NOTE: cross-request KV reuse needs no caller-side handle — the paged
+    # cache content-addresses full blocks (chained hash of adapter + tokens),
+    # so identical prompt heads share automatically (engine ``hash_dedup``)
     draft_suffix: Optional[np.ndarray] = None  # reference token stream
     # (prompt + expected output) for the static-suffix drafter (trace replay)
 

@@ -11,6 +11,18 @@ a request is admitted only if its projected block need (prompt + max new
 tokens, in ``block_size`` units) fits the free pool, so short requests keep
 flowing when long ones would have pinned whole dense rows.  The dense layout
 degenerates to the old slot check (``free_blocks=None``).
+
+Prefix-aware admission (``probe_fn``): with the content-hash dedup index
+live, a request whose prompt head is already resident costs a fraction of a
+cold request — its prefill skips the resident span and its block charge
+drops by the adopted blocks.  The scheduler therefore scores waiting
+requests by resident-prefix fraction and admits high-residency requests
+first (the RadixAttention/SGLang insight: cache-aware scheduling compounds
+the cache's win).  A fairness ramp bounds the reordering: a request's score
+also rises with its queue wait and saturates at 1.0 — strictly above any
+possible residency fraction — after ``prefix_ramp_s``, so a zero-residency
+request can be passed over for at most the ramp window before it outranks
+every fresh high-residency arrival (FIFO among ramped requests).
 """
 from __future__ import annotations
 
@@ -33,6 +45,11 @@ class SchedulerConfig:
     #                                    preemption precursor, so fine-tuning
     #                                    concedes BEFORE inference requests
     #                                    start getting preempted
+    prefix_ramp_s: float = 1.0         # fairness ramp for prefix-aware
+    #                                    admission: queue wait at which a
+    #                                    cold (zero-residency) request's
+    #                                    score saturates and it outranks any
+    #                                    fresh high-residency arrival
 
 
 @dataclasses.dataclass
@@ -40,6 +57,8 @@ class Decision:
     admit: List[Request]
     ft_rows: int
     load: float
+    probe_admissions: int = 0      # admits reordered ahead of an older
+    #                                waiter by prefix residency this tick
 
 
 def projected_blocks(r: Request, block_size: int, s_max: int,
@@ -65,15 +84,17 @@ class Scheduler:
                pf_token_budget: Optional[int] = None,
                suffix_fn: Optional[Callable[[Request], int]] = None,
                chunked: bool = False,
-               lent_frac: float = 0.0) -> Decision:
+               lent_frac: float = 0.0,
+               probe_fn: Optional[Callable[[Request], int]] = None,
+               now: float = 0.0) -> Decision:
         """``need_fn`` (paged engines) returns the blocks a request would
-        actually consume — projected blocks minus registered shared prefix
+        actually consume — projected blocks minus index-resident adopted
         blocks — so the gate mirrors what admission will really reserve.
         ``spec_headroom`` widens the fallback projection by the transient
         speculative-draft tokens a resident request may hold mid-verify.
 
         Prefix-aware accounting: ``suffix_fn`` returns the tokens prefill
-        will actually *compute* for a request (prompt minus the registered
+        will actually *compute* for a request (prompt minus the resident
         shared-prefix span) — the token budget charges that, not the raw
         prompt length.  ``pf_rows_used``/``pf_token_budget`` subtract the
         bucket rows and tokens already claimed by in-flight partial-prefill
@@ -81,6 +102,12 @@ class Scheduler:
         a tick: admission charges only the first chunk (``min(suffix,
         remaining budget)``) and stops when the per-tick budget is spent —
         the engine feeds the rest as later chunks.
+
+        Prefix-aware admission ORDER: ``probe_fn`` returns the resident
+        prompt tokens the dedup index would serve; waiting requests are
+        visited by ``max(residency fraction, wait / prefix_ramp_s)`` (see
+        module docstring — the wait term saturates at 1.0, strictly above
+        any residency fraction, so no request starves past the ramp).
 
         ``lent_frac`` is the fraction of outstanding reservation debt the
         over-admission gate has actually lent out (0 under the conservative
@@ -90,12 +117,25 @@ class Scheduler:
         inference request has to be preempted."""
         c = self.cfg
         admit: List[Request] = []
+        ordered = waiting
+        if probe_fn is not None and len(waiting) > 1:
+            ramp = max(c.prefix_ramp_s, 1e-9)
+
+            def score(r: Request) -> float:
+                # residency fraction is < 1 by construction (at least one
+                # prompt token is never cached), so a ramp-saturated wait
+                # strictly dominates any fresh high-residency arrival
+                resid = probe_fn(r) / max(r.prompt_len, 1)
+                return max(resid, min((now - r.arrival) / ramp, 1.0))
+
+            ordered = sorted(waiting,
+                             key=lambda r: (-score(r), r.arrival, r.rid))
         budget = (c.max_prefill_tokens if pf_token_budget is None
                   else pf_token_budget)
         row_cap = max(min(c.max_prefill_per_tick, n_free_slots,
                           pf_capacity) - pf_rows_used, 0)
         blocks_left = free_blocks
-        for r in waiting:
+        for r in ordered:
             if len(admit) >= row_cap:
                 break
             tok = suffix_fn(r) if suffix_fn is not None else r.prompt_len
@@ -120,6 +160,15 @@ class Scheduler:
             # with the chunked boundary, which never over-charges
             budget = max(budget - tok, 0)
 
+        probe_admissions = 0
+        if probe_fn is not None and admit:
+            admitted = set(id(r) for r in admit)
+            passed = [w for w in waiting if id(w) not in admitted]
+            probe_admissions = sum(
+                1 for r in admit
+                if any((w.arrival, w.rid) < (r.arrival, r.rid)
+                       for w in passed))
+
         occupancy = n_active / max(self.capacity, 1)
         if free_blocks is not None and total_blocks > 0:
             # free_blocks goes negative while over-admitted lending is
@@ -136,4 +185,5 @@ class Scheduler:
             ft_rows = max(int(round(c.ft_rows_max * (1.0 - load))), 0)
             if len(waiting) - len(admit) >= c.concede_at_queue:
                 ft_rows = 0
-        return Decision(admit=admit, ft_rows=ft_rows, load=load)
+        return Decision(admit=admit, ft_rows=ft_rows, load=load,
+                        probe_admissions=probe_admissions)

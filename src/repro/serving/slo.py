@@ -72,6 +72,14 @@ class Metrics:
     max_pf_tokens_step: int = 0  # per-step prefill-token high-water mark
     starved_ticks: int = 0       # steps that ran prefill while decoders
     #                              were active but got no decode rows
+    # content-hash dedup / prefix-aware admission accounting
+    hash_hits: int = 0           # full blocks adopted from the hash index
+    #                              (each one skipped a block of recompute
+    #                              AND a block of storage)
+    hash_blocks_resident: int = 0  # gauge: index population at last step
+    probe_admissions: int = 0    # admissions reordered ahead of an older
+    #                              waiter because their prefix was resident
+    #                              (bounded by the scheduler fairness ramp)
     # over-admission / preemption accounting.  Preempted requests keep
     # their arrival and t_first_token, so the SLO cost of a preemption is
     # visible as decode latency; these count the mechanism itself.

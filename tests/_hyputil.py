@@ -1,9 +1,21 @@
 """Optional-hypothesis shim: the suite must collect without hypothesis
-installed, while the property tests still run when it is available."""
+installed, while the property tests still run when it is available.  Also
+owns the CI settings profile: ``HYPOTHESIS_PROFILE=ci`` pins a fixed,
+derandomized configuration (no wall-clock deadline, examples replayed from
+a deterministic seed) so CI property runs are reproducible and cannot
+flake a merge on an unlucky draw."""
+import os
+
 import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
+
+    settings.register_profile("ci", derandomize=True, deadline=None,
+                              max_examples=40, print_blob=True)
+    _profile = os.environ.get("HYPOTHESIS_PROFILE")
+    if _profile:
+        settings.load_profile(_profile)
 except ImportError:
     given = settings = st = None
 

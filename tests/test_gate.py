@@ -1,0 +1,144 @@
+"""benchmarks/gate.py — the unit-tested CI bench gate: path resolution
+(dotted / wildcard / interpolated), operator semantics, loud failures on
+dangling paths and missing artifacts, and schema sanity of the checked-in
+gates.json (every bench the CI matrix runs has a non-empty gate; run.py
+registers a matching artifact)."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.gate import GateError, resolve, run_check, run_gate  # noqa: E402
+
+DOC = {
+    "exact": True,
+    "speedup": 1.8,
+    "prefill_chunk": 128,
+    "best_factor": 1.5,
+    "nested": {"chunked": {"gap": 0.05, "steps": 0},
+               "unchunked": {"gap": 0.14}},
+    "arms": {"1": {"DTPS": 70.0, "leak_free": True},
+             "1.5": {"DTPS": 77.0, "leak_free": True}},
+}
+
+
+# --------------------------------------------------------------- resolve
+def test_resolve_dotted_and_wildcard():
+    assert resolve(DOC, "speedup") == [1.8]
+    assert resolve(DOC, "nested.chunked.gap") == [0.05]
+    assert sorted(resolve(DOC, "arms.*.DTPS")) == [70.0, 77.0]
+
+
+def test_resolve_interpolated_segment():
+    # {best_factor} -> 1.5 -> key "1.5" (float keys via %g, so 1.0 -> "1")
+    assert resolve(DOC, "arms.{best_factor}.DTPS") == [77.0]
+    one = dict(DOC, best_factor=1.0, arms={"1": {"DTPS": 70.0}})
+    assert resolve(one, "arms.{best_factor}.DTPS") == [70.0]
+
+
+def test_resolve_dangling_path_fails_loudly():
+    with pytest.raises(GateError):
+        resolve(DOC, "nested.missing.gap")
+    with pytest.raises(GateError):
+        resolve(DOC, "speedup.deeper")
+
+
+# ------------------------------------------------------------- run_check
+def test_check_ops_pass_and_fail():
+    run_check(DOC, {"lhs": "speedup", "op": ">=", "rhs": 1.5})
+    run_check(DOC, {"lhs": "exact", "op": "truthy"})
+    run_check(DOC, {"lhs": "nested.chunked.steps", "op": "==", "rhs": 0})
+    with pytest.raises(GateError):
+        run_check(DOC, {"lhs": "speedup", "op": ">=", "rhs": 2.5})
+    with pytest.raises(GateError):
+        run_check(DOC, {"lhs": "nested.chunked.steps", "op": "truthy"})
+
+
+def test_check_rhs_path_and_wildcard_all_semantics():
+    # path rhs: chunked gap must beat unchunked gap
+    run_check(DOC, {"lhs": "nested.chunked.gap", "op": "<",
+                    "rhs": "nested.unchunked.gap"})
+    # wildcard lhs: must hold for EVERY arm
+    run_check(DOC, {"lhs": "arms.*.leak_free", "op": "truthy"})
+    leaky = json.loads(json.dumps(DOC))
+    leaky["arms"]["1.5"]["leak_free"] = False
+    with pytest.raises(GateError):
+        run_check(leaky, {"lhs": "arms.*.leak_free", "op": "truthy"})
+    # interpolated lhs against a path rhs: best arm beats the baseline
+    run_check(DOC, {"lhs": "arms.{best_factor}.DTPS", "op": ">",
+                    "rhs": "arms.1.DTPS"})
+
+
+def test_unknown_op_rejected():
+    with pytest.raises(GateError):
+        run_check(DOC, {"lhs": "speedup", "op": "~=", "rhs": 1.0})
+
+
+# -------------------------------------------------------------- run_gate
+def _write(tmp_path, name, obj):
+    p = tmp_path / name
+    p.write_text(json.dumps(obj))
+    return str(p)
+
+
+def test_run_gate_end_to_end(tmp_path):
+    gates = _write(tmp_path, "gates.json", {
+        "toy": {"artifact": "BENCH_toy.json",
+                "checks": [{"lhs": "exact", "op": "truthy"},
+                           {"lhs": "speedup", "op": ">=", "rhs": 1.2}]}})
+    _write(tmp_path, "BENCH_toy.json", {"exact": True, "speedup": 1.3})
+    assert run_gate("toy", gates, str(tmp_path)) == 2
+
+
+def test_run_gate_missing_artifact_or_bench_fails(tmp_path):
+    gates = _write(tmp_path, "gates.json", {
+        "toy": {"artifact": "BENCH_toy.json",
+                "checks": [{"lhs": "exact", "op": "truthy"}]},
+        "hollow": {"artifact": "BENCH_hollow.json", "checks": []}})
+    with pytest.raises(GateError, match="missing"):
+        run_gate("toy", gates, str(tmp_path))          # artifact absent
+    with pytest.raises(GateError, match="no gate"):
+        run_gate("nope", gates, str(tmp_path))
+    _write(tmp_path, "BENCH_hollow.json", {})
+    with pytest.raises(GateError, match="no checks"):  # vacuous gate = fail
+        run_gate("hollow", gates, str(tmp_path))
+
+
+# ------------------------------------------------- checked-in gates.json
+def _repo(*parts):
+    return os.path.join(os.path.dirname(__file__), "..", *parts)
+
+
+def test_checked_in_gates_cover_the_ci_matrix():
+    """Every benchmark the CI matrix runs has a non-empty gate whose
+    artifact matches what run.py registers for that bench."""
+    with open(_repo("benchmarks", "gates.json")) as f:
+        gates = json.load(f)
+    expected = {"paged", "spec", "prefix", "preempt", "dedup"}
+    assert expected <= set(gates)
+    for name in expected:
+        assert gates[name]["checks"], f"gate {name} is vacuous"
+        assert gates[name]["artifact"] == f"BENCH_{name}.json"
+    from benchmarks.run import TABLES
+    registered = {a for _, _, a in TABLES if a}
+    assert {g["artifact"] for g in gates.values()} <= registered
+    # the workflow itself references the same matrix (no silent drift)
+    with open(_repo(".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "[paged, spec, prefix, preempt, dedup]" in ci
+    assert "benchmarks/gate.py" in ci
+
+
+def test_run_py_artifact_check():
+    """run.py must flag a registered benchmark that wrote no artifact."""
+    import time
+    from benchmarks.run import check_artifact
+    assert check_artifact(None, time.time()) == ""
+    assert "wrote no" in check_artifact("BENCH_does_not_exist.json",
+                                        time.time())
+    probe = _repo("BENCH_paged.json")       # exists, but predates this run
+    if os.path.exists(probe):
+        assert "stale" in check_artifact(probe, time.time() + 1)

@@ -1,0 +1,352 @@
+"""Content-hash block dedup + prefix-aware admission: chained block keys
+(adapter- and context-pinned), probe/adoption semantics, stale-entry-free
+de-publish on CoW/truncate, engine byte-exactness of dedup-on vs dedup-off
+across mixed fine-tune/prefill/decode/verify batches (attn AND MLA), and the
+scheduler's residency-scored admission with its starvation-proof fairness
+ramp."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.data import datasets
+from repro.models.schema import init_params
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import (CacheManager, PagedCacheManager,
+                                   block_key)
+from repro.serving.request import Request
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+from repro.spec import SpecConfig
+from repro.training.trainer import MixedLoraTrainer, TrainerConfig
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+def _mgr(capacity=4, n_blocks=16, s_max=64, bs=8, **kw):
+    cfg = get_reduced("llama3-8b")
+    return PagedCacheManager(cfg, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks, **kw)
+
+
+def _commit_full(m, slot):
+    m.commit_prefill([(0, slot)], [m._seq_len[slot]])
+
+
+# ------------------------------------------------------------- block keys
+def test_block_key_pins_adapter_and_context():
+    toks = np.arange(8)
+    k = block_key("a", "", toks)
+    assert k == block_key("a", "", toks)                  # deterministic
+    assert k != block_key("b", "", toks)                  # adapter in key
+    assert k != block_key("a", "parent", toks)            # context in key
+    assert k != block_key("a", "", np.arange(1, 9))       # tokens in key
+
+
+def test_chain_keys_cap_and_chaining():
+    m = _mgr(bs=8)
+    p = np.arange(17, dtype=np.int32)                     # 2 full + 1 token
+    keys = m.chain_keys(p)
+    assert len(keys) == 2
+    # exactly-two-blocks prompt leaves >= 1 token uncached: only 1 key
+    assert len(m.chain_keys(p[:16])) == 1
+    assert len(m.chain_keys(p[:8])) == 0
+    # the chain pins position: the SAME tokens in block 1 hash differently
+    # than they would in block 0 (parent differs)
+    pp = np.concatenate([p[8:16], p[8:16], [0]])
+    assert m.chain_keys(pp)[1] != keys[1]
+    # identical heads agree regardless of what follows
+    assert m.chain_keys(np.concatenate([p[:16], [99, 98]]))[0] == keys[0]
+
+
+def test_probe_is_side_effect_free():
+    m = _mgr(bs=8)
+    p = np.arange(20, dtype=np.int32)
+    assert m.probe(p) == 0
+    s, _ = m.try_admit(p, max_new=4)
+    _commit_full(m, s)
+    hits0 = m.hash_hits
+    assert m.probe(p) == 16
+    assert m.probe(p, adapter="other") == 0
+    assert m.hash_hits == hits0                           # pure preview
+    # divergence mid-chain: only the matching head counts
+    q = np.concatenate([p[:8], np.full((12,), 7, np.int32)])
+    assert m.probe(q) == 8
+    # dedup off: probe reports nothing
+    off = _mgr(bs=8, hash_dedup=False)
+    s2, _ = off.try_admit(p, max_new=4)
+    _commit_full(off, s2)
+    assert off.probe(p) == 0 and off.hash_blocks_resident == 0
+
+
+def test_depublish_on_truncate_and_cow_leaves_no_stale_entries():
+    """Rolling back into a published block and rewriting it must fork the
+    block (copy-on-write), never mutate the indexed payload: the index
+    entry keeps naming the ORIGINAL block, the slot's chain shrinks, and a
+    re-fill with different content publishes NEW keys."""
+    m = _mgr(capacity=2, n_blocks=16, bs=8, s_max=64)
+    p = np.arange(24, dtype=np.int32)
+    s, _ = m.try_admit(p, max_new=24)
+    _commit_full(m, s)                                    # publishes 2
+    keys = list(m._chains[s])
+    old_b1 = m.tables[s][1]
+    assert m._index[keys[1]] == old_b1
+    # spec-style rollback INTO block 1, then regrow with different tokens
+    m.truncate(s, 10)
+    assert m._chains[s] == keys[:1]                       # chain de-published
+    m.prepare_write(s, 10, 8)                             # CoW's block 1
+    new_b1 = m.tables[s][1]
+    assert new_b1 != old_b1, "write would have mutated an indexed block"
+    m.commit_tokens(s, np.full((8,), 9, np.int64))        # refill: 18 tokens
+    # the old entry still names the old block (payload untouched), the new
+    # content got a NEW key on the forked block
+    assert m._index[keys[1]] == old_b1
+    new_keys = m._chains[s]
+    assert len(new_keys) == 2 and new_keys[1] != keys[1]
+    assert m._index[new_keys[1]] == new_b1
+    # both contents now adoptable: old via the original prompt, new via the
+    # rewritten history
+    assert m.probe(p) == 16
+    assert m.probe(np.concatenate([p[:10], np.full((8,), 9), [0]])) == 16
+    for key, bid in m._index.items():
+        assert m._hashed[bid] == key
+        assert m.allocator.ref[bid] >= 1
+
+
+def test_publish_collision_keeps_incumbent():
+    """Two slots that independently compute identical content must not both
+    publish: the incumbent entry survives, the second copy stays private,
+    and freeing the second slot frees its copy entirely."""
+    m = _mgr(capacity=2, n_blocks=16, bs=8, hash_dedup=True)
+    p = np.arange(20, dtype=np.int32)
+    sa, _ = m.try_admit(p, max_new=4)
+    sb, _ = m.try_admit(p, max_new=4)                     # nothing published
+    _commit_full(m, sa)
+    _commit_full(m, sb)                                   # collides: private
+    assert m.hash_blocks_resident == 2                    # one entry per key
+    key0 = m._chains[sa][0]
+    assert m._index[key0] == m.tables[sa][0]
+    assert m.tables[sb][0] not in m._hashed
+    used = m.allocator.n_used
+    m.free(sb)                                            # private copy dies
+    assert m.allocator.n_used == used - len(m.tables[sa])
+
+
+def test_dense_manager_commit_tokens_advances_length():
+    cfg = get_reduced("llama3-8b")
+    m = CacheManager(cfg, 2, 1, 64)
+    slot = m.alloc()
+    m.lens[slot] = 10
+    m.commit_tokens(slot, [1, 2, 3])
+    assert m.lens[slot] == 13
+
+
+# ------------------------------------------------- engine byte-exactness
+def _engine(cfg, seed=0, trainers=0, **kw):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(seed + 1))
+    store.load_random("serve", jax.random.PRNGKey(seed + 2))
+    kw = {"capacity": 4, "pf_capacity": 2, "s_max": 96, "block_size": 16,
+          "virtual_time": True, **kw}
+    eng = UnifiedEngine(MixedLoraModel(cfg, params, store),
+                        EngineConfig(**kw))
+    for i in range(trainers):
+        name = f"tr{i}"
+        store.load_random(name, jax.random.PRNGKey(seed + 10 + i))
+        rows, ev = datasets.split_eval(
+            datasets.alpaca_like(12, vocab=cfg.vocab, seed=i))
+        eng.add_trainer(MixedLoraTrainer(name, store.slot_of(name), rows, ev,
+                                         TrainerConfig(rows_per_micro=2,
+                                                       accum_steps=2,
+                                                       epochs=1)))
+    return eng
+
+
+def _shared_reqs(cfg, n=5, max_new=6, seed=0):
+    head = np.arange(32, dtype=np.int32) % cfg.vocab
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=np.concatenate([head, rng.integers(
+                        0, cfg.vocab, rng.integers(4, 12))
+                        .astype(np.int32)]),
+                    adapter="serve", max_new_tokens=max_new,
+                    arrival=0.25 * i) for i in range(n)]
+
+
+def _run(eng, reqs, max_ticks=8000):
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=max_ticks)
+    return {r.rid: list(r.output) for r in eng.finished}
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-236b"])
+def test_hash_adoption_matches_explicit_reuse_span(arch):
+    """Hash-chain adoption must equal what explicit prefix registration
+    used to deliver, byte-for-byte AND span-for-span (attn + MLA): every
+    request after the first reuses the full shared head (2 blocks of 16),
+    exactly the span an explicit prefix_id registration granted."""
+    cfg = get_reduced(arch)
+    n = 5
+    ref = _run(_engine(cfg, hash_dedup=False), _shared_reqs(cfg, n=n))
+    eng = _engine(cfg)
+    out = _run(eng, _shared_reqs(cfg, n=n))
+    assert out == ref and len(out) == n
+    # the explicit-registry contract: requests 2..n each reuse the entire
+    # 32-token registered head — adoption must serve exactly that span
+    assert eng.metrics.reused_prefix_tokens == 32 * (n - 1)
+    assert eng.metrics.hash_hits == 2 * (n - 1)
+
+
+def test_dedup_exact_across_mixed_ft_prefill_decode_verify():
+    """One engine co-running fine-tune rows, chunked prefill, plain decode
+    and speculative verify chunks: dedup on vs off must be byte-identical
+    while actually deduping."""
+    cfg = get_reduced("llama3-8b")
+
+    def mk():
+        return _shared_reqs(cfg, n=5, max_new=10)
+
+    ref = _run(_engine(cfg, hash_dedup=False, trainers=1, prefill_chunk=16,
+                       spec=SpecConfig(k_max=3, drafter="ngram")), mk())
+    eng = _engine(cfg, trainers=1, prefill_chunk=16,
+                  spec=SpecConfig(k_max=3, drafter="ngram"))
+    out = _run(eng, mk())
+    assert out == ref and len(out) == 5
+    assert eng.metrics.hash_hits > 0
+    assert all(not t.pending() for t in eng.trainers.values())
+    assert eng.cachemgr.pristine
+
+
+def test_dedup_with_preemption_exact_and_stale_free():
+    """Over-admission preemption on top of dedup: byte-identical outputs,
+    and the index never holds a stale or dangling entry afterwards."""
+    cfg = get_reduced("llama3-8b")
+    rng = np.random.default_rng(11)
+    head = np.arange(16, dtype=np.int32)
+
+    def mk():
+        return [Request(rid=i,
+                        prompt=np.concatenate([head, rng.integers(
+                            0, cfg.vocab, 4).astype(np.int32)]),
+                        adapter="serve", max_new_tokens=40,
+                        arrival=0.1 * i) for i in range(3)]
+
+    rng = np.random.default_rng(11)
+    ref = _run(_engine(cfg, n_blocks=12, hash_dedup=False,
+                       over_admit=2.0), mk())
+    rng = np.random.default_rng(11)
+    eng = _engine(cfg, n_blocks=12, over_admit=2.0)
+    out = _run(eng, mk())
+    assert out == ref and len(out) == 3
+    m = eng.cachemgr
+    for key, bid in m._index.items():
+        assert m._hashed[bid] == key
+        assert m.allocator.ref[bid] >= 1
+        assert bid not in set(m.allocator._free)
+    assert m.pristine
+
+
+def test_aux_embed_requests_never_share():
+    """Modality-embedding requests must neither adopt nor publish:
+    identical tokens under different aux embeddings have different K/V, a
+    distinction the (adapter, tokens) content identity cannot capture."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg)
+    p = np.arange(40, dtype=np.int32)
+    aux = np.zeros((4, cfg.d_model), np.float32)
+    b = Request(rid=1, prompt=p.copy(), adapter="serve", max_new_tokens=2,
+                aux_embed=aux)
+    assert eng._keys_of(b) is None                        # no chain at all
+    assert eng._resident_tokens(b) == 0
+    # manager level: a shareable sibling published the same tokens...
+    m = eng.cachemgr
+    s, _ = m.try_admit(p, max_new=2)
+    _commit_full(m, s)
+    assert m.probe(p) == 32                               # resident
+    # ...but an unshareable admission must not adopt it, and its own
+    # commits must not publish
+    s2, reused = m.try_admit(p, max_new=2, shareable=False)
+    assert reused == 0
+    assert m.shared_count[s2] == 0
+    resident_before = m.hash_blocks_resident
+    m.commit_prefill([(0, s2)], [len(p)])
+    assert m.hash_blocks_resident == resident_before
+
+
+# --------------------------------------------- prefix-aware admission
+def test_scheduler_prefers_resident_prefixes():
+    """With block budget for one admit, the high-residency request jumps
+    the FIFO queue (and the jump is counted as a probe admission)."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_tick=1), capacity=8)
+    cold = Request(rid=0, prompt=np.zeros((64,), np.int32), adapter="",
+                   arrival=0.0)
+    hot = Request(rid=1, prompt=np.ones((64,), np.int32), adapter="",
+                  arrival=0.1)
+    resid = {0: 0, 1: 48}
+    d = sched.decide([cold, hot], 0, 8, 4, False, free_blocks=100,
+                     total_blocks=100, block_size=16, s_max=256,
+                     probe_fn=lambda r: resid[r.rid], now=0.2)
+    assert [r.rid for r in d.admit] == [1]
+    assert d.probe_admissions == 1
+
+
+def test_scheduler_fairness_ramp_prevents_starvation():
+    """A zero-residency request waiting past the ramp outranks EVERY fresh
+    fully-resident arrival: its score saturates at 1.0, strictly above any
+    residency fraction (at least one prompt token is never cached)."""
+    cfg = SchedulerConfig(max_prefill_per_tick=1, prefix_ramp_s=1.0)
+    sched = Scheduler(cfg, capacity=8)
+    cold = Request(rid=0, prompt=np.zeros((64,), np.int32), adapter="",
+                   arrival=0.0)
+    now = 0.0
+    admitted_at = None
+    waiting = [cold]
+    for tick in range(20):
+        now += 0.25
+        # a fresh maximal-residency competitor arrives every tick
+        waiting.append(Request(rid=100 + tick,
+                               prompt=np.ones((64,), np.int32), adapter="",
+                               arrival=now))
+        d = sched.decide(waiting, 0, 8, 4, False, free_blocks=1000,
+                         total_blocks=1000, block_size=16, s_max=256,
+                         probe_fn=lambda r: 0 if r.rid == 0 else 48,
+                         now=now)
+        assert len(d.admit) == 1
+        got = d.admit[0]
+        waiting.remove(got)
+        if got.rid == 0:
+            admitted_at = now
+            break
+    assert admitted_at is not None, "cold request starved"
+    # admitted at the first decision after its wait crossed the ramp
+    assert admitted_at - cold.arrival <= cfg.prefix_ramp_s + 0.25
+
+
+def test_engine_counts_probe_admissions():
+    """End-to-end: when a hot-prefix request arrives behind a cold one and
+    the pool only fits one of them, the hot one is admitted first and the
+    reorder lands in Metrics.probe_admissions."""
+    cfg = get_reduced("llama3-8b")
+    eng = _engine(cfg, n_blocks=13, s_max=64,
+                  scheduler=SchedulerConfig(max_prefill_per_tick=1,
+                                            prefix_ramp_s=5.0))
+    head = np.arange(32, dtype=np.int32)
+    rng = np.random.default_rng(0)
+    first = Request(rid=0, prompt=np.concatenate(
+        [head, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        adapter="serve", max_new_tokens=28, arrival=0.0)
+    cold = Request(rid=1, prompt=rng.integers(100, cfg.vocab, 36)
+                   .astype(np.int32), adapter="serve", max_new_tokens=28,
+                   arrival=0.5)
+    # same arrival as cold: FIFO (rid order) would admit cold first; the
+    # residency score must flip that
+    hot = Request(rid=2, prompt=np.concatenate(
+        [head, rng.integers(0, cfg.vocab, 4).astype(np.int32)]),
+        adapter="serve", max_new_tokens=28, arrival=0.5)
+    out = _run(eng, [first, cold, hot])
+    assert len(out) == 3
+    assert eng.metrics.probe_admissions >= 1
+    # the hot request overtook the cold one into the prefill bucket
+    assert hot.t_first_token < cold.t_first_token

@@ -77,21 +77,31 @@ def test_admission_refused_when_out_of_state_slots():
     assert m.try_admit(np.zeros((4,), np.int32), 4) is None
 
 
-def test_prefix_sharing_and_copy_on_write():
+def _commit_full(m, slot):
+    """Engine commit analog: land the slot's whole prompt, publishing its
+    full blocks into the content-hash index."""
+    m.commit_prefill([(0, slot)], [m._seq_len[slot]])
+
+
+def test_hash_sharing_and_copy_on_write():
     m = _mgr(capacity=4, n_blocks=16, bs=8)
     prompt = np.arange(20, dtype=np.int32)            # 2 full blocks + tail
-    s1, _ = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
-    m.register_prefix("sys", s1, prompt, adapter="a")
+    s1, r1 = m.try_admit(prompt, max_new=8, adapter="a")
+    assert r1 == 0                                    # nothing resident yet
+    _commit_full(m, s1)                               # publishes 2 blocks
+    assert m.hash_blocks_resident == 2
     used_before = m.allocator.n_used
-    s2, reused = m.try_admit(prompt, max_new=8, adapter="a", prefix_id="sys")
-    # the two full prefix blocks are shared, only the tail + growth are fresh
+    s2, reused = m.try_admit(prompt, max_new=8, adapter="a")
+    # the two full prefix blocks are adopted, only the tail + growth fresh
     assert reused == 16                               # 2 blocks of 8 reused
     assert m.tables[s2][:2] == m.tables[s1][:2]
     assert m.allocator.n_used == used_before + (len(m.tables[s2]) - 2)
+    assert m.hash_hits == 2
     shared_bid = m.tables[s2][0]
     assert m.allocator.is_shared(shared_bid)
-    # a different adapter must NOT reuse the prefix (K/V depend on the LoRA)
-    s3, r3 = m.try_admit(prompt, max_new=8, adapter="b", prefix_id="sys")
+    # a different adapter must NOT adopt (K/V depend on the LoRA — the
+    # adapter is baked into the block key)
+    s3, r3 = m.try_admit(prompt, max_new=8, adapter="b")
     assert r3 == 0
     assert m.tables[s3][0] != m.tables[s1][0]
     # copy-on-write: force a write into the shared block
@@ -99,25 +109,26 @@ def test_prefix_sharing_and_copy_on_write():
     assert new_bid != shared_bid and m.tables[s2][0] == new_bid
     assert not m.allocator.is_shared(new_bid)
     assert m.tables[s1][0] == shared_bid              # owner untouched
-    # freeing both requests keeps registry blocks alive; prefix LRU-drops
-    # under pressure
+    # freeing all requests keeps index blocks alive (pure cache, ref == 1);
+    # pool pressure sheds them on demand
     m.free(s1), m.free(s2), m.free(s3)
-    assert m.allocator.ref[shared_bid] == 1           # registry's refcount
+    assert m.allocator.ref[shared_bid] >= 1           # index's refcount
+    assert m.pristine
     while m.try_admit(np.zeros((64,), np.int32), 0) is not None:
         pass                                          # drain the pool
-    assert "sys" not in m.prefixes                    # prefix was shed
+    assert m.probe(prompt, adapter="a") == 0          # entries were shed
 
 
 def test_cow_copies_block_payload():
     m = _mgr(capacity=2, n_blocks=8, bs=16)
     prompt = np.arange(20, dtype=np.int32)            # 1 full block + tail
-    s1, _ = m.try_admit(prompt, 8, prefix_id="p")
-    m.register_prefix("p", s1, prompt)
+    s1, _ = m.try_admit(prompt, 8)
+    _commit_full(m, s1)
     bid = m.tables[s1][0]
     # write a recognizable payload into the shared block of one pool leaf
     leaf = m.cache["layers"][0]["k"]
     m.cache["layers"][0]["k"] = leaf.at[:, bid].set(7.0)
-    s2, reused = m.try_admit(prompt, 8, prefix_id="p")
+    s2, reused = m.try_admit(prompt, 8)
     assert reused == 16
     new_bid = m.ensure_writable(s2, pos=0)
     assert new_bid != bid
@@ -196,71 +207,79 @@ def test_engine_paged_matches_dense_outputs():
     assert out_d == out_p
 
 
-def test_engine_prefix_sharing_reduces_block_usage():
+def test_engine_hash_dedup_reduces_block_usage():
+    """Identical prompt heads dedup automatically (no caller-side id): the
+    dedup engine peaks at fewer live blocks than the escape-hatch engine,
+    with byte-identical outputs."""
     cfg = get_reduced("llama3-8b")
     sys_prompt = np.arange(32, dtype=np.int32)
 
-    def mk(n, prefix):
+    def mk(n):
         rng = np.random.default_rng(0)
         return [Request(rid=i,
                         prompt=np.concatenate([sys_prompt, rng.integers(
                             0, cfg.vocab, 8).astype(np.int32)]),
                         adapter="serve", max_new_tokens=4,
-                        prefix_id=prefix) for i in range(n)]
+                        arrival=0.2 * i) for i in range(n)]
 
     eng_shared = _engine(cfg, paged=True, block_size=16)
-    for r in mk(4, "sys"):
+    for r in mk(4):
         eng_shared.submit(r)
     eng_shared.run(max_ticks=5000)
-    eng_plain = _engine(cfg, paged=True, block_size=16)
-    for r in mk(4, ""):
+    eng_plain = _engine(cfg, paged=True, block_size=16, hash_dedup=False)
+    for r in mk(4):
         eng_plain.submit(r)
     eng_plain.run(max_ticks=5000)
     assert len(eng_shared.finished) == len(eng_plain.finished) == 4
-    assert (eng_shared.cachemgr.allocator.peak_used
-            < eng_plain.cachemgr.allocator.peak_used)
-    # shared and unshared prefixes decode identically (same params/seed)
+    assert eng_shared.metrics.hash_hits > 0
+    assert eng_shared.metrics.reused_prefix_tokens >= 32 * 3
+    assert eng_plain.metrics.hash_hits == 0
+    # deduped and plain engines decode identically (same params/seed)
     assert ({r.rid: r.output for r in eng_shared.finished}
             == {r.rid: r.output for r in eng_plain.finished})
 
 
-def test_prefix_shedding_skips_unreclaimable_registrations():
-    """Dropping a prefix whose blocks are all held by active consumers frees
-    nothing — the shed loop must keep such registrations (the sharing
-    metadata stays useful) and admission must simply refuse."""
+def test_index_shedding_skips_actively_held_blocks():
+    """Shedding an index entry whose block an active consumer still holds
+    (ref >= 2) frees nothing — the shed loop must keep such entries (the
+    sharing metadata stays useful) and admission must simply refuse."""
     m = _mgr(capacity=8, n_blocks=5, bs=16)           # 4 usable blocks
     prompt = np.arange(33, dtype=np.int32)            # 2 full blocks + tail
-    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="hot")
-    m.register_prefix("hot", s1, prompt)
-    s2, reused = m.try_admit(prompt, max_new=0, prefix_id="hot")  # shares 2
+    s1, _ = m.try_admit(prompt, max_new=0)
+    _commit_full(m, s1)
+    s2, reused = m.try_admit(prompt, max_new=0)       # adopts 2 blocks
     assert reused == 32
     assert m.tables[s2][:2] == m.tables[s1][:2]
     m.free(s1)                                        # consumer s2 remains
-    # pool: 2 shared blocks (ref=2) + s2's tail + 1 free; a 3-block request
-    # must refuse WITHOUT destroying the still-consumed "hot" registration
-    assert m.try_admit(np.arange(48, dtype=np.int32), 0) is None
-    assert "hot" in m.prefixes
-    m.free(s2)                                        # now only registry holds
-    assert m.try_admit(np.arange(48, dtype=np.int32), 0) is not None
-    assert "hot" not in m.prefixes                    # shed once reclaimable
+    # pool: 2 shared blocks (ref: s2 + index) + s2's tail + 1 free; a
+    # 3-block request (distinct content — no adoption) must refuse WITHOUT
+    # destroying the still-consumed index entries
+    cold = np.full((48,), 7, np.int32)
+    assert m.try_admit(cold, 0) is None
+    assert m.hash_blocks_resident == 2
+    m.free(s2)                                        # now only index holds
+    assert m.try_admit(cold, 0) is not None
+    # shed exactly what the admission needed, keep the rest cached
+    assert m.hash_blocks_resident == 1
 
 
-def test_prefix_registry_does_not_starve_admission():
-    """Registry-held prefix blocks must be shed under pressure, not wedge
-    the admission gate: a stream of distinct prefix_ids each leaving blocks
-    refcounted in the registry must keep being admitted."""
+def test_hash_index_does_not_starve_admission():
+    """Index-held blocks must be shed under pressure, not wedge the
+    admission gate: a stream of DISTINCT prompts each leaving published
+    blocks refcounted in the index must keep being admitted."""
     cfg = get_reduced("llama3-8b")
     eng = _engine(cfg, paged=True, block_size=16, n_blocks=17)  # 16 usable
     rng = np.random.default_rng(1)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 32)
                     .astype(np.int32), adapter="serve", max_new_tokens=4,
-                    prefix_id=f"sys{i}", arrival=0.5 * i)
+                    arrival=0.5 * i)
             for i in range(10)]
     for r in reqs:
         eng.submit(r)
     eng.run(max_ticks=3000)
     assert len(eng.finished) == 10
     assert all(r.state is State.DONE for r in eng.finished)
+    assert eng.cachemgr.pristine                      # cache, not a leak
 
 
 def test_cow_leaves_state_rows_untouched():
@@ -269,8 +288,11 @@ def test_cow_leaves_state_rows_untouched():
     rewritten."""
     cfg = get_reduced("jamba-1.5-large-398b")
     m = PagedCacheManager(cfg, 2, 2, 64, block_size=16, n_blocks=8)
-    s1, _ = m.try_admit(np.arange(20, dtype=np.int32), 8, prefix_id="p")
-    m.register_prefix("p", s1, np.arange(20, dtype=np.int32))
+    s1, _ = m.try_admit(np.arange(20, dtype=np.int32), 8)
+    # publish the full prompt block by hand (commit_prefill would row-copy
+    # the painted state rows we are about to assert on)
+    m.lens[s1] = 20
+    m._publish_upto(s1)
     # paint every state row so any stray write is visible
     for i, d in enumerate(m.cache["layers"]):
         for k in d:
@@ -278,7 +300,7 @@ def test_cow_leaves_state_rows_untouched():
                 m.cache["layers"][i][k] = d[k] + 3.0
     before = {k: np.asarray(v) for k, v in enumerate(
         [d.get("h") for d in m.cache["layers"]]) if v is not None}
-    s2, _ = m.try_admit(np.arange(20, dtype=np.int32), 8, prefix_id="p")
+    s2, _ = m.try_admit(np.arange(20, dtype=np.int32), 8)
     new_bid = m.ensure_writable(s2, pos=0)
     assert new_bid != m.tables[s1][0]
     after = {k: np.asarray(v) for k, v in enumerate(
@@ -324,17 +346,17 @@ def test_truncate_releases_blocks_and_restores_reservation():
 
 def test_truncate_shared_prefix_blocks_survive_rollback():
     """Rolling back through a refcounted shared-prefix block must only
-    decref it: the registry (and any sibling request) keeps it alive, and
+    decref it: the index (and any sibling request) keeps it alive, and
     the survivor's table is untouched."""
     m = _mgr(capacity=4, n_blocks=16, bs=8)
     prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
-    s1, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
-    m.register_prefix("sys", s1, prompt)
-    s2, reused = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    s1, _ = m.try_admit(prompt, max_new=8)
+    _commit_full(m, s1)
+    s2, reused = m.try_admit(prompt, max_new=8)
     assert reused == 16
     shared = list(m.tables[s2])
     assert shared[:2] == m.tables[s1][:2]
-    assert m.allocator.ref[shared[0]] == 3            # s1 + s2 + registry
+    assert m.allocator.ref[shared[0]] == 3            # s1 + s2 + index
     m.grow(s2, 24)
     m.truncate(s2, 4)                                 # roll back INTO block 0
     assert m.tables[s2] == shared[:1]
@@ -342,8 +364,8 @@ def test_truncate_shared_prefix_blocks_survive_rollback():
     assert m.allocator.ref[shared[0]] == 3            # survivor untouched
     assert m.allocator.ref[shared[1]] == 2            # s2's ref released
     assert m.tables[s1][:2] == shared[:2]             # sibling intact
-    # the survivor's payload is still addressable: re-admitting reuses it
-    s3, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
+    # the survivor's payload is still addressable: re-admitting adopts it
+    s3, _ = m.try_admit(prompt, max_new=8)
     assert m.tables[s3][:2] == shared[:2]
 
 
@@ -354,9 +376,9 @@ def test_truncate_through_shared_blocks_keeps_debt_invariant():
     within-reservation guarantee) has to survive."""
     m = _mgr(capacity=8, n_blocks=8, bs=8)            # 7 usable
     prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
-    s1, _ = m.try_admit(prompt, max_new=7, prefix_id="p")  # 3 held
-    m.register_prefix("p", s1, prompt)
-    s2, reused = m.try_admit(prompt, max_new=7, prefix_id="p")
+    s1, _ = m.try_admit(prompt, max_new=7)            # 3 held
+    _commit_full(m, s1)
+    s2, reused = m.try_admit(prompt, max_new=7)
     assert reused == 16                               # shares 2, owns tail
     filler, _ = m.try_admit(np.arange(8, dtype=np.int32), max_new=16)
     assert filler is not None                         # 1 held + 2 debt
@@ -371,40 +393,40 @@ def test_truncate_through_shared_blocks_keeps_debt_invariant():
     assert m.grow(filler, 24) >= 24
 
 
-def test_truncate_reused_registered_prefix_never_frees_registry_blocks():
-    """Speculative rollback on a request that REUSED a registered prefix
-    (refcount came from the registry, not a CoW fork): repeated grow/
+def test_truncate_adopted_index_blocks_never_frees_them():
+    """Speculative rollback on a request that ADOPTED index blocks
+    (refcount came from the index, not a CoW fork): repeated grow/
     truncate cycles — including truncating all the way back into the
-    shared span — must never drop a registry-held block's refcount to
-    zero, and the prefix must stay reusable afterwards."""
+    shared span — must never drop an index-held block's refcount to
+    zero, and the blocks must stay adoptable afterwards."""
     m = _mgr(capacity=4, n_blocks=16, bs=8)
     prompt = np.arange(17, dtype=np.int32)            # 2 full blocks + tail
-    s1, _ = m.try_admit(prompt, max_new=8, prefix_id="sys")
-    m.register_prefix("sys", s1, prompt)
-    m.free(s1)                                        # only registry holds
-    reg_bids = list(m._prefixes["sys"][2])
-    assert all(m.allocator.ref[b] == 1 for b in reg_bids)
-    s2, reused = m.try_admit(prompt, max_new=8, prefix_id="sys")
-    assert reused == 16 and m.tables[s2][:2] == reg_bids
+    s1, _ = m.try_admit(prompt, max_new=8)
+    _commit_full(m, s1)
+    m.free(s1)                                        # only index holds
+    idx_bids = [m._index[k] for k in m.chain_keys(prompt)]
+    assert all(m.allocator.ref[b] == 1 for b in idx_bids)
+    s2, reused = m.try_admit(prompt, max_new=8)
+    assert reused == 16 and m.tables[s2][:2] == idx_bids
     # spec-decode shape: grow over draft positions, then roll back —
     # repeatedly, and finally into the shared prefix itself
     for new_len in (20, 18, 17, 4):
         m.grow(s2, 24)
         m.truncate(s2, new_len)
-        assert all(m.allocator.ref[b] >= 1 for b in reg_bids), new_len
+        assert all(m.allocator.ref[b] >= 1 for b in idx_bids), new_len
         assert m.allocator.n_free >= m.reserved_debt
     m.free(s2)
-    assert all(m.allocator.ref[b] == 1 for b in reg_bids)  # registry's ref
-    assert "sys" in m.prefixes
-    s3, r3 = m.try_admit(prompt, max_new=8, prefix_id="sys")
-    assert r3 == 16 and m.tables[s3][:2] == reg_bids  # still reusable
+    assert all(m.allocator.ref[b] == 1 for b in idx_bids)  # index's ref
+    assert m.hash_blocks_resident == 2
+    s3, r3 = m.try_admit(prompt, max_new=8)
+    assert r3 == 16 and m.tables[s3][:2] == idx_bids  # still adoptable
 
 
-def test_engine_spec_truncate_over_reused_prefix_matches_greedy():
-    """End-to-end regression for Engine._prefix_of x speculative truncate:
-    spec decoding over a REUSED registered prefix must roll back only its
-    own draft blocks (never registry-held prefix blocks) and emit exactly
-    the plain-greedy outputs."""
+def test_engine_spec_truncate_over_adopted_prefix_matches_greedy():
+    """End-to-end regression for hash adoption x speculative truncate:
+    spec decoding over ADOPTED index blocks must roll back only its own
+    draft blocks (never index-held blocks) and emit exactly the
+    plain-greedy outputs."""
     from repro.spec import SpecConfig
     cfg = get_reduced("llama3-8b")
     sys_prompt = np.arange(32, dtype=np.int32)
@@ -415,7 +437,7 @@ def test_engine_spec_truncate_over_reused_prefix_matches_greedy():
                         prompt=np.concatenate([sys_prompt, rng.integers(
                             0, cfg.vocab, 5 + i).astype(np.int32)]),
                         adapter="serve", max_new_tokens=8,
-                        prefix_id="sys", arrival=0.3 * i) for i in range(4)]
+                        arrival=0.3 * i) for i in range(4)]
 
     plain = _engine(cfg, paged=True, block_size=16)
     for r in mk(4):
@@ -427,13 +449,16 @@ def test_engine_spec_truncate_over_reused_prefix_matches_greedy():
         spec.submit(r)
     spec.run(max_ticks=5000)
     assert len(spec.finished) == len(plain.finished) == 4
+    assert spec.metrics.hash_hits >= 2        # the shared head was adopted
     assert ({r.rid: r.output for r in spec.finished}
             == {r.rid: r.output for r in plain.finished})
-    # the registered prefix survived every rollback: its blocks are still
-    # alive under the registry's refcount
+    # the shared head survived every rollback: its blocks are still alive
+    # under the index's refcount
     mgr = spec.cachemgr
-    assert "sys" in mgr.prefixes
-    assert all(mgr.allocator.ref[b] >= 1 for b in mgr._prefixes["sys"][2])
+    head_keys = mgr.chain_keys(sys_prompt, adapter="serve")
+    assert len(head_keys) == 1                # 32 tokens, bs 16, 1-tok cap
+    assert head_keys[0] in mgr._index
+    assert mgr.allocator.ref[mgr._index[head_keys[0]]] >= 1
 
 
 def test_dense_truncate_rolls_length_only():

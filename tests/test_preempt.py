@@ -153,8 +153,11 @@ def test_forced_preemption_outputs_byte_identical():
         eng.run(max_ticks=5000)
         assert len(eng.finished) == 3
         assert all(r.state is State.DONE for r in eng.finished)
-        # zero leaks: allocator fully free, no debt, no tables after drain
+        # zero leaks: after drain only the hash index holds blocks (pure
+        # cache) and flushing it returns the allocator to fully free
         mgr = eng.cachemgr
+        assert mgr.pristine
+        mgr.flush_index()
         assert mgr.allocator.n_free == mgr.allocator.usable
         assert mgr.reserved_debt == 0 and not mgr.tables
     assert eng_c.metrics.preemptions == 0
@@ -201,16 +204,16 @@ def test_unservable_check_uses_fresh_need():
     a = Request(rid=0,
                 prompt=np.concatenate([sys_prompt, rng.integers(
                     0, cfg.vocab, 4).astype(np.int32)]),
-                adapter="serve", max_new_tokens=24, prefix_id="sys",
+                adapter="serve", max_new_tokens=24,
                 arrival=0.0)
     # raw projection: ceil((72 + 104) / 16) = 11 > 7 usable -> the old gate
-    # FAILED this instantly; with 4 registered blocks shared at ref >= 2 the
-    # fresh need is 7 <= 7 and it must stay queued.  b arrives after a's
-    # prefill has registered "sys" (and well before a finishes).
+    # FAILED this instantly; with 4 hash-published blocks shared at
+    # ref >= 2 the fresh need is 7 <= 7 and it must stay queued.  b arrives
+    # after a's prefill has published the head (well before a finishes).
     b = Request(rid=1,
                 prompt=np.concatenate([sys_prompt, rng.integers(
                     0, cfg.vocab, 8).astype(np.int32)]),
-                adapter="serve", max_new_tokens=104, prefix_id="sys",
+                adapter="serve", max_new_tokens=104,
                 arrival=0.2)
     assert projected_blocks(b.prompt_len, b.max_new_tokens, 16, 176) == 11
     eng.submit(a)
@@ -313,15 +316,15 @@ def test_suffix_drafter_survives_preemption():
     assert eng.metrics.acceptance_rate > 0.9
 
 
-def test_cow_under_lending_spares_registered_prefixes():
+def test_cow_under_lending_spares_index_blocks():
     """With over-admission, free_blocks sits <= 0 while the free list is
     non-empty; a copy-on-write fork must spend a truly free block WITHOUT
-    shedding registered prefixes (they are what makes preemption cheap)."""
+    shedding index-resident blocks (they are what makes preemption cheap)."""
     m = _mgr(capacity=6, n_blocks=12, bs=8, s_max=96, over_admit=2.0)
     prompt = np.arange(17, dtype=np.int32)                # 2 full blocks+tail
-    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="sys")
-    m.register_prefix("sys", s1, prompt)
-    s2, reused = m.try_admit(prompt, max_new=0, prefix_id="sys")
+    s1, _ = m.try_admit(prompt, max_new=0)
+    m.commit_prefill([(0, s1)], [len(prompt)])            # publishes 2
+    s2, reused = m.try_admit(prompt, max_new=0)
     assert reused == 16
     short = np.zeros((8,), np.int32)
     s3, _ = m.try_admit(short, max_new=24)                # 1 held + 3 debt
@@ -329,50 +332,68 @@ def test_cow_under_lending_spares_registered_prefixes():
     assert s3 is not None and s4 is not None
     assert m.grow(s3, 32) >= 32                           # claim lent blocks
     assert m.free_blocks <= 0 < m.allocator.n_free        # lending active
+    assert m.hash_blocks_resident == 2
     new_bid = m.ensure_writable(s2, pos=0)                # CoW the shared blk
     assert new_bid != m.tables[s1][0]
-    assert "sys" in m.prefixes, "CoW shed a prefix it did not need to"
+    assert m.hash_blocks_resident == 2, \
+        "CoW shed index blocks it did not need to"
 
 
-def test_grow_sheds_idle_prefix_before_failing():
-    """A pool-dry grow must shed idle registry prefixes (ref == 1) before
-    signaling growth failure: dropping a registration is free, preempting a
+def test_grow_sheds_idle_index_blocks_before_failing():
+    """A pool-dry grow must shed idle index blocks (ref == 1) before
+    signaling growth failure: dropping a cache entry is free, preempting a
     resident recomputes a whole context."""
     m = _mgr(capacity=6, n_blocks=8, bs=16, over_admit=2.0)   # 7 usable
     prompt = np.arange(17, dtype=np.int32)
-    s1, _ = m.try_admit(prompt, max_new=0, prefix_id="sys")
-    m.register_prefix("sys", s1, prompt)                      # 1 full block
+    s1, _ = m.try_admit(prompt, max_new=0)
+    m.commit_prefill([(0, s1)], [len(prompt)])                # 1 full block
     m.free(s1)                                                # idle: ref 1
     s2, _ = m.try_admit(np.zeros((8,), np.int32), max_new=56)  # 4-block life
     while m.allocator.alloc() is not None:                    # pool dry,
-        pass                                                  # registry idle
-    assert "sys" in m.prefixes
+        pass                                                  # index idle
+    assert m.hash_blocks_resident == 1
     # s2's within-reservation grow finds the free list empty; the idle
-    # "sys" block must be shed and fuel the growth — one block's worth, no
+    # index block must be shed and fuel the growth — one block's worth, no
     # failure signal for it, no engine preemption
     assert m.grow(s2, 64) == 32
-    assert "sys" not in m.prefixes
+    assert m.hash_blocks_resident == 0
 
 
-def test_register_span_excludes_rolled_output():
-    """Re-registering an explicit prefix after preemption (its original
-    registration was shed meanwhile) must publish only the SUBMITTED
-    prompt: rolled-in output is this request's private generation — no
-    sibling matches it, and registering it would strand those blocks in
-    the registry."""
+def test_preempted_request_readopts_its_own_published_blocks():
+    """A preemption victim's published full blocks (prompt AND generated
+    content — content-addressed, so rolled-in output is perfectly valid
+    cache) survive in the index at ref == 1; its re-admission walks the
+    rolled prompt's key chain and adopts them back, so the re-prefill is
+    suffix-only and outputs stay byte-identical."""
     cfg = get_reduced("llama3-8b")
+    clean = _engine(cfg, n_blocks=40)
+    src = _overload_reqs(n=1, prompt_len=20, max_new=24)
+    for r in src:
+        clean.submit(r)
+    clean.run(max_ticks=5000)
+    expect = {r.rid: r.output for r in clean.finished}
+
     eng = _engine(cfg, n_blocks=40)
-    orig = np.arange(40, dtype=np.int32)
-    r = Request(rid=0, prompt=orig.copy(), adapter="serve",
-                max_new_tokens=32, prefix_id="sys")
-    r.output = [7, 8, 9]
-    r.rolled = 3
-    r.prompt = np.concatenate([orig, np.asarray(r.output, np.int32)])
-    np.testing.assert_array_equal(eng._register_span(r), orig)
-    # never-preempted requests still publish their whole prompt
-    clean = Request(rid=1, prompt=orig.copy(), adapter="serve",
-                    max_new_tokens=32, prefix_id="sys")
-    np.testing.assert_array_equal(eng._register_span(clean), orig)
+    reqs = _overload_reqs(n=1, prompt_len=20, max_new=24)
+    eng.submit(reqs[0])
+    hits_before = 0
+    preempted = False
+    for _ in range(2000):
+        eng.tick()
+        # preempt once the victim has committed enough full blocks (bs 16)
+        # for its rolled prompt to have an adoptable head
+        if (not preempted and reqs[0].state is State.DECODE
+                and len(reqs[0].output) >= 16):
+            hits_before = eng.cachemgr.hash_hits
+            eng._preempt(reqs[0].dec_slot)
+            preempted = True
+        if reqs[0].done:
+            break
+    assert preempted
+    # re-admission adopted index-resident blocks instead of recomputing
+    assert eng.cachemgr.hash_hits > hits_before
+    assert eng.metrics.reused_prefix_tokens >= 16
+    assert {r.rid: r.output for r in eng.finished} == expect
 
 
 # ------------------------------------------- block-conservation property
@@ -382,9 +403,8 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
     for t in m.tables.values():
         for b in t:
             held[b] = held.get(b, 0) + 1
-    for _, _, bids in m._prefixes.values():
-        for b in bids:
-            held[b] = held.get(b, 0) + 1
+    for b in m._hashed:                    # the index holds one ref per entry
+        held[b] = held.get(b, 0) + 1
     free = set(a._free)
     assert len(free) == len(a._free), "free list holds duplicates"
     for bid in range(1, a.n_blocks):
@@ -394,6 +414,15 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
             f"free-list drift on block {bid}"
     assert a.n_used == sum(1 for bid in range(1, a.n_blocks)
                            if held.get(bid, 0) > 0)
+    # index integrity: key <-> block is a bijection, no entry names a free
+    # or dead block (de-publish left nothing stale behind)
+    assert len(m._index) == len(m._hashed)
+    for key, bid in m._index.items():
+        assert m._hashed.get(bid) == key, "index/inverse drift"
+        assert int(a.ref[bid]) >= 1 and bid not in free, \
+            f"stale index entry for block {bid}"
+    for slot, chain in m._chains.items():
+        assert len(chain) <= len(m.tables[slot]), "chain outran its table"
     assert m.reserved_debt == sum(m._debt_of(s) for s in m.tables)
     assert m.reserved_debt >= 0
     if over_admit <= 1.0:
@@ -408,44 +437,49 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
                                  min_size=1, max_size=60),
                     over_admit=st.sampled_from([1.0, 1.75]))])
 def test_block_conservation_property(ops, over_admit):
-    """Randomized admit/grow/preempt/truncate/finish/register sequences:
-    refcounts must equal table+registry holds exactly, the free list must
-    mirror ref==0, debt must track per-slot reservations (never spendable),
-    no state slot may leak, and a full drain must return the pool to
-    pristine."""
+    """Randomized admit(+adopt)/commit(publish)/grow/truncate/finish
+    sequences over the content-hash index: refcounts must equal
+    table + index holds exactly, the free list must mirror ref==0, the
+    index must stay a stale-free bijection, debt must track per-slot
+    reservations (never spendable), no state slot may leak, and a full
+    drain + index flush must return the pool to pristine.  Prompts draw
+    from a 3-symbol alphabet so hash chains collide often and adoption /
+    publish-collision paths are actually exercised."""
     m = _mgr(capacity=6, n_blocks=13, s_max=96, bs=8, over_admit=over_admit)
     live: list = []
     rng = np.random.default_rng(0)
     for kind, pick, amount in ops:
-        if kind == 0:                                     # admit
-            prompt = rng.integers(0, 1000, 1 + amount % 40).astype(np.int32)
-            pid = f"p{pick % 3}" if pick % 2 else ""
-            got = m.try_admit(prompt, max_new=amount % 48, prefix_id=pid)
+        if kind == 0:                                     # admit (+ adopt)
+            prompt = rng.integers(0, 3, 1 + amount % 40).astype(np.int32)
+            got = m.try_admit(prompt, max_new=amount % 48)
             if got is not None:
-                live.append((got[0], prompt, pid))
-        elif kind == 1 and live:                          # grow (decode)
-            slot, _, _ = live[pick % len(live)]
+                live.append(got[0])
+        elif kind == 1 and live:                          # decode advance
+            slot = live[pick % len(live)]
             cap = m.grow(slot, int(m.lens[slot]) + 1 + amount % 24)
             assert cap <= m.s_max
-            m.lens[slot] = min(cap, int(m.lens[slot]) + 1 + amount % 24)
+            n = min(cap, int(m.lens[slot]) + 1 + amount % 24) \
+                - m._seq_len[slot]
+            if n > 0:                                     # commit + publish
+                m.commit_tokens(slot, rng.integers(0, 3, n))
         elif kind == 2 and live:                          # truncate (spec)
-            slot, _, _ = live[pick % len(live)]
+            slot = live[pick % len(live)]
             m.truncate(slot, max(int(m.lens[slot]) - amount % 16, 0))
         elif kind == 3 and live:                          # preempt / finish
-            slot, _, _ = live.pop(pick % len(live))
-            m.free(slot)
-        elif kind == 4 and live:                          # register prefix
-            slot, prompt, pid = live[pick % len(live)]
-            if pid:
-                m.register_prefix(pid, slot, prompt)
+            m.free(live.pop(pick % len(live)))
+        elif kind == 4 and live:                          # commit the prompt
+            slot = live[pick % len(live)]
+            n = min(m._seq_len[slot], len(m.tables[slot]) * m.block_size)
+            m.commit_prefill([(0, slot)], [n])
         elif kind == 5 and live:                          # grow to capacity
-            slot, _, _ = live[pick % len(live)]
+            slot = live[pick % len(live)]
             m.grow(slot, m.reserved.get(slot, 1) * m.block_size)
         _check_conservation(m, over_admit)
-    for slot, _, _ in live:                               # drain
+    for slot in live:                                     # drain
         m.free(slot)
     _check_conservation(m, over_admit)
-    while m._prefixes:
-        assert m._drop_oldest_prefix()
+    assert m.pristine                      # leftovers are pure cache...
+    m.flush_index()                        # ...and flushing reclaims all
     assert m.allocator.n_free == m.allocator.usable
     assert m.reserved_debt == 0
+    assert not m._index and not m._hashed

@@ -1,8 +1,8 @@
 """Prefix-aware suffix-only prefill + chunked prefill: kernel vs oracle,
 model-level equivalence (standard attention AND MLA, chunked and unchunked),
-and engine end-to-end — shared-prefix / chunked / auto-registered runs must
-emit byte-identical tokens to full-prompt prefill, with the per-tick prefill
-budget bounding every step."""
+and engine end-to-end — hash-deduped / chunked runs must emit byte-identical
+tokens to full-prompt prefill, with the per-tick prefill budget bounding
+every step."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -165,14 +165,14 @@ def _engine(cfg, seed=0, trainers=0, **kw):
     return eng
 
 
-def _shared_reqs(cfg, n=5, prefix="sys", max_new=6, tail=(4, 12), seed=0):
+def _shared_reqs(cfg, n=5, max_new=6, tail=(4, 12), seed=0):
     sys_prompt = np.arange(32, dtype=np.int32) % cfg.vocab
     rng = np.random.default_rng(seed)
     return [Request(rid=i,
                     prompt=np.concatenate([sys_prompt, rng.integers(
                         0, cfg.vocab, rng.integers(*tail)).astype(np.int32)]),
                     adapter="serve", max_new_tokens=max_new,
-                    prefix_id=prefix, arrival=0.25 * i) for i in range(n)]
+                    arrival=0.25 * i) for i in range(n)]
 
 
 def _run(eng, reqs, max_ticks=8000):
@@ -183,17 +183,19 @@ def _run(eng, reqs, max_ticks=8000):
 
 
 @pytest.mark.parametrize("arch", ["llama3-8b", "deepseek-v2-236b"])
-def test_engine_suffix_prefill_matches_unshared(arch):
-    """Suffix-only prefill over reused registered prefixes emits tokens
-    byte-identical to the no-sharing engine, and actually skips work."""
+def test_engine_suffix_prefill_matches_no_dedup(arch):
+    """Suffix-only prefill over hash-adopted blocks emits tokens
+    byte-identical to the no-dedup engine, and actually skips work — for
+    standard attention AND MLA."""
     cfg = get_reduced(arch)
-    out_plain = _run(_engine(cfg), _shared_reqs(cfg, prefix=""))
+    out_plain = _run(_engine(cfg, hash_dedup=False), _shared_reqs(cfg))
     eng = _engine(cfg)
-    out_shared = _run(eng, _shared_reqs(cfg, prefix="sys"))
+    out_shared = _run(eng, _shared_reqs(cfg))
     assert len(out_shared) == 5
     assert out_shared == out_plain
     m = eng.metrics
-    assert m.reused_prefix_tokens >= 32 * 3   # 2 full blocks x later reqs
+    assert m.reused_prefix_tokens >= 32 * 4   # 2 full blocks x later reqs
+    assert m.hash_hits >= 2 * 4               # adopted from the 2nd sighting
     assert m.starved_ticks == 0
 
 
@@ -224,17 +226,20 @@ def test_engine_spec_over_reused_prefix_with_chunking_matches_greedy():
     assert out == ref
 
 
-def test_engine_auto_prefix_registration():
-    """With auto_prefix on, repeated prompt heads get registered and reused
-    without any caller-side prefix_id — and outputs stay identical."""
+def test_engine_hash_dedup_reuses_repeated_heads():
+    """Content-hash dedup: repeated prompt heads get published and adopted
+    without any caller-side id — from the SECOND sighting (the two-sighting
+    auto_prefix heuristic it subsumes only reused from the third) — and
+    outputs stay identical to the escape-hatch engine."""
     cfg = get_reduced("llama3-8b")
-    reqs = lambda: _shared_reqs(cfg, prefix="", n=6)
-    ref = _run(_engine(cfg), reqs())
-    eng = _engine(cfg, auto_prefix=True, auto_prefix_blocks=2)
+    reqs = lambda: _shared_reqs(cfg, n=6)
+    ref = _run(_engine(cfg, hash_dedup=False), reqs())
+    eng = _engine(cfg)
     out = _run(eng, reqs())
     assert out == ref
-    assert eng.metrics.reused_prefix_tokens >= 32 * 3  # 3rd request onward
-    assert any(p.startswith("auto:") for p in eng.cachemgr.prefixes)
+    assert eng.metrics.reused_prefix_tokens >= 32 * 5  # 2nd request onward
+    assert eng.metrics.hash_hits >= 2 * 5
+    assert eng.metrics.hash_blocks_resident >= 2
 
 
 def test_engine_chunked_prefill_keeps_decode_rows_flowing():
