@@ -23,7 +23,7 @@ TABLES = [
     ("fig4_unified", bench_unified.main, None),
     ("fig5_mutable", bench_mutable.main, None),
     ("fig6_realworld", bench_realworld.main, None),
-    ("kernels_micro", bench_kernels.main, None),
+    ("kernels_micro", bench_kernels.main, "BENCH_kernels.json"),
     ("roofline_table", bench_roofline.main, None),
     ("paged_cache", bench_paged.main, "BENCH_paged.json"),
     ("spec_decode", bench_spec.main, "BENCH_spec.json"),

@@ -14,6 +14,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import table_version
 from repro.models.configs import ModelConfig
 from repro.models.model import _paged_kernel_mode, unified_forward
 from repro.models.stream import ModelOut, UnifiedBatch
@@ -55,10 +56,13 @@ def make_forward_step(cfg: ModelConfig, *, remat: bool = False,
                       jit: bool = True, _jit_now: bool = False) -> Callable:
     """Inference-only unified step (serve/prefill/decode/eval)."""
     if jit:
-        # the paged-attention backend flag is read at trace time inside the
-        # forward — key the cache on it so flag flips don't hit stale steps
+        # the paged-attention backend flag AND the autotune table version
+        # are read at trace time inside the forward — key the cache on both
+        # so flag flips / tuning-table loads don't hit stale steps that
+        # baked in the old kernel choice
         return _cached("fwd", (cfg, remat, attn_chunk, donate_cache,
-                               return_ft_logits, _paged_kernel_mode()),
+                               return_ft_logits, _paged_kernel_mode(),
+                               table_version()),
                        lambda: make_forward_step(
                            cfg, remat=remat, attn_chunk=attn_chunk,
                            donate_cache=donate_cache,
@@ -81,7 +85,8 @@ def make_grad_step(cfg: ModelConfig, *, remat: bool = False,
                    attn_chunk: int = 0) -> Callable:
     """Unified step with gradients w.r.t. the LoRA bank (no update) — used by
     the engine's accumulation loop."""
-    key = ("grad", cfg, remat, attn_chunk, _paged_kernel_mode())
+    key = ("grad", cfg, remat, attn_chunk, _paged_kernel_mode(),
+           table_version())
     if key in _STEP_CACHE:
         return _STEP_CACHE[key]
 

@@ -43,6 +43,19 @@ def main():
                     help="disable content-hash KV block dedup (and the "
                          "prefix-aware admission that rides on it): every "
                          "request recomputes and re-stores its whole prompt")
+    ap.add_argument("--paged-attn-kernel", default=None,
+                    choices=["off", "interpret", "tpu", "splitk",
+                             "splitk-interpret"],
+                    help="paged attention backend (sets "
+                         "REPRO_PAGED_ATTN_KERNEL): off = jnp gather view; "
+                         "interpret/tpu = sequential Pallas kernels; "
+                         "splitk[-interpret] = flash-decoding split-K "
+                         "decode/verify with autotuned fan-out")
+    ap.add_argument("--attn-tune-file", default=None, metavar="PATH",
+                    help="JSON tuning table for the paged-attention kernel "
+                         "family (written by benchmarks/bench_kernels.py); "
+                         "shapes it misses fall back to the deterministic "
+                         "heuristic")
     ap.add_argument("--over-admit", type=float, default=1.0, metavar="F",
                     help="KV reservation lending factor >= 1.0: the gate "
                          "charges only 1/F of outstanding reservation debt "
@@ -50,6 +63,15 @@ def main():
                          "(1.0 = conservative gate)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.paged_attn_kernel is not None:
+        import os
+        os.environ["REPRO_PAGED_ATTN_KERNEL"] = (
+            "" if args.paged_attn_kernel == "off" else args.paged_attn_kernel)
+    if args.attn_tune_file:
+        from repro.kernels.autotune import load_table
+        n = load_table(args.attn_tune_file)
+        print(f"attn autotune: loaded {n} entries from {args.attn_tune_file}")
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     from repro.models.schema import init_params

@@ -295,15 +295,33 @@ def _paged_chunk_mask(tables: jax.Array, block_size: int, pos: jax.Array,
     return k_pos, k_valid
 
 
+# recognized REPRO_PAGED_ATTN_KERNEL values (after lowercasing); "1" is a
+# legacy alias normalized to "tpu" so step-cache keys stay canonical
+_KERNEL_OFF = ("", "0", "off", "false")
+_KERNEL_MODES = ("interpret", "tpu", "splitk", "splitk-interpret")
+
+
 def _paged_kernel_mode() -> str:
-    """Paged decode-attention backend flag (ROADMAP item): empty = jnp
-    gather view (interpret-mode reference, the CPU default); ``interpret`` =
-    Pallas kernel in interpret mode (CI-testable); anything else (``1`` /
-    ``tpu``) = compiled Pallas kernel (real-TPU path).  Read at trace time —
-    step builders key their compile cache on it."""
+    """Paged attention backend flag (ROADMAP item): empty = jnp gather view
+    (the CPU default); ``interpret`` = sequential Pallas kernels in
+    interpret mode (CI-testable); ``tpu`` (or ``1``) = compiled sequential
+    kernels (real-TPU path); ``splitk`` / ``splitk-interpret`` = the
+    flash-decoding split-K decode/verify kernels (``kernels.splitk``) with
+    per-shape ``kernels.autotune`` tile/split selection.  Anything else is
+    a loud error — a typo must not silently select the compiled-TPU path.
+    Read at trace time — step builders key their compile cache on it."""
     import os
     v = os.environ.get("REPRO_PAGED_ATTN_KERNEL", "").strip().lower()
-    return "" if v in ("", "0", "off", "false") else v
+    if v in _KERNEL_OFF:
+        return ""
+    if v == "1":
+        return "tpu"
+    if v not in _KERNEL_MODES:
+        raise ValueError(
+            f"REPRO_PAGED_ATTN_KERNEL={v!r} is not a recognized paged "
+            f"attention kernel mode; expected one of "
+            f"{('off',) + _KERNEL_MODES} (or '1' as an alias for 'tpu')")
+    return v
 
 
 def _dec_cache_pos(pos: jax.Array, sc: int) -> Tuple[jax.Array, jax.Array]:
@@ -373,7 +391,8 @@ def _attn_apply(cfg: ModelConfig, pos_idx: int, p: Dict, lr: Dict,
                         paged_prefill_attention
                     outs[1] = paged_prefill_attention(
                         qh, ck, cv, plan.pf_tables, plan.pf_cached,
-                        plan.pf.length, interpret=(mode == "interpret"))
+                        plan.pf.length,
+                        interpret=mode.endswith("interpret"))
                 else:
                     k_pos, k_valid = _paged_chunk_mask(
                         plan.pf_tables, ck.shape[1], plan.pf_cached,
@@ -417,14 +436,44 @@ def _attn_apply(cfg: ModelConfig, pos_idx: int, p: Dict, lr: Dict,
                                         plan.dec_pos, plan.dec_len)
                 new_cache["k"], new_cache["v"] = ck, cv
                 mode = _paged_kernel_mode()
-                if mode and Sd == 1:
-                    # real-TPU path: block tables walked by the DMA engine
-                    from repro.kernels.decode_attn import \
-                        paged_decode_attention
-                    o = paged_decode_attention(
-                        qh[:, 0], ck, cv, plan.dec_tables, plan.dec_pos,
-                        interpret=(mode == "interpret"))
-                    outs[2] = o[:, None]
+                if mode:
+                    # real-TPU path: block tables walked by the DMA engine.
+                    # splitk modes partition the walk across grid cells and
+                    # LSE-merge the partials (flash decoding); the autotune
+                    # table/heuristic picks the fan-out per shape at trace
+                    # time.
+                    interp = mode.endswith("interpret")
+                    if mode.startswith("splitk"):
+                        from repro.kernels.autotune import choose
+                        from repro.kernels.splitk import (
+                            paged_decode_attention_splitk,
+                            paged_verify_attention_splitk)
+                        kc = choose(hd, ck.shape[1],
+                                    plan.dec_tables.shape[1], plan.Bd * h)
+                        if Sd == 1:
+                            o = paged_decode_attention_splitk(
+                                qh[:, 0], ck, cv, plan.dec_tables,
+                                plan.dec_pos, num_splits=kc.num_splits,
+                                interpret=interp)
+                            outs[2] = o[:, None]
+                        else:
+                            outs[2] = paged_verify_attention_splitk(
+                                qh, ck, cv, plan.dec_tables, plan.dec_pos,
+                                plan.dec_len, num_splits=kc.num_splits,
+                                interpret=interp)
+                    elif Sd == 1:
+                        from repro.kernels.decode_attn import \
+                            paged_decode_attention
+                        o = paged_decode_attention(
+                            qh[:, 0], ck, cv, plan.dec_tables, plan.dec_pos,
+                            interpret=interp)
+                        outs[2] = o[:, None]
+                    else:
+                        from repro.kernels.decode_attn import \
+                            paged_verify_attention
+                        outs[2] = paged_verify_attention(
+                            qh, ck, cv, plan.dec_tables, plan.dec_pos,
+                            plan.dec_len, interpret=interp)
                 else:
                     k_pos, k_valid = _paged_chunk_mask(
                         plan.dec_tables, ck.shape[1], plan.dec_pos,

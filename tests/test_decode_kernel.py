@@ -169,6 +169,45 @@ def test_model_decode_bucket_kernel_flag(monkeypatch):
     np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
 
 
+def test_model_verify_bucket_kernel_flag(monkeypatch):
+    """REPRO_PAGED_ATTN_KERNEL must also drive the VERIFY bucket (multi-token
+    chunks) through kernels.decode_attn — previously only prefill and
+    one-token decode dispatched to Pallas and verify silently fell back to
+    the jnp gather view.  Valid rows only: padding slots are never read."""
+    from repro.configs import get_reduced
+    from repro.models.model import init_paged_cache, unified_forward
+    from repro.models.schema import init_params
+    from repro.models.stream import DECBatch, PFBatch, UnifiedBatch
+
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S, k = 2, 10, 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + k + 1), 0,
+                              cfg.vocab)
+    base = jnp.full((B,), -1)
+    tbl = jnp.asarray(np.array([[3, 1, 7, 5], [2, 6, 4, 8]], np.int32))
+    lens = np.array([k + 1, k])
+
+    def drive():
+        cache = init_paged_cache(cfg, 9, 8, B)
+        pf = PFBatch(tokens=toks[:, :S], length=jnp.full((B,), S),
+                     adapter=base, block_tables=tbl)
+        cache = unified_forward(cfg, params, UnifiedBatch(pf=pf),
+                                cache=cache).cache
+        dec = DECBatch(tokens=toks[:, S:S + k + 1], pos=jnp.full((B,), S),
+                       adapter=base, block_tables=tbl,
+                       length=jnp.asarray(lens, jnp.int32))
+        return np.asarray(unified_forward(cfg, params, UnifiedBatch(dec=dec),
+                                          cache=cache).dec_logits)
+
+    monkeypatch.delenv("REPRO_PAGED_ATTN_KERNEL", raising=False)
+    ref = drive()
+    monkeypatch.setenv("REPRO_PAGED_ATTN_KERNEL", "interpret")
+    got = drive()
+    valid = lens[:, None] > np.arange(k + 1)[None, :]
+    np.testing.assert_allclose(got[valid], ref[valid], rtol=2e-4, atol=2e-4)
+
+
 def test_paged_kernel_matches_dense_kernel():
     """The paged path and the dense path are the same attention: materialize
     each request's blocks contiguously and the dense kernel must agree."""
