@@ -1,0 +1,208 @@
+"""Fleet serving benchmark: affinity routing + fleet-wide block index vs
+locality-blind replication.
+
+A Zipf-popular multi-adapter template trace (T templates, each its own
+adapter + hot head, per-request random tail; one seeder per template
+publishes its head, then the remaining requests arrive as one burst) over
+THREE fleet arms at EQUAL TOTAL HBM (identical per-replica pools, same
+replica count) plus a single-engine exactness reference:
+
+* ``round_robin``   — independent replicas, local dedup only (no fleet
+  index traffic): the locality-blind baseline.  Every replica recomputes
+  every template head it meets.
+* ``affinity``      — prefix/adapter-affinity routing + remote block fetch:
+  hot-template requests land where the head lives; overflow spills to cold
+  replicas (the router's load penalty is unbounded) which FETCH the head
+  over the modeled interconnect instead of recomputing it.
+* ``rr_fetch``      — round-robin WITH remote fetch: isolates the fleet
+  index from routing.  Placement is forced off-template, so every
+  first-encounter of a (replica, template) pair whose head is published
+  elsewhere must fetch — the analytically-expected fetch count, which the
+  measured count is gated against (``fetch_hit_rate``).
+
+Byte-exactness of every arm against the single engine is asserted FIRST
+(remote fetch copies published CoW-immutable K/V; replicas share base
+weights by reference and carry identically-loaded adapters), then the
+headline: fleet prompt tokens/s, gated >= 1.3x over round_robin.
+
+Emits ``BENCH_fleet.json`` for the run.py harness / CI gate (gate.py +
+gates.json).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import build_model, csv
+from repro.fleet import FleetConfig, RouterConfig, build_fleet
+from repro.serving.clock import CostModel
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.request import Request
+
+COST = CostModel(fixed=1e-3, prefill_per_tok=1e-4)   # prefill-bound regime
+REPLICAS = 3
+TEMPLATES = 3
+HEAD = 832                                  # 26 blocks of 32
+PROMPT = 1024
+BLOCK = 32
+N_REQUESTS = 18
+ZIPF_S = 1.1
+BURST_AT = 0.2                              # seeders publish, then the flood
+# burst-tuned router: with the whole flood queued at once, a stronger load
+# penalty lets hot-template pressure spill to cold replicas (which then
+# remote-fetch the head instead of recomputing it)
+LOAD_PENALTY = 0.25
+
+
+def _trace(vocab: int, seed: int = 0):
+    """Seeder per template (sequenced so each head is published before the
+    burst), then Zipf-drawn template picks arriving at once.  Returns the
+    requests and the rid-ordered template assignment."""
+    rng = np.random.default_rng(seed)
+    heads = [rng.integers(0, vocab, HEAD).astype(np.int32)
+             for _ in range(TEMPLATES)]
+    w = 1.0 / np.arange(1, TEMPLATES + 1) ** ZIPF_S
+    picks = rng.choice(TEMPLATES, size=N_REQUESTS - TEMPLATES, p=w / w.sum())
+    templates = list(range(TEMPLATES)) + picks.tolist()
+    reqs = []
+    for rid, t in enumerate(templates):
+        tail = rng.integers(0, vocab, PROMPT - HEAD).astype(np.int32)
+        # seeders all arrive at t=0: dispatched back-to-back before any
+        # engine ticks, the depth penalty spreads them one per replica, so
+        # each template's head is published on its own engine
+        arrival = 0.0 if rid < TEMPLATES else BURST_AT
+        reqs.append(Request(rid=rid, prompt=np.concatenate([heads[t], tail]),
+                            adapter=f"lora{t}", max_new_tokens=1,
+                            arrival=arrival))
+    return reqs, templates
+
+
+def _ecfg():
+    return EngineConfig(capacity=6, pf_capacity=4, s_max=PROMPT + BLOCK,
+                        block_size=BLOCK, virtual_time=True, cost=COST)
+
+
+def _outputs(finished):
+    return {r.rid: list(r.output) for r in finished}
+
+
+def _run_single(model, vocab, seed):
+    eng = UnifiedEngine(model, _ecfg())
+    reqs, _ = _trace(vocab, seed)
+    for r in reqs:
+        eng.submit(r)
+    eng.run(max_ticks=200000)
+    assert len(eng.finished) == N_REQUESTS
+    return _outputs(eng.finished)
+
+
+def _run_fleet(vocab, seed, policy, remote_fetch):
+    model = build_model(n_adapters=TEMPLATES)
+    fleet = build_fleet(model, _ecfg(), FleetConfig(
+        replicas=REPLICAS,
+        router=RouterConfig(policy=policy, load_penalty=LOAD_PENALTY),
+        remote_fetch=remote_fetch))
+    reqs, _ = _trace(vocab, seed)
+    for r in reqs:
+        fleet.submit(r)
+    fm = fleet.run(max_ticks=200000)
+    fleet.index.check_bijection()           # zero stale entries, ever
+    finished = [r for e in fleet.engines for r in e.finished]
+    assert len(finished) == N_REQUESTS
+    prompt_tok = fm.prefill_tokens + fm.reused_prefix_tokens
+    return {"prompt_tokens": int(prompt_tok),
+            "computed_tokens": int(fm.prefill_tokens),
+            "reused_tokens": int(fm.reused_prefix_tokens),
+            "hash_hits": int(fm.hash_hits),
+            "remote_fetch_blocks": int(fm.remote_fetch_blocks),
+            "remote_fetch_time": float(fm.remote_fetch_time),
+            "elapsed_virtual": float(fm.elapsed),
+            "PTPS": prompt_tok / max(fm.elapsed, 1e-9),
+            "steps": int(fm.steps),
+            "routed": {str(k): int(v) for k, v in fleet.routed.items()},
+            "leak_free": bool(all(e.cachemgr.pristine
+                                  for e in fleet.engines)),
+            "pool_blocks_per_replica": int(
+                fleet.engines[0].cachemgr.total_blocks),
+            "outputs": _outputs(finished)}
+
+
+def _expected_rr_fetches(templates) -> int:
+    """Analytic fetch count for round-robin + fetch: the first time each
+    replica meets a template whose head was published (by an earlier rid,
+    anywhere) it imports all adoptable head blocks; later encounters adopt
+    locally.  The chain cap never binds (the tail keeps >= 1 token
+    computable past the 26 head blocks)."""
+    head_blocks = HEAD // BLOCK
+    seen_global, seen_replica = set(), [set() for _ in range(REPLICAS)]
+    expected = 0
+    for rid, t in enumerate(templates):
+        rep = rid % REPLICAS
+        if t in seen_global and t not in seen_replica[rep]:
+            expected += head_blocks
+        seen_global.add(t)
+        seen_replica[rep].add(t)
+    return expected
+
+
+def _strip(d):
+    return {k: v for k, v in d.items() if k != "outputs"}
+
+
+def main(seed: int = 0):
+    model = build_model(n_adapters=TEMPLATES)
+    vocab = model.cfg.vocab
+    reqs, templates = _trace(vocab, seed)
+    del reqs
+
+    ref = _run_single(model, vocab, seed)
+    rr = _run_fleet(vocab, seed, "round-robin", remote_fetch=False)
+    af = _run_fleet(vocab, seed, "affinity", remote_fetch=True)
+    rrf = _run_fleet(vocab, seed, "round-robin", remote_fetch=True)
+
+    # exactness before any throughput claim: replica placement, remote
+    # fetch, and router policy must all be invisible in the bytes
+    for name, arm in (("round_robin", rr), ("affinity", af),
+                      ("rr_fetch", rrf)):
+        assert arm["outputs"] == ref, f"{name} broke byte-exactness"
+    assert rr["remote_fetch_blocks"] == 0          # fetch disabled
+    assert af["remote_fetch_blocks"] > 0           # spillover fetched
+    equal_hbm = (rr["pool_blocks_per_replica"]
+                 == af["pool_blocks_per_replica"]
+                 == rrf["pool_blocks_per_replica"])
+
+    speedup = af["PTPS"] / max(rr["PTPS"], 1e-9)
+    expected = _expected_rr_fetches(templates)
+    fetch_hit_rate = rrf["remote_fetch_blocks"] / max(expected, 1)
+
+    csv("fleet/round_robin", 0.0, f"PTPS={rr['PTPS']:.0f};"
+        f"computed={rr['computed_tokens']};steps={rr['steps']}")
+    csv("fleet/affinity", 0.0, f"PTPS={af['PTPS']:.0f};"
+        f"computed={af['computed_tokens']};"
+        f"fetched={af['remote_fetch_blocks']};speedup={speedup:.2f}")
+    csv("fleet/rr_fetch", 0.0, f"PTPS={rrf['PTPS']:.0f};"
+        f"fetched={rrf['remote_fetch_blocks']};"
+        f"expected={expected};hit_rate={fetch_hit_rate:.2f}")
+
+    out = {"exact": True, "speedup": float(speedup),
+           "fetch_hit_rate": float(fetch_hit_rate),
+           "expected_rr_fetches": int(expected),
+           "arms_leak_free": bool(rr["leak_free"] and af["leak_free"]
+                                  and rrf["leak_free"]),
+           "equal_hbm": bool(equal_hbm),
+           "replicas": REPLICAS, "block_size": BLOCK,
+           "workload": {"n_requests": N_REQUESTS, "templates": TEMPLATES,
+                        "zipf_s": ZIPF_S, "prompt": PROMPT, "head": HEAD,
+                        "kind": "zipf-multi-adapter-templates"},
+           "round_robin": _strip(rr), "affinity": _strip(af),
+           "rr_fetch": _strip(rrf)}
+    with open("BENCH_fleet.json", "w") as f:
+        json.dump(out, f, indent=2)
+    csv("fleet/summary", 0.0, f"speedup={speedup:.2f};"
+        f"fetch_hit_rate={fetch_hit_rate:.2f};exact=True")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(main(), indent=2))

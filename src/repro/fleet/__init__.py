@@ -1,0 +1,9 @@
+"""In-process multi-replica serving: fleet index, router, fabric."""
+from repro.fleet.fabric import (FleetConfig, FleetFabric, FleetMetrics,
+                                build_fleet, replicate_model)
+from repro.fleet.index import FleetIndex
+from repro.fleet.router import POLICIES, Router, RouterConfig
+
+__all__ = ["FleetConfig", "FleetFabric", "FleetMetrics", "FleetIndex",
+           "POLICIES", "Router", "RouterConfig", "build_fleet",
+           "replicate_model"]

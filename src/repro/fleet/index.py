@@ -1,0 +1,120 @@
+"""FleetIndex — the fleet-wide content-hash block index.
+
+One location-transparent map ``block_key -> {engine_id: block_id}`` over
+every replica's local dedup index (``PagedCacheManager._index``).  It is
+fed by the managers' publication lifecycle hooks (``on_publish`` /
+``on_depublish``), which fire on EVERY local index mutation — publication
+at prefill/decode commit, remote import, and retraction from ``_shed_one``
+(the single local removal path; CoW and truncate never invalidate local
+entries because published payloads are copy-on-write-immutable).  The
+fleet view is therefore exactly as fresh as the local indexes: an entry
+``(key, engine, block)`` exists iff that engine's local index holds that
+block under that key, so a fleet lookup can never name a dead, rewritten,
+or shed block.
+
+A prompt whose prefix is resident ANYWHERE in the fleet can then fetch the
+payload blocks into its local pool (``PagedCacheManager.import_block``, a
+cross-pool block copy charged at the modeled interconnect cost) instead of
+recomputing them — PR 5's content-addressed blocks made location
+transparency structural: the key IS the content, so a copy from any holder
+is bit-identical to local recompute of published state.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.kvcache import PagedCacheManager
+
+
+class FleetIndex:
+    """``block_key -> {engine_id: block_id}`` across attached managers."""
+
+    def __init__(self):
+        self._where: Dict[str, Dict[int, int]] = {}
+        self._mgrs: Dict[int, PagedCacheManager] = {}
+
+    def attach(self, engine_id: int, mgr: PagedCacheManager) -> None:
+        """Subscribe to ``mgr``'s publication lifecycle and ingest whatever
+        its local index already holds (attach-after-warmup is legal)."""
+        if engine_id in self._mgrs:
+            raise ValueError(f"engine {engine_id} already attached")
+        if mgr.on_publish is not None or mgr.on_depublish is not None:
+            raise ValueError("manager already feeds another fleet index")
+        self._mgrs[engine_id] = mgr
+        mgr.on_publish = lambda key, bid: self._publish(engine_id, key, bid)
+        mgr.on_depublish = lambda key, bid: self._retract(engine_id, key,
+                                                          bid)
+        for key, bid in mgr._index.items():
+            self._publish(engine_id, key, bid)
+
+    # -- lifecycle events (hook targets) ------------------------------------
+    def _publish(self, engine_id: int, key: str, bid: int) -> None:
+        self._where.setdefault(key, {})[engine_id] = bid
+
+    def _retract(self, engine_id: int, key: str, bid: int) -> None:
+        holders = self._where.get(key)
+        if holders is None or holders.get(engine_id) != bid:
+            raise RuntimeError(     # a retraction we never saw published
+                f"fleet index drift: retract of unknown ({key!r:.12}, "
+                f"engine {engine_id}, block {bid})")
+        del holders[engine_id]
+        if not holders:
+            del self._where[key]
+
+    # -- queries -------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._where)
+
+    @property
+    def entries(self) -> int:
+        """Total (key, engine) pairs — one key replicated on two engines
+        counts twice."""
+        return sum(len(h) for h in self._where.values())
+
+    def holders(self, key: str) -> List[Tuple[int, int]]:
+        """Every ``(engine_id, block_id)`` holding ``key``'s payload."""
+        return sorted(self._where.get(key, {}).items())
+
+    def locate(self, key: str, prefer: Optional[int] = None
+               ) -> Optional[Tuple[int, int]]:
+        """One holder of ``key`` (``prefer``'s copy when it has one, else
+        the lowest engine id for determinism), or None."""
+        holders = self._where.get(key)
+        if not holders:
+            return None
+        if prefer is not None and prefer in holders:
+            return prefer, holders[prefer]
+        eid = min(holders)
+        return eid, holders[eid]
+
+    def resident_run(self, keys: Sequence[str]) -> int:
+        """Longest leading run of ``keys`` resident ANYWHERE in the fleet —
+        the fleet generalization of ``PagedCacheManager._resident_run``.
+        The walk stops at the first gap: a resident child behind a missing
+        parent is unreachable (its chained key pins the parent's content,
+        which would have to be recomputed anyway)."""
+        n = 0
+        for k in keys:
+            if k not in self._where:
+                break
+            n += 1
+        return n
+
+    # -- integrity (tests / benches) -----------------------------------------
+    def check_bijection(self) -> None:
+        """Every fleet entry must resolve to a live local index entry and
+        vice versa — the no-stale-entries invariant the hypothesis fleet
+        conservation property gates on."""
+        for key, holders in self._where.items():
+            for eid, bid in holders.items():
+                mgr = self._mgrs[eid]
+                if mgr._index.get(key) != bid:
+                    raise AssertionError(
+                        f"fleet entry ({key!r:.12}, engine {eid}, block "
+                        f"{bid}) has no live local index entry")
+        for eid, mgr in self._mgrs.items():
+            for key, bid in mgr._index.items():
+                if self._where.get(key, {}).get(eid) != bid:
+                    raise AssertionError(
+                        f"local index entry ({key!r:.12}, engine {eid}, "
+                        f"block {bid}) missing from the fleet index")

@@ -14,7 +14,8 @@ B * n_heads`` is the batch-parallelism the grid already has:
   and cold starts never depend on a tuning run having happened.
 
 The occupancy model: a device runs ``lanes`` grid cells concurrently
-(GPU SMs / TPU megacore+DMA pipelining; calibrate per device).  The
+(GPU SMs / TPU megacore+DMA pipelining; calibrate per device with the
+``REPRO_ATTN_LANES`` env var — validated, garbage fails loudly).  The
 sequential walk costs ``ceil(bh / lanes) * nbt`` block-tile visits; a
 ``ns``-way split costs ``ceil(bh * ns / lanes) * ceil(nbt / ns)`` plus a
 small LSE-merge epilogue.  Splitting wins exactly when ``bh`` alone cannot
@@ -32,8 +33,10 @@ import json
 import os
 from typing import Callable, Dict, Iterable, NamedTuple, Optional, Tuple
 
-# modeled concurrent grid cells; the sweep can override per device
+# modeled concurrent grid cells (default); calibrate per device with the
+# REPRO_ATTN_LANES env override — see effective_lanes()
 LANES = 16
+ENV_LANES = "REPRO_ATTN_LANES"
 SPLIT_CANDIDATES = (1, 2, 4, 8, 16)
 # below this many blocks per split the per-split fixed costs (q load, merge
 # traffic) dominate — don't shard a walk that short
@@ -65,6 +68,28 @@ def table_version() -> int:
     return _VERSION
 
 
+def effective_lanes() -> int:
+    """The occupancy model's concurrent-grid-cell count: the
+    ``REPRO_ATTN_LANES`` env override when set (per-device calibration
+    without editing source — a TPU v5e megacore pipelines differently from
+    an H100's SM count), else the ``LANES`` default.  Garbage values fail
+    LOUDLY: a typo silently falling back to 16 would bake the wrong
+    fan-outs into every heuristic choice on that host."""
+    raw = os.environ.get(ENV_LANES, "").strip()
+    if not raw:
+        return LANES
+    try:
+        lanes = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{ENV_LANES}={raw!r} is not an integer; set the modeled "
+            f"concurrent grid-cell count (e.g. 16), or unset it for the "
+            f"default {LANES}") from None
+    if lanes < 1:
+        raise ValueError(f"{ENV_LANES}={raw!r} must be >= 1")
+    return lanes
+
+
 def put_config(key: ShapeKey, cfg: AttnConfig) -> None:
     global _VERSION
     _TABLE[tuple(int(k) for k in key)] = AttnConfig(int(cfg[0]), int(cfg[1]))
@@ -82,10 +107,11 @@ def get_config(key: ShapeKey) -> Optional[AttnConfig]:
 
 
 def modeled_grid_time(bh: int, nbt: int, num_splits: int,
-                      lanes: int = LANES) -> float:
+                      lanes: Optional[int] = None) -> float:
     """Occupancy-model cost (in block-tile visits) of one attention launch:
     waves of ``lanes`` concurrent cells, each cell walking its share of the
     table, plus the LSE-merge epilogue when split."""
+    lanes = effective_lanes() if lanes is None else lanes
     ns = max(1, int(num_splits))
     npb = -(-nbt // ns)
     waves = -(-bh * ns // lanes)
@@ -108,9 +134,12 @@ def default_block_k(head_dim: int) -> int:
 
 
 def heuristic(head_dim: int, block_size: int, nbt: int, bh: int,
-              lanes: int = LANES) -> AttnConfig:
+              lanes: Optional[int] = None) -> AttnConfig:
     """Deterministic fallback: minimize the occupancy model over the
-    candidate splits (ties -> fewer splits, less merge traffic)."""
+    candidate splits (ties -> fewer splits, less merge traffic).  ``lanes``
+    defaults to ``effective_lanes()`` — the REPRO_ATTN_LANES per-device
+    calibration reaches every heuristic choice through here."""
+    lanes = effective_lanes() if lanes is None else lanes
     best, best_t = 1, modeled_grid_time(bh, nbt, 1, lanes)
     for ns in candidate_splits(nbt):
         t = modeled_grid_time(bh, nbt, ns, lanes)
@@ -142,7 +171,7 @@ def _maybe_load_env() -> None:
 
 def save_table(path: str) -> int:
     """Write the in-memory table as JSON; returns the entry count."""
-    doc = {"lanes": LANES,
+    doc = {"lanes": effective_lanes(),
            "entries": {",".join(str(k) for k in key): list(cfg)
                        for key, cfg in sorted(_TABLE.items())}}
     with open(path, "w") as f:
@@ -171,12 +200,13 @@ def load_table(path: str) -> int:
 
 def sweep(shapes: Iterable[ShapeKey],
           measure: Optional[Callable[[ShapeKey, AttnConfig], float]] = None,
-          lanes: int = LANES) -> Dict[ShapeKey, AttnConfig]:
+          lanes: Optional[int] = None) -> Dict[ShapeKey, AttnConfig]:
     """Populate the table for ``shapes``: score every candidate split with
     ``measure((hd, bs, nbt, bh), cfg) -> seconds`` (wall-clock on a real
     TPU) or, when None, with the occupancy model (interpret/CPU mode, where
     grid parallelism is not observable).  Deterministic given its inputs;
     returns the chosen configs (also stored via ``put_config``)."""
+    lanes = effective_lanes() if lanes is None else lanes
     chosen: Dict[ShapeKey, AttnConfig] = {}
     for key in shapes:
         hd, bs, nbt, bh = (int(k) for k in key)

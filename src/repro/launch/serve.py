@@ -61,6 +61,20 @@ def main():
                          "charges only 1/F of outstanding reservation debt "
                          "and preempts (recompute) when lending comes due "
                          "(1.0 = conservative gate)")
+    ap.add_argument("--replicas", type=int, default=1, metavar="N",
+                    help="in-process engine replicas behind one router "
+                         "(shared base weights, per-replica KV pools and "
+                         "adapter banks, fleet-wide block index with "
+                         "remote prefix fetch); 1 = single engine")
+    ap.add_argument("--router", default="affinity",
+                    choices=["affinity", "round-robin", "least-loaded"],
+                    help="replica placement policy (--replicas > 1): "
+                         "affinity scores resident prefix + adapter "
+                         "residency against queue depth; the others are "
+                         "locality-blind baselines")
+    ap.add_argument("--no-remote-fetch", action="store_true",
+                    help="never copy prefix blocks between replica pools "
+                         "(independent replicas with local dedup only)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -88,12 +102,22 @@ def main():
     if args.spec > 0:
         from repro.spec import SpecConfig
         spec = SpecConfig(k_max=args.spec, drafter="ngram")
-    eng = UnifiedEngine(model, EngineConfig(
+    ecfg = EngineConfig(
         capacity=8, pf_capacity=4, s_max=256,
         virtual_time=not args.wall_clock, spec=spec,
         prefill_chunk=args.prefill_chunk,
         hash_dedup=not args.no_hash_dedup,
-        over_admit=args.over_admit))
+        over_admit=args.over_admit)
+    fleet = None
+    if args.replicas > 1:
+        from repro.fleet import FleetConfig, RouterConfig, build_fleet
+        fleet = build_fleet(model, ecfg, FleetConfig(
+            replicas=args.replicas,
+            router=RouterConfig(policy=args.router),
+            remote_fetch=not args.no_remote_fetch))
+        eng = fleet.engines[0]
+    else:
+        eng = UnifiedEngine(model, ecfg)
     if args.over_admit > 1.0 and not eng.paged:
         print("note: --over-admit needs the paged cache; using the "
               "conservative dense layout for this model")
@@ -117,10 +141,11 @@ def main():
     prompts = datasets.sharegpt_prompts(args.requests, vocab=cfg.vocab,
                                         seed=args.seed)
     arrivals = workload.poisson_arrivals(args.rps, args.requests, args.seed)
+    front = fleet if fleet is not None else eng
     for i, (p, t) in enumerate(zip(prompts, arrivals)):
-        eng.submit(Request(rid=i, prompt=p, adapter=names[i % len(names)],
-                           max_new_tokens=args.max_new, arrival=float(t),
-                           aux_embed=aux))
+        front.submit(Request(rid=i, prompt=p, adapter=names[i % len(names)],
+                             max_new_tokens=args.max_new, arrival=float(t),
+                             aux_embed=aux))
 
     if args.finetune:
         rows = datasets.alpaca_like(32, vocab=cfg.vocab, seed=args.seed)
@@ -130,27 +155,46 @@ def main():
             TrainerConfig(rows_per_micro=2, accum_steps=4, epochs=1),
             aux_embed=aux))
 
-    m = eng.run(max_ticks=500000)
-    att = slo_attainment(eng.finished, SLOConfig())
+    m = front.run(max_ticks=500000)
+    finished = (eng.finished if fleet is None
+                else [r for e in fleet.engines for r in e.finished])
+    att = slo_attainment(finished, SLOConfig())
     print(f"arch={cfg.name} requests={args.requests} rps={args.rps} "
-          f"finished={len(eng.finished)} SLO={att:.3f}")
+          f"finished={len(finished)} SLO={att:.3f}")
     print(f"rates={m.rates()}")
+    if fleet is not None:
+        print(f"fleet: replicas={args.replicas} router={args.router} "
+              f"routed={fleet.routed} "
+              f"remote_fetch_blocks={m.remote_fetch_blocks} "
+              f"remote_fetch_time={m.remote_fetch_time:.4f} "
+              f"fleet_index_keys={len(fleet.index)}")
     if args.spec > 0:
-        print(f"spec: drafted={m.spec_drafted} accepted={m.spec_accepted} "
-              f"acceptance={m.acceptance_rate:.2f} steps={m.steps}")
-    if args.over_admit > 1.0 or m.preemptions:
+        drafted = (m.spec_drafted if fleet is None
+                   else sum(e.spec_drafted for e in m.per_engine))
+        accepted = (m.spec_accepted if fleet is None
+                    else sum(e.spec_accepted for e in m.per_engine))
+        print(f"spec: drafted={drafted} accepted={accepted} "
+              f"acceptance={accepted / max(drafted, 1):.2f} steps={m.steps}")
+    def tot(field, agg=sum):
+        # fleet rollup carries the headline counters; per-engine Metrics
+        # hold the rest — aggregate either way
+        if fleet is not None:
+            return agg(getattr(e, field) for e in m.per_engine)
+        return getattr(m, field)
+
+    if args.over_admit > 1.0 or tot("preemptions"):
         print(f"over-admit: factor={args.over_admit} "
-              f"preemptions={m.preemptions} "
-              f"recomputed={m.preempted_tokens_recomputed} "
-              f"lent_peak={m.lent_blocks_peak}")
+              f"preemptions={tot('preemptions')} "
+              f"recomputed={tot('preempted_tokens_recomputed')} "
+              f"lent_peak={tot('lent_blocks_peak', max)}")
     if m.reused_prefix_tokens or args.prefill_chunk:
         print(f"prefix: reused={m.reused_prefix_tokens} "
               f"computed={m.prefill_tokens} "
-              f"max_pf_step={m.max_pf_tokens_step}")
+              f"max_pf_step={tot('max_pf_tokens_step', max)}")
     if eng.hash_dedup:
         print(f"dedup: hash_hits={m.hash_hits} "
-              f"resident_blocks={m.hash_blocks_resident} "
-              f"probe_admissions={m.probe_admissions}")
+              f"resident_blocks={tot('hash_blocks_resident')} "
+              f"probe_admissions={tot('probe_admissions')}")
     if args.finetune:
         tr = eng.trainers[names[0]]
         print(f"finetune: tokens={tr.tokens_trained} "

@@ -31,11 +31,17 @@ class CostModel:
     """Step latency model: fixed overhead + per-token costs (seconds).
     Defaults emulate an A6000-class device serving an 8B model (paper Fig.2
     scale): ~35 ms fixed step overhead, prefill ~9 us/tok, decode ~1.5
-    ms/tok-row, fine-tune ~28 us/tok (fwd+bwd)."""
+    ms/tok-row, fine-tune ~28 us/tok (fwd+bwd).  ``remote_per_block`` is
+    the modeled interconnect cost of fetching one KV block's payload from a
+    sibling replica's pool (fleet remote fetch) — NVLink/ICI-class D2D copy
+    of a 32-token block across all layers; cheaper than recomputing the
+    block's prefill (32 x ``prefill_per_tok``) at these defaults, which is
+    what makes fetch-over-recompute the default-winning move."""
     fixed: float = 0.035
     prefill_per_tok: float = 9e-6
     decode_per_row: float = 1.5e-3
     ft_per_tok: float = 28e-6
+    remote_per_block: float = 1e-4
 
 
 class VirtualClock:
@@ -53,15 +59,23 @@ class VirtualClock:
         self._t = max(self._t, t)
 
     def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int,
-                  dec_extra_tokens: int = 0) -> float:
+                  dec_extra_tokens: int = 0, remote_blocks: int = 0) -> float:
         """``dec_extra_tokens``: drafted tokens verified alongside the
         row's current token.  Decode is memory-bound — the row already pays
         ``decode_per_row`` for streaming weights + cache once — so extra
         verify queries ride that stream at compute-bound (prefill-like)
-        marginal cost.  That asymmetry is the whole speculation win."""
+        marginal cost.  That asymmetry is the whole speculation win.
+
+        ``remote_blocks``: KV blocks fetched from a sibling replica's pool
+        this step (fleet remote fetch), charged at the modeled interconnect
+        rate.  A pure-fetch step still pays ``fixed`` — the transfer launch
+        is not free — which is what makes the fetch-vs-recompute rule a
+        real per-request decision rather than a per-block tautology."""
         c = self.cost
-        if pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0:
+        if (pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0
+                and remote_blocks == 0):
             return 0.0
         return (c.fixed + c.prefill_per_tok * pf_tokens
                 + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens
-                + c.prefill_per_tok * dec_extra_tokens)
+                + c.prefill_per_tok * dec_extra_tokens
+                + c.remote_per_block * remote_blocks)

@@ -21,7 +21,7 @@ from repro.core.virtualization import MixedLoraModel
 from repro.models.stream import UnifiedBatch
 from repro.serving.clock import CostModel, VirtualClock, WallClock
 from repro.serving.kvcache import (CacheManager, OutOfBlocksError,
-                                   PagedCacheManager)
+                                   PagedCacheManager, request_chain_keys)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.slo import Metrics, SLOConfig, spread_token_times
@@ -161,18 +161,13 @@ class UnifiedEngine:
         """The request's block-key chain for the dedup index, or None when
         the request must not share — modality embeddings make deeper-layer
         K/V depend on aux_embed, which the (adapter, tokens) content
-        identity cannot capture.  Memoized on the request (keyed by prompt
-        length, which only changes when a preemption rolls output tokens
-        into the prompt) so a deep backlog doesn't re-hash every waiting
-        prompt every tick."""
+        identity cannot capture.  The memoization itself lives in
+        ``kvcache.request_chain_keys`` so the fleet router and engine
+        admission hash each prompt ONCE between them, not once per layer
+        that asks."""
         if not self.hash_dedup or r.aux_embed is not None:
             return None
-        memo = getattr(r, "_hash_keys", None)
-        if memo is None or memo[0] != r.prompt_len:
-            memo = (r.prompt_len,
-                    self.cachemgr.chain_keys(r.prompt, r.adapter))
-            r._hash_keys = memo
-        return memo[1]
+        return request_chain_keys(r, self.cachemgr.block_size)
 
     def _resident_tokens(self, r: Request) -> int:
         """Prompt tokens the dedup index would serve without recompute."""
@@ -600,6 +595,7 @@ class UnifiedEngine:
             self.metrics.hash_hits = self.cachemgr.hash_hits
             self.metrics.hash_blocks_resident = \
                 self.cachemgr.hash_blocks_resident
+            self.metrics.remote_fetch_blocks = self.cachemgr.remote_imports
         return True
 
     # ---------------------------------------------- preemption (over-admit)

@@ -67,7 +67,7 @@ import functools
 import hashlib
 import math
 from collections import OrderedDict, deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +103,18 @@ def _copy_block(cache, src: jax.Array, dst: jax.Array):
         {k: (v if k in STATE_KEYS else v.at[:, dst].set(v[:, src]))
          for k, v in d.items()}
         for d in cache["layers"])
+    return {"layers": layers}
+
+
+# cross-pool sibling of _copy_block: fetch one block's K/V payload from
+# ANOTHER manager's pool (the fleet remote-fetch path).  Only the
+# destination is donated — the source pool is read-only here.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_block_from(dst_cache, src_cache, src: jax.Array, dst: jax.Array):
+    layers = tuple(
+        {k: (v if k in STATE_KEYS else v.at[:, dst].set(sd[k][:, src]))
+         for k, v in d.items()}
+        for d, sd in zip(dst_cache["layers"], src_cache["layers"]))
     return {"layers": layers}
 
 
@@ -144,6 +156,39 @@ def block_key(adapter: str, parent: str, tokens: np.ndarray) -> str:
     h.update(b"\x00")
     h.update(np.ascontiguousarray(np.asarray(tokens, np.int64)).tobytes())
     return h.hexdigest()
+
+
+def prompt_chain_keys(prompt: np.ndarray, adapter: str,
+                      block_size: int) -> List[str]:
+    """A prompt's block-key chain: one chained content hash per leading
+    full block, capped so at least ONE prompt token is always left uncached
+    — suffix-only prefill needs a live query to produce the first-token
+    logits, and that token's K/V write must never land in a block the index
+    still owns.  Module-level (manager-independent) so the fleet router can
+    hash prompts without holding any one engine's manager."""
+    p = np.asarray(prompt)
+    keys: List[str] = []
+    parent = ""
+    for i in range(max(len(p) - 1, 0) // block_size):
+        parent = block_key(adapter, parent,
+                           p[i * block_size:(i + 1) * block_size])
+        keys.append(parent)
+    return keys
+
+
+def request_chain_keys(r, block_size: int) -> List[str]:
+    """Per-request memoized chain keys — the ONE place a prompt is hashed,
+    shared by engine admission, the scheduler's residency probe, and the
+    fleet router (each used to hash independently; a deep backlog must not
+    pay O(prompt) sha1 once per layer that asks per tick).  Memo keyed by
+    (prompt length, block size): the prompt only changes when a preemption
+    rolls output tokens into it, which changes its length."""
+    memo = getattr(r, "_hash_keys", None)
+    tag = (r.prompt_len, block_size)
+    if memo is None or memo[0] != tag:
+        memo = (tag, prompt_chain_keys(r.prompt, r.adapter, block_size))
+        r._hash_keys = memo
+    return memo[1]
 
 
 class CacheManager:
@@ -297,6 +342,15 @@ class PagedCacheManager:
         self.hash_dedup = bool(hash_dedup)
         self.lent_blocks_peak = 0
         self.hash_hits = 0                # blocks adopted via the index
+        self.remote_imports = 0           # blocks fetched from sibling pools
+        # fleet wiring: a FleetIndex subscribes to the local index's
+        # publication lifecycle so the fleet-wide key -> (engine, block) map
+        # is exactly as fresh as the local one (an entry exists iff the
+        # local index holds the block — retraction fires from the ONLY
+        # local removal path, _depublish, so the fleet view can never name
+        # a dead or rewritten block)
+        self.on_publish: Optional[Callable[[str, int], None]] = None
+        self.on_depublish: Optional[Callable[[str, int], None]] = None
         self.capacity = capacity          # state rows == max concurrent reqs
         self.pf_capacity = pf_capacity
         self.s_max = s_max
@@ -415,19 +469,8 @@ class PagedCacheManager:
 
     # -- content-hash chain --------------------------------------------------
     def chain_keys(self, prompt: np.ndarray, adapter: str = "") -> List[str]:
-        """The prompt's block-key chain: one chained content hash per
-        leading full block, capped so at least ONE prompt token is always
-        left uncached — suffix-only prefill needs a live query to produce
-        the first-token logits, and that token's K/V write must never land
-        in a block the index still owns."""
-        bs = self.block_size
-        p = np.asarray(prompt)
-        keys: List[str] = []
-        parent = ""
-        for i in range(max(len(p) - 1, 0) // bs):
-            parent = block_key(adapter, parent, p[i * bs:(i + 1) * bs])
-            keys.append(parent)
-        return keys
+        """The prompt's block-key chain (see ``prompt_chain_keys``)."""
+        return prompt_chain_keys(prompt, adapter, self.block_size)
 
     def _resident_run(self, keys: Sequence[str]) -> List[int]:
         """Longest leading run of index-resident blocks for a key chain.
@@ -691,11 +734,15 @@ class PagedCacheManager:
             self._hashed[bid] = key
             self._hits.setdefault(key, 0)
             self.allocator.incref(bid)
+            if self.on_publish is not None:
+                self.on_publish(key, bid)
 
     def _depublish(self, key: str):
         bid = self._index.pop(key)
         del self._hashed[bid]
         self._hits.pop(key, None)
+        if self.on_depublish is not None:
+            self.on_depublish(key, bid)
         self.allocator.decref(bid)
 
     def _shed_one(self, protect: frozenset = frozenset()) -> bool:
@@ -703,7 +750,16 @@ class PagedCacheManager:
         (ref == 1; blocks still held by live tables are not cache, they are
         working state — never sheddable from here).  Preference: zero-hit
         blocks first (publication-order LRU among them), then the lowest
-        adoption count — the blocks whose loss costs the least recompute."""
+        adoption count — the blocks whose loss costs the least recompute.
+
+        Hit-count AGING: every shed scan halves every entry's hit count
+        after the victim is chosen.  Hits are evidence of warmth, and
+        shedding only happens under memory pressure — so each scan is a
+        unit of pressure survived, and a once-hot dead template's counts
+        decay geometrically toward zero while a warm template's are
+        replenished by fresh adoptions.  Without this, a template that was
+        hot last hour pins index-only blocks forever against templates that
+        are hot NOW but younger (ROADMAP tiered-memory follow-on)."""
         best = None
         for k, bid in self._index.items():
             if bid in protect or self.allocator.ref[bid] != 1:
@@ -713,6 +769,10 @@ class PagedCacheManager:
                 best = (score, k)
                 if score == 0:
                     break         # oldest zero-hit entry: cannot do better
+        # decay AFTER selection: this scan judges entries by the hits they
+        # actually earned; only their standing in FUTURE scans erodes
+        for k in self._hits:
+            self._hits[k] >>= 1
         if best is None:
             return False
         self._depublish(best[1])
@@ -726,6 +786,49 @@ class PagedCacheManager:
         while self._shed_one():
             n += 1
         return n
+
+    def import_block(self, key: str, src: "PagedCacheManager",
+                     src_bid: int) -> Optional[int]:
+        """Fetch one content-addressed block from a sibling manager's pool
+        into this one (the fleet remote-fetch path): allocate a local
+        block, copy the K/V payload across pools, and publish it into the
+        LOCAL index under the same key — from then on it is
+        indistinguishable from a locally-computed published block (ref == 1
+        index-only cache: adoptable by ``try_admit``, sheddable under
+        pressure, counted by ``reclaimable_blocks``/``pristine``).
+
+        The key is the content identity, so the copied payload is exactly
+        what local recompute would have produced (published blocks are
+        CoW-immutable at the source).  Import spends only truly spendable
+        capacity — it is a cache fill, never worth a reservation violation
+        or a preemption — shedding idle index entries first and returning
+        None when the pool cannot take the block (the caller falls back to
+        recompute).  Returns the local block id."""
+        if not self.hash_dedup:
+            return None
+        got = self._index.get(key)
+        if got is not None:
+            return got                       # already resident locally
+        while self._index and self.free_blocks <= 0:
+            if not self._shed_one():
+                break
+        if self.free_blocks <= 0:
+            return None
+        bid = self.allocator.alloc()
+        if bid is None:                      # free_blocks > 0 => n_free > 0
+            raise KVAccountingError(
+                "spendable budget positive but the pool has no free block")
+        self.cache = _copy_block_from(self.cache, src.cache,
+                                      jnp.int32(src_bid), jnp.int32(bid))
+        # alloc's ref of 1 IS the index's hold: 0 table holders + 1 index
+        # entry, exactly the accounting of a locally published idle block
+        self._index[key] = bid
+        self._hashed[bid] = key
+        self._hits.setdefault(key, 0)
+        self.remote_imports += 1
+        if self.on_publish is not None:
+            self.on_publish(key, bid)
+        return bid
 
     # -- copy-on-write -------------------------------------------------------
     def ensure_writable(self, slot: int, pos: Optional[int] = None) -> int:

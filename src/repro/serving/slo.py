@@ -80,6 +80,11 @@ class Metrics:
     probe_admissions: int = 0    # admissions reordered ahead of an older
     #                              waiter because their prefix was resident
     #                              (bounded by the scheduler fairness ramp)
+    # fleet remote fetch accounting (multi-engine serving: blocks whose
+    # K/V was copied in from a sibling replica's pool instead of being
+    # recomputed locally — charged at CostModel.remote_per_block)
+    remote_fetch_blocks: int = 0
+    remote_fetch_time: float = 0.0
     # over-admission / preemption accounting.  Preempted requests keep
     # their arrival and t_first_token, so the SLO cost of a preemption is
     # visible as decode latency; these count the mechanism itself.

@@ -1,0 +1,409 @@
+"""Fleet serving: the fleet-wide content-hash index (event-fed, never
+stale), cross-pool block import with the fetch-vs-recompute rule, router
+policies (affinity locality + anti-herding, round-robin, least-loaded),
+N-replica byte-exactness against a single engine, and the fleet-wide
+block-conservation property."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.fleet import (FleetConfig, FleetFabric, FleetIndex, Router,
+                         RouterConfig, build_fleet, replicate_model)
+from repro.models.schema import init_params
+from repro.serving.clock import CostModel, VirtualClock
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import (STATE_KEYS, PagedCacheManager,
+                                   request_chain_keys)
+from repro.serving.request import Request
+from _hyputil import given, hyp as _hyp, settings, st
+from test_preempt import _check_conservation
+
+CFG = get_reduced("llama3-8b")
+LCFG = LoRAConfig(n_slots=4, r=4)
+# prefill-bound regime (same as bench_dedup): per-block recompute costs
+# 16 tokens x 1e-4 s while a remote copy costs fixed 1e-3 + 1e-4 per
+# block, so fetching wins from the second block on
+FETCH_COST = CostModel(fixed=1e-3, prefill_per_tok=1e-4)
+
+
+def _mgr(capacity=4, n_blocks=16, s_max=64, bs=8, **kw):
+    return PagedCacheManager(CFG, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks, **kw)
+
+
+def _publish(m, prompt, adapter="", max_new=4):
+    """Admit + commit + free: leaves the prompt's full blocks index-only."""
+    s, _ = m.try_admit(np.asarray(prompt, np.int32), max_new=max_new,
+                       adapter=adapter)
+    m.commit_prefill([(0, s)], [m._seq_len[s]])
+    m.free(s)
+
+
+# ---------------------------------------------------------------- FleetIndex
+def test_fleet_index_mirrors_publish_and_retract():
+    a, b = _mgr(), _mgr()
+    fi = FleetIndex()
+    fi.attach(0, a)
+    fi.attach(1, b)
+    p = np.arange(20, dtype=np.int32)          # 2 full blocks at bs=8
+    _publish(a, p)
+    keys = a.chain_keys(p)
+    assert len(fi) == 2 and fi.entries == 2
+    for k in keys:
+        assert fi.locate(k) == (0, a._index[k])
+    assert fi.resident_run(keys) == 2
+    _publish(b, p)                             # replicated on both
+    assert len(fi) == 2 and fi.entries == 4
+    assert fi.holders(keys[0]) == [(0, a._index[keys[0]]),
+                                   (1, b._index[keys[0]])]
+    assert fi.locate(keys[0], prefer=1) == (1, b._index[keys[0]])
+    fi.check_bijection()
+    a.flush_index()                            # retraction via _depublish
+    assert fi.entries == 2
+    for k in keys:
+        assert fi.locate(k)[0] == 1
+    b.flush_index()
+    assert len(fi) == 0 and fi.entries == 0
+    fi.check_bijection()
+
+
+def test_fleet_index_attach_ingests_and_guards():
+    a = _mgr()
+    p = np.arange(17, dtype=np.int32)
+    _publish(a, p)
+    fi = FleetIndex()
+    fi.attach(0, a)                            # attach-after-warmup ingests
+    assert len(fi) == 2
+    fi.check_bijection()
+    with pytest.raises(ValueError):
+        fi.attach(0, _mgr())                   # engine id taken
+    with pytest.raises(ValueError):
+        FleetIndex().attach(1, a)              # manager already subscribed
+
+
+def test_fleet_index_stale_free_under_truncate_and_cow_churn():
+    """Decode commits publish, speculative truncate rolls back, CoW
+    rewrites shared blocks — through all of it the fleet view must keep
+    matching the local indexes exactly (the bijection IS the no-stale
+    guarantee: a stale fleet entry would name a key the local index no
+    longer holds)."""
+    m = _mgr(n_blocks=12)
+    fi = FleetIndex()
+    fi.attach(0, m)
+    rng = np.random.default_rng(3)
+    live = []
+    for i in range(8):
+        got = m.try_admit(rng.integers(0, 3, 9 + i).astype(np.int32),
+                          max_new=16)
+        if got is None:
+            continue
+        live.append(got[0])
+        m.commit_prefill([(0, got[0])], [m._seq_len[got[0]]])
+        fi.check_bijection()
+    for s in live:
+        cap = m.grow(s, int(m.lens[s]) + 6)
+        n = min(cap, int(m.lens[s]) + 6) - m._seq_len[s]
+        if n > 0:
+            m.commit_tokens(s, rng.integers(0, 3, n))
+        fi.check_bijection()
+        m.truncate(s, max(int(m.lens[s]) - 3, 0))
+        fi.check_bijection()
+    for s in live:
+        m.free(s)
+    fi.check_bijection()
+    assert m.pristine
+    assert len(fi) == len(m._index)
+
+
+# -------------------------------------------------------------- import_block
+def test_import_block_copies_payload_and_adopts():
+    a, b = _mgr(), _mgr()
+    p = np.arange(20, dtype=np.int32)
+    _publish(a, p)
+    keys = a.chain_keys(p)
+    for k in keys:
+        bid = b.import_block(k, a, a._index[k])
+        assert bid is not None
+        # the copy is the literal published payload, every layer
+        src_bid = a._index[k]
+        for dl, sl in zip(b.cache["layers"], a.cache["layers"]):
+            for name in dl:
+                if name in STATE_KEYS:
+                    continue
+                np.testing.assert_array_equal(np.asarray(dl[name][:, bid]),
+                                              np.asarray(sl[name][:, src_bid]))
+        assert int(b.allocator.ref[bid]) == 1          # index-only cache
+        assert b._index[k] == bid and b._hashed[bid] == k
+    assert b.remote_imports == 2
+    # a second import of a resident key is a no-op returning the local bid
+    assert b.import_block(keys[0], a, a._index[keys[0]]) == b._index[keys[0]]
+    assert b.remote_imports == 2
+    # local admission now adopts the imported run exactly like a local
+    # publication: both full blocks reused, byte-served from the copies
+    s, reused = b.try_admit(p, max_new=4)
+    assert reused == 16 and b.hash_hits == 2
+    b.free(s)
+    assert b.pristine
+
+
+def test_import_block_refuses_when_pool_is_committed():
+    b = _mgr(n_blocks=4)                       # 3 usable blocks
+    a = _mgr()
+    p = np.arange(20, dtype=np.int32)
+    _publish(a, p)
+    # 16-token prompt + 8 new = 3 projected blocks: 2 in the table, 1 of
+    # reservation debt -> free_blocks == 0 with nothing sheddable
+    s, _ = b.try_admit(np.arange(16, dtype=np.int32), max_new=8)
+    assert b.free_blocks <= 0 and b.reclaimable_blocks == 0
+    key = a.chain_keys(p)[0]
+    assert b.import_block(key, a, a._index[key]) is None
+    b.free(s)
+    # with room back, the same import succeeds (shedding if needed)
+    assert b.import_block(key, a, a._index[key]) is not None
+
+
+# ------------------------------------------------------------------- routing
+def _model(seed=0, adapters=("serve",)):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    store = AdapterStore(CFG, LCFG, jax.random.PRNGKey(seed + 1))
+    for i, name in enumerate(adapters):
+        store.load_random(name, jax.random.PRNGKey(seed + 2 + i))
+    return MixedLoraModel(CFG, params, store)
+
+
+def _ecfg(**kw):
+    kw = {"capacity": 4, "pf_capacity": 2, "s_max": 96, "block_size": 16,
+          "virtual_time": True, **kw}
+    return EngineConfig(**kw)
+
+
+def _req(rid, prompt, adapter="serve", max_new=6, arrival=0.0):
+    return Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                   adapter=adapter, max_new_tokens=max_new,
+                   arrival=arrival)
+
+
+def test_router_round_robin_and_least_loaded():
+    engines = [UnifiedEngine(m, _ecfg()) for m in
+               replicate_model(_model(), 3)]
+    rr = Router(engines, RouterConfig(policy="round-robin"))
+    assert [rr.route(_req(i, np.arange(8))) for i in range(5)] \
+        == [0, 1, 2, 0, 1]
+    ll = Router(engines, RouterConfig(policy="least-loaded"))
+    engines[0].waiting.append(_req(90, np.arange(8)))
+    engines[1].waiting.append(_req(91, np.arange(8)))
+    assert ll.route(_req(92, np.arange(8))) == 2
+    with pytest.raises(ValueError):
+        RouterConfig(policy="fastest")
+
+
+def test_router_affinity_prefers_residency_but_not_forever():
+    engines = [UnifiedEngine(m, _ecfg()) for m in
+               replicate_model(_model(), 2)]
+    p = np.arange(48, dtype=np.int32)
+    _publish(engines[1].cachemgr, p, adapter="serve")
+    r = _req(0, p)
+    af = Router(engines, RouterConfig(policy="affinity"))
+    assert af.route(r) == 1                    # 3 resident blocks win
+    # anti-herding: affinity is bounded, load penalty is not — a deep
+    # enough backlog on the resident replica flips the argmax, so one hot
+    # template cannot starve the rest of the fleet
+    c = af.cfg
+    depth = int((1.0 + c.adapter_bonus) / c.load_penalty) + 1
+    engines[1].waiting.extend(_req(100 + i, np.arange(8))
+                              for i in range(depth))
+    assert af.route(r) == 0
+
+
+def test_router_affinity_adapter_residency_bonus():
+    ma = _model(adapters=("hot",))
+    mb = _model(adapters=("cold",))
+    engines = [UnifiedEngine(ma, _ecfg()), UnifiedEngine(mb, _ecfg())]
+    af = Router(engines, RouterConfig(policy="affinity"))
+    assert af.route(_req(0, np.arange(8), adapter="hot")) == 0
+    assert af.route(_req(1, np.arange(8), adapter="cold")) == 1
+
+
+# --------------------------------------------------- fetch-vs-recompute rule
+def test_fetch_rule_weighs_launch_overhead_against_prefill():
+    fleet = build_fleet(_model(), _ecfg(), FleetConfig(replicas=2))
+    warm, cold = fleet.engines
+    p = np.arange(48, dtype=np.int32)          # 3 full blocks at bs=16
+    _publish(warm.cachemgr, p, adapter="serve")
+    r = _req(0, p)
+    # the request's admission chain covers 2 of the 3 published blocks —
+    # one prompt token must stay computable, so the third is unadoptable
+    # and never worth fetching
+    assert len(request_chain_keys(r, 16)) == 2
+    # default cost model: fixed = 35 ms dwarfs 2 blocks' prefill — the
+    # rule must refuse to fetch (recompute is cheaper)
+    assert fleet._fetch_prefix(1, r) == 0
+    assert cold.cachemgr.remote_imports == 0
+    # prefill-bound regime: the same 2 blocks are worth one transfer
+    cold.clock = VirtualClock(FETCH_COST)
+    t0 = cold.clock.now()
+    assert fleet._fetch_prefix(1, r) == 2
+    assert cold.cachemgr.remote_imports == 2
+    assert cold.metrics.remote_fetch_time > 0
+    assert cold.clock.now() == pytest.approx(
+        t0 + FETCH_COST.fixed + 2 * FETCH_COST.remote_per_block)
+    # idempotent: everything already local now
+    assert fleet._fetch_prefix(1, r) == 0
+    fleet.index.check_bijection()
+
+
+# ------------------------------------------------------- E2E byte-exactness
+def _trace(n=6, max_new=6, seed=0, head_len=48):
+    head = np.arange(head_len, dtype=np.int32) % CFG.vocab
+    rng = np.random.default_rng(seed)
+    return [_req(i, np.concatenate([head, rng.integers(
+                     0, CFG.vocab, rng.integers(4, 12)).astype(np.int32)]),
+                 arrival=0.05 * i, max_new=max_new) for i in range(n)]
+
+
+def _outputs(finished):
+    return {r.rid: list(r.output) for r in finished}
+
+
+@pytest.mark.parametrize("policy", ["affinity", "round-robin"])
+def test_fleet_of_three_byte_identical_to_single_engine(policy):
+    """N=3 replicas behind either router must emit byte-identical outputs
+    to one engine serving the same trace — remote fetch copies published
+    (CoW-immutable) K/V, replicas share base weights by reference and
+    carry identically-loaded adapters, so placement must be invisible."""
+    ecfg = _ecfg(cost=FETCH_COST)
+    ref_eng = UnifiedEngine(_model(), ecfg)
+    for r in _trace():
+        ref_eng.submit(r)
+    ref_eng.run(max_ticks=8000)
+    ref = _outputs(ref_eng.finished)
+    assert len(ref) == 6
+
+    fleet = build_fleet(_model(), ecfg, FleetConfig(
+        replicas=3, router=RouterConfig(policy=policy)))
+    for r in _trace():
+        fleet.submit(r)
+    fm = fleet.run()
+    assert _outputs(r for e in fleet.engines for r in e.finished) == ref
+    if policy == "round-robin":
+        # spreading a shared-prefix trace forces cross-replica fetches
+        assert sum(fleet.routed.values()) == 6
+        assert min(fleet.routed.values()) >= 1
+        assert fm.remote_fetch_blocks > 0 and fm.remote_fetch_time > 0
+    fleet.index.check_bijection()
+    assert all(e.cachemgr.pristine for e in fleet.engines)
+    assert fm.elapsed == pytest.approx(max(e.clock.now()
+                                           for e in fleet.engines))
+
+
+def test_fleet_exact_under_preemption_churn():
+    """Over-admission preemption inside replicas must not leak into the
+    fleet index (retraction fires from the one local removal path) nor
+    change outputs."""
+    ecfg = _ecfg(cost=FETCH_COST, n_blocks=12, over_admit=2.0)
+    ref_eng = UnifiedEngine(_model(), ecfg)
+    for r in _trace(n=4, max_new=24, head_len=16):
+        ref_eng.submit(r)
+    ref_eng.run(max_ticks=8000)
+    ref = _outputs(ref_eng.finished)
+    assert len(ref) == 4
+
+    fleet = build_fleet(_model(), ecfg, FleetConfig(
+        replicas=3, router=RouterConfig(policy="round-robin")))
+    for r in _trace(n=4, max_new=24, head_len=16):
+        fleet.submit(r)
+    fleet.run()
+    assert _outputs(r for e in fleet.engines for r in e.finished) == ref
+    fleet.index.check_bijection()
+    assert all(e.cachemgr.pristine for e in fleet.engines)
+
+
+# ------------------------------------------- fleet conservation (hypothesis)
+@_hyp(lambda: [settings(max_examples=15, deadline=None),
+               given(ops=st.lists(st.tuples(st.integers(0, 1),
+                                            st.integers(0, 6),
+                                            st.integers(0, 7),
+                                            st.integers(0, 80)),
+                                  min_size=1, max_size=50),
+                     over_admit=st.sampled_from([1.0, 1.75]))])
+def test_fleet_block_conservation_property(ops, over_admit):
+    """The single-pool conservation property, extended across a 2-replica
+    fleet with cross-pool imports in the op mix: every manager keeps
+    refcount == table + index holds with a mirrored free list, the fleet
+    index stays a bijection with the local indexes (no stale entries,
+    ever), and a full drain of ALL replicas leaves every pool pristine
+    with flush reclaiming everything."""
+    ms = [_mgr(capacity=4, n_blocks=13, s_max=96, bs=8,
+               over_admit=over_admit) for _ in range(2)]
+    fi = FleetIndex()
+    for i, m in enumerate(ms):
+        fi.attach(i, m)
+    live = [[], []]
+    rng = np.random.default_rng(0)
+    for who, kind, pick, amount in ops:
+        m, lv = ms[who], live[who]
+        if kind == 0:                                     # admit (+ adopt)
+            prompt = rng.integers(0, 3, 1 + amount % 40).astype(np.int32)
+            got = m.try_admit(prompt, max_new=amount % 48)
+            if got is not None:
+                lv.append(got[0])
+        elif kind == 1 and lv:                            # decode advance
+            slot = lv[pick % len(lv)]
+            cap = m.grow(slot, int(m.lens[slot]) + 1 + amount % 24)
+            n = min(cap, int(m.lens[slot]) + 1 + amount % 24) \
+                - m._seq_len[slot]
+            if n > 0:
+                m.commit_tokens(slot, rng.integers(0, 3, n))
+        elif kind == 2 and lv:                            # truncate (spec)
+            slot = lv[pick % len(lv)]
+            m.truncate(slot, max(int(m.lens[slot]) - amount % 16, 0))
+        elif kind == 3 and lv:                            # preempt / finish
+            m.free(lv.pop(pick % len(lv)))
+        elif kind == 4 and lv:                            # commit the prompt
+            slot = lv[pick % len(lv)]
+            n = min(m._seq_len[slot], len(m.tables[slot]) * m.block_size)
+            m.commit_prefill([(0, slot)], [n])
+        elif kind == 5 and lv:                            # grow to capacity
+            slot = lv[pick % len(lv)]
+            m.grow(slot, m.reserved.get(slot, 1) * m.block_size)
+        elif kind == 6:                                   # remote import
+            src = ms[1 - who]
+            if src._index:
+                key = sorted(src._index)[pick % len(src._index)]
+                m.import_block(key, src, src._index[key])
+        for mm in ms:
+            _check_conservation(mm, over_admit)
+        fi.check_bijection()
+    for who, m in enumerate(ms):                          # full fleet drain
+        for slot in live[who]:
+            m.free(slot)
+        _check_conservation(m, over_admit)
+        assert m.pristine
+    fi.check_bijection()
+    assert fi.entries == sum(len(m._index) for m in ms)
+    for m in ms:
+        m.flush_index()
+        assert m.allocator.n_free == m.allocator.usable
+    assert len(fi) == 0 and fi.entries == 0
+
+
+# ------------------------------------------------------------- replication
+def test_replicate_model_shares_base_and_clones_adapters():
+    model = _model(adapters=("a", "b"))
+    reps = replicate_model(model, 3)
+    assert reps[0] is model
+    for rep in reps[1:]:
+        assert rep.base is model.base          # zero extra base memory
+        assert rep.store is not model.store
+        assert set(rep.store.resident) == {"a", "b"}
+        for name in ("a", "b"):
+            np.testing.assert_array_equal(
+                np.asarray(jax.tree_util.tree_leaves(
+                    rep.store.get_adapter(name))[0]),
+                np.asarray(jax.tree_util.tree_leaves(
+                    model.store.get_adapter(name))[0]))
+            assert float(rep.store.scale[rep.store.slot_of(name)]) \
+                == float(model.store.scale[model.store.slot_of(name)])

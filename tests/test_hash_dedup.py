@@ -15,7 +15,7 @@ from repro.data import datasets
 from repro.models.schema import init_params
 from repro.serving.engine import EngineConfig, UnifiedEngine
 from repro.serving.kvcache import (CacheManager, PagedCacheManager,
-                                   block_key)
+                                   block_key, request_chain_keys)
 from repro.serving.request import Request
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.spec import SpecConfig
@@ -131,6 +131,68 @@ def test_publish_collision_keeps_incumbent():
     used = m.allocator.n_used
     m.free(sb)                                            # private copy dies
     assert m.allocator.n_used == used - len(m.tables[sa])
+
+
+def test_shed_aging_stale_template_loses_to_warm_one():
+    """Hit-count aging: each shed scan halves every entry's count AFTER
+    victim selection, so a once-hot template that stopped being adopted
+    decays toward zero under sustained pressure while a currently-warm
+    template keeps its counts replenished — and eventually the stale one
+    is evicted first DESPITE its historically higher raw hit total."""
+    m = _mgr(capacity=4, n_blocks=10, bs=8)
+
+    def publish(tmpl):
+        s, _ = m.try_admit(tmpl, max_new=4)
+        _commit_full(m, s)
+        m.free(s)
+
+    def adopt(tmpl):
+        s, reused = m.try_admit(tmpl, max_new=4)
+        assert reused == 8
+        m.free(s)
+
+    stale = np.arange(9, dtype=np.int32)                  # 1 full block
+    warm = np.arange(50, 59, dtype=np.int32)
+    publish(stale)
+    for _ in range(8):
+        adopt(stale)                                      # hits: stale = 8
+    for i in range(4):                                    # zero-hit fillers
+        publish(np.full((9,), 100 + i, np.int32))
+    publish(warm)
+    k_stale, k_warm = m.chain_keys(stale)[0], m.chain_keys(warm)[0]
+    # four rounds of pressure: each shed evicts a zero-hit filler (warm
+    # was just re-adopted, so it is never the zero-hit minimum), and the
+    # post-selection decay halves stale 8 -> 4 -> 2 -> 1 -> 0
+    for _ in range(4):
+        adopt(warm)
+        assert m._shed_one()
+        assert k_stale in m._index and k_warm in m._index
+    assert m._hits[k_stale] == 0
+    adopt(warm)                                           # warm again: 1
+    assert m._shed_one()                                  # the decisive scan
+    assert k_stale not in m._index, "stale template should lose"
+    assert k_warm in m._index, "warm template should survive"
+
+
+def test_request_chain_keys_memoized_across_callers():
+    """The shared per-request memo: router probe and engine admission must
+    hash each prompt once between them — the second call returns the SAME
+    list object — and the memo invalidates when preemption rolls emitted
+    tokens into the prompt (prompt_len changes)."""
+    r = Request(rid=0, prompt=np.arange(20, dtype=np.int32), adapter="a",
+                max_new_tokens=4)
+    k1 = request_chain_keys(r, 8)
+    assert len(k1) == 2
+    assert request_chain_keys(r, 8) is k1                 # memo hit
+    m = _mgr(bs=8)
+    assert k1 == m.chain_keys(r.prompt, "a")              # same chain
+    # a different block size is a different chain — recomputed, not served
+    # from the stale memo
+    assert len(request_chain_keys(r, 4)) == 4
+    # preemption rolls output into the prompt: longer prompt, fresh keys
+    r.prompt = np.arange(30, dtype=np.int32)
+    k2 = request_chain_keys(r, 8)
+    assert k2 is not k1 and len(k2) == 3 and k2[:2] == k1
 
 
 def test_dense_manager_commit_tokens_advances_length():

@@ -224,6 +224,45 @@ def test_table_overrides_heuristic_and_bumps_version():
     assert autotune.choose(*key).num_splits > 1         # fallback restored
 
 
+def test_lanes_env_override_shifts_heuristic(monkeypatch, tmp_path):
+    """REPRO_ATTN_LANES calibrates the occupancy model per device: a bigger
+    lane count makes the same shape under-occupied, flipping the heuristic
+    from sequential to split; the persisted table records the lanes the
+    sweep modeled with; garbage values fail loudly instead of silently
+    falling back to the default."""
+    monkeypatch.delenv(autotune.ENV_LANES, raising=False)
+    assert autotune.effective_lanes() == autotune.LANES
+    # bh = 16 fills 16 default lanes (no split)...
+    assert autotune.heuristic(64, 16, 32, 16).num_splits == 1
+    monkeypatch.setenv(autotune.ENV_LANES, "64")
+    assert autotune.effective_lanes() == 64
+    # ...but cannot fill 64 — the SAME shape now wants a split, and the
+    # explicit-lanes argument matches what the env default resolves to
+    assert autotune.heuristic(64, 16, 32, 16).num_splits > 1
+    assert autotune.heuristic(64, 16, 32, 16) \
+        == autotune.heuristic(64, 16, 32, 16, lanes=64)
+    p = str(tmp_path / "tune.json")
+    try:
+        autotune.put_config((64, 16, 32, 16), AttnConfig(512, 4))
+        autotune.save_table(p)
+    finally:
+        autotune.clear_table()
+    import json
+    assert json.load(open(p))["lanes"] == 64
+    # validation: non-integers and non-positive counts raise, with the
+    # variable named so the error is actionable; empty means default
+    monkeypatch.setenv(autotune.ENV_LANES, "sixteen")
+    with pytest.raises(ValueError, match="REPRO_ATTN_LANES"):
+        autotune.effective_lanes()
+    with pytest.raises(ValueError):
+        autotune.heuristic(64, 16, 32, 16)     # reaches every choice path
+    monkeypatch.setenv(autotune.ENV_LANES, "0")
+    with pytest.raises(ValueError, match=">= 1"):
+        autotune.effective_lanes()
+    monkeypatch.setenv(autotune.ENV_LANES, "  ")
+    assert autotune.effective_lanes() == autotune.LANES
+
+
 def test_table_save_load_roundtrip(tmp_path):
     p = str(tmp_path / "tune.json")
     try:
