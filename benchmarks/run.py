@@ -6,11 +6,11 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_dedup, bench_finetune, bench_fleet,
-                        bench_inference, bench_kernels, bench_loading,
-                        bench_mutable, bench_paged, bench_preempt,
-                        bench_prefix, bench_realworld, bench_roofline,
-                        bench_spec, bench_unified)
+from benchmarks import (bench_adapters, bench_dedup, bench_finetune,
+                        bench_fleet, bench_inference, bench_kernels,
+                        bench_loading, bench_mutable, bench_paged,
+                        bench_preempt, bench_prefix, bench_realworld,
+                        bench_roofline, bench_spec, bench_unified)
 
 # (table name, entry point, BENCH artifact the run must (re)write — None
 # for CSV-only benches).  A registered artifact that is missing or stale
@@ -31,6 +31,7 @@ TABLES = [
     ("preempt_overadmit", bench_preempt.main, "BENCH_preempt.json"),
     ("hash_dedup", bench_dedup.main, "BENCH_dedup.json"),
     ("fleet_serving", bench_fleet.main, "BENCH_fleet.json"),
+    ("adapter_paging", bench_adapters.main, "BENCH_adapters.json"),
 ]
 
 

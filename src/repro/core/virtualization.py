@@ -15,11 +15,32 @@ runtime.  JAX is functional, so virtualization is structural instead:
 
 ``MixedLoraModel`` mirrors the paper's class of the same name: the object the
 unified computation flow executes, carrying every resident adapter at once.
+
+Unified adapter paging: ``AdapterStore.attach_pager`` binds the store to a
+``PagedCacheManager`` so adapter weights page through the SAME refcounted
+block pool as KV cache (the S-LoRA unified-memory design).  Residency then
+has three tiers per adapter:
+
+* **bank-materialized** — occupies a slot of the stacked bank (the small
+  compute staging tier the BGMV/smlm kernels read);
+* **pool-resident** — its flattened A/B payload (at TRUE rank, so
+  heterogeneous ranks cost proportionally many blocks) lives in shared pool
+  blocks; re-materializing into the bank is a cheap gather, no host
+  traffic;
+* **host-archived** — only the host master copy remains; the next
+  ``acquire`` is a counted (and virtual-clock-charged) H2D swap-in.
+
+The host archive is written once at ``load`` and kept current lazily: a
+training update marks the adapter dirty (``mark_dirty``) and the payload is
+re-flattened from the bank at the next sync point (bank eviction or pool
+shed), so shedding never needs a D2H copy on the hot path.
+``retain``/``release``/``pin``/``unpin`` forward to pool pins — an adapter
+backing any scheduled row can never be shed out from under it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +110,25 @@ class AdapterStore:
         self._tick = 0
         self.evictions = 0
         self.reloads = 0
+        # unified adapter paging (attach_pager): the flatten/unflatten spec
+        # is the deterministic leaf order of the LoRA target tree — both
+        # directions walk self._tleaves, so the byte image round-trips
+        # bit-exactly (including the bank write, which is built FROM the
+        # flattened image so bank and pool can never disagree)
+        self._np_dtype = np.dtype(dtype)
+        self._tleaves, self._tdef = jax.tree_util.tree_flatten(
+            targets, is_leaf=lambda x: hasattr(x, "d_in"))
+        self._ranks: Dict[str, int] = {}             # name -> true rank
+        self._archive: Dict[str, Tuple[np.ndarray, float]] = {}
+        self._dirty: set = set()                     # bank newer than archive
+        self.pager = None                            # PagedCacheManager
+        # swap accounting, maintained in BOTH modes so the virtual clock
+        # charges the static-partition baseline and the unified pool the
+        # same H2D price per swap-in (equal-HBM benches stay honest)
+        self.swap_ins = 0
+        self.swap_in_bytes = 0
+        self.resident_hits = 0       # acquires served without host traffic
+        self.peak_coresident = 0     # max adapters simultaneously in HBM
 
     # -- slot management ---------------------------------------------------
     def slot_of(self, name: str) -> int:
@@ -100,11 +140,174 @@ class AdapterStore:
 
     @property
     def voided(self) -> List[str]:
-        return list(self._voided)
+        """Adapters whose only live copy is host memory (the next acquire
+        pays a swap-in)."""
+        out = list(self._voided)
+        if self.pager is not None:
+            out += [n for n in self._archive
+                    if n not in self._slots
+                    and not self.pager.adapter_resident(n)]
+        return out
 
     def _touch(self, name: str):
         self._tick += 1
         self._lru[name] = self._tick
+
+    # -- unified paging: flatten/unflatten + pager binding ------------------
+    def adapter_nbytes(self, name: Optional[str] = None,
+                       rank: Optional[int] = None) -> int:
+        """Byte footprint of an adapter at its TRUE rank (what the pool
+        stores and a swap-in transfers)."""
+        rk = (int(rank) if rank is not None
+              else self._ranks.get(name, self.lcfg.r))
+        it = self._np_dtype.itemsize
+        tot = 0
+        for t in self._tleaves:
+            ns = int(np.prod(t.stack)) if t.stack else 1
+            tot += ns * rk * (t.d_in + t.d_out) * it
+        return tot
+
+    def _flatten(self, adapter, rank: int) -> np.ndarray:
+        """Raw byte image of an adapter pytree, sliced to its true rank:
+        per target leaf, ``a[..., :, :rank]`` then ``b[..., :rank, :]``, in
+        target-tree order.  Columns beyond the true rank are DROPPED — the
+        round trip zero-fills them, which is also how a true-rank adapter
+        is defined."""
+        leaves = jax.tree_util.tree_leaves(
+            adapter, is_leaf=lambda x: isinstance(x, dict) and "a" in x)
+        if len(leaves) != len(self._tleaves):
+            raise ValueError("adapter pytree does not match the LoRA "
+                             "target schema")
+        parts = []
+        for d in leaves:
+            a = np.asarray(d["a"]).astype(self._np_dtype,
+                                          copy=False)[..., :, :rank]
+            b = np.asarray(d["b"]).astype(self._np_dtype,
+                                          copy=False)[..., :rank, :]
+            parts.append(np.ascontiguousarray(a).reshape(-1).view(np.uint8))
+            parts.append(np.ascontiguousarray(b).reshape(-1).view(np.uint8))
+        return (np.concatenate(parts) if parts
+                else np.zeros((0,), np.uint8))
+
+    def _unflatten(self, flat: np.ndarray, rank: int):
+        """Inverse of ``_flatten``, zero-padding each leaf back to the bank
+        rank ``lcfg.r`` (the stacked bank is rank-uniform; a true-rank
+        adapter simply leaves its tail columns zero)."""
+        r_full = self.lcfg.r
+        it = self._np_dtype.itemsize
+        buf = np.ascontiguousarray(flat).view(np.uint8)
+        off = 0
+        out = []
+        for t in self._tleaves:
+            stack = tuple(t.stack)
+            ns = int(np.prod(stack)) if stack else 1
+            na = ns * t.d_in * rank * it
+            a = np.frombuffer(buf[off:off + na].tobytes(),
+                              self._np_dtype).reshape(*stack, t.d_in, rank)
+            off += na
+            nb = ns * rank * t.d_out * it
+            b = np.frombuffer(buf[off:off + nb].tobytes(),
+                              self._np_dtype).reshape(*stack, rank, t.d_out)
+            off += nb
+            af = np.zeros((*stack, t.d_in, r_full), self._np_dtype)
+            af[..., :rank] = a
+            bf = np.zeros((*stack, r_full, t.d_out), self._np_dtype)
+            bf[..., :rank, :] = b
+            out.append({"a": jnp.asarray(af), "b": jnp.asarray(bf)})
+        return jax.tree_util.tree_unflatten(self._tdef, out)
+
+    def attach_pager(self, pager):
+        """Bind to a ``PagedCacheManager``: from here on adapter weights
+        page through ITS block pool (unified KV + adapter memory).
+        Already-loaded adapters are archived (flattened from the bank) and
+        preloaded into the pool opportunistically — no shedding at attach;
+        already-voided adapters migrate their host copies into the
+        archive.  Existing pins/retains are forwarded so a pre-attached
+        trainer pin protects its pool blocks too."""
+        if self.pager is not None:
+            raise RuntimeError("a pager is already attached to this store")
+        self.pager = pager
+        pager.on_adapter_shed = self._on_pool_shed
+        pager.adapter_redundant_fn = (
+            lambda n: n in self._slots and n not in self._dirty)
+        for n in self._pinned:
+            pager.adapter_pin(n)
+        for n, c in self._refs.items():
+            for _ in range(c):
+                pager.adapter_pin(n)
+        for n in list(self._slots):
+            self._ranks.setdefault(n, self.lcfg.r)
+            self._sync_from_bank(n)
+            pager.adapter_admit(n, self._archive[n][0], shed=False)
+        for n, v in list(self._voided.items()):
+            rk = self._ranks.setdefault(n, self.lcfg.r)
+            self._archive[n] = (self._flatten(v.adapter, rk), v.scale)
+            del self._voided[n]
+            pager.adapter_admit(n, self._archive[n][0], shed=False)
+        self._note_coresident()
+
+    def _materialize(self, name: str, adapter, scale: float) -> int:
+        """Write an adapter into a bank slot (LRU-evicting if full) without
+        the registration semantics of ``load``."""
+        slot = self._alloc(evict=True)
+        self.bank = _slot_put(self.bank, slot, adapter)
+        self.scale = self.scale.at[slot].set(scale)
+        self._slots[name] = slot
+        self._touch(name)
+        return slot
+
+    def _sync_from_bank(self, name: str, refresh: bool = True):
+        """Re-flatten ``name`` from its bank slot into the host archive
+        (and, when still pool-resident, rewrite its pool payload) — the
+        write-back that makes a dirty trained adapter durable before its
+        bank slot is reused."""
+        rk = self._ranks.get(name, self.lcfg.r)
+        flat = self._flatten(self.get_adapter(name), rk)
+        self._archive[name] = (flat, float(self.scale[self._slots[name]]))
+        if (refresh and self.pager is not None
+                and self.pager.adapter_resident(name)):
+            self.pager.adapter_refresh(name, flat)
+        self._dirty.discard(name)
+
+    def _on_pool_shed(self, name: str):
+        """Pool shed callback (fires before the victim's blocks are
+        freed): keep the host archive current.  The bank copy, if any,
+        stays — it is the staging tier, and its LRU retires it
+        independently."""
+        if name in self._dirty:
+            if name in self._slots:
+                # bank holds the newest payload; no point refreshing pool
+                # blocks that are about to be freed
+                self._sync_from_bank(name, refresh=False)
+            else:
+                self._dirty.discard(name)
+
+    def mark_dirty(self, name: str):
+        """A training step rewrote this adapter's bank slot: archive and
+        pool copies are stale until the next sync point."""
+        if self.pager is not None and name in self._archive:
+            self._dirty.add(name)
+
+    def is_resident(self, name: str) -> bool:
+        """Usable without a host swap-in: bank-materialized, or (paged
+        mode) blocks live in the shared pool.  The scheduler's
+        adapter-residency probe."""
+        if name in self._slots:
+            return True
+        if self.pager is not None:
+            return self.pager.adapter_resident(name)
+        return False
+
+    @property
+    def coresident(self) -> int:
+        """Adapters simultaneously in HBM (bank + pool, deduplicated)."""
+        names = set(self._slots)
+        if self.pager is not None:
+            names |= set(self.pager.adapter_tables)
+        return len(names)
+
+    def _note_coresident(self):
+        self.peak_coresident = max(self.peak_coresident, self.coresident)
 
     def _alloc(self, evict: bool = False) -> int:
         used = set(self._slots.values())
@@ -120,43 +323,73 @@ class AdapterStore:
         raise RuntimeError("no free adapter slot; unload one first")
 
     def _evict_lru(self) -> Optional[int]:
-        """Void the least-recently-used idle adapter to host; returns its
-        freed slot (or None when everything is pinned / referenced)."""
+        """Retire the least-recently-used idle adapter's bank slot; returns
+        it (or None when everything is pinned / referenced).  Paged mode
+        never writes a ``VoidedModel``: the archive (synced here if the
+        victim is dirty) plus any pool residency already make the bank copy
+        redundant."""
         candidates = [n for n in self._slots
                       if n not in self._pinned and not self._refs.get(n, 0)]
         if not candidates:
             return None
         victim = min(candidates, key=lambda n: self._lru.get(n, 0))
         slot = self._slots[victim]
-        self._voided[victim] = VoidedModel(
-            name=victim, cfg_name=self.cfg.name,
-            adapter=jax.tree_util.tree_map(lambda x: np.asarray(x),
-                                           _slot_take(self.bank, slot)),
-            scale=float(self.scale[slot]))
+        if self.pager is not None:
+            if victim in self._dirty:
+                self._sync_from_bank(victim)
+        else:
+            self._voided[victim] = VoidedModel(
+                name=victim, cfg_name=self.cfg.name,
+                adapter=jax.tree_util.tree_map(lambda x: np.asarray(x),
+                                               _slot_take(self.bank, slot)),
+                scale=float(self.scale[slot]))
         self.unload(victim)
         self.evictions += 1
         return slot
 
     def load(self, name: str, adapter, scale: float = 1.0,
-             evict: bool = False) -> int:
+             evict: bool = False, rank: Optional[int] = None) -> int:
         """Load (or hot-swap in) an adapter pytree into a free slot —
         no recompilation, no base-model copy.  With ``evict=True``, a full
-        bank LRU-evicts an idle adapter instead of raising."""
+        bank LRU-evicts an idle adapter instead of raising.  ``rank`` is
+        the adapter's TRUE rank (<= the bank rank): columns beyond it are
+        zeroed, and under unified paging its pool/transfer footprint is
+        proportional to it (heterogeneous ranks => variable block
+        counts)."""
         if name in self._slots:
             raise ValueError(f"adapter {name!r} already resident")
+        rk = int(rank) if rank is not None else self.lcfg.r
+        if not 1 <= rk <= self.lcfg.r:
+            raise ValueError(f"rank {rk} outside [1, {self.lcfg.r}]")
+        self._ranks[name] = rk
+        # canonicalize through the byte image so bank contents are
+        # identical whether the adapter arrives via pool round-trip or a
+        # direct load (tail columns zeroed the same way in both modes)
+        flat = self._flatten(adapter, rk)
+        canon = self._unflatten(flat, rk)
+        if self.pager is not None:
+            self._archive[name] = (flat, float(scale))
+            self._dirty.discard(name)
+            self.pager.adapter_admit(name, flat)     # best effort
+            slot = self._materialize(name, canon, scale)
+            self._note_coresident()
+            return slot
         slot = self._alloc(evict=evict)
-        self.bank = _slot_put(self.bank, slot, adapter)
+        self.bank = _slot_put(self.bank, slot, canon)
         self.scale = self.scale.at[slot].set(scale)
         self._slots[name] = slot
         self._voided.pop(name, None)
         self._touch(name)
+        self._note_coresident()
         return slot
 
     def load_random(self, name: str, key: jax.Array, scale: float = 1.0,
-                    gaussian_b: bool = True) -> int:
+                    gaussian_b: bool = True, evict: bool = False,
+                    rank: Optional[int] = None) -> int:
         targets = lora_targets(self.cfg, self.lcfg.targets)
         fresh = init_lora_bank(key, targets, self.lcfg, gaussian_b=gaussian_b)
-        return self.load(name, _slot_take(fresh, 0), scale)
+        return self.load(name, _slot_take(fresh, 0), scale, evict=evict,
+                         rank=rank)
 
     def unload(self, name: str):
         slot = self._slots.pop(name)
@@ -165,23 +398,54 @@ class AdapterStore:
 
     # -- eviction pool ------------------------------------------------------
     def acquire(self, name: str) -> int:
-        """Resolve an adapter to its slot, transparently reloading it from
-        host if it was evicted (possibly evicting another idle adapter)."""
+        """Resolve an adapter to a bank slot, transparently
+        re-materializing it.  Tiered under unified paging: a bank hit or a
+        pool-resident gather costs no host traffic (``resident_hits``); a
+        host-archived adapter is first swapped into the pool (counted +
+        clock-charged by the engine) then gathered.  Raises ``KeyError``
+        for an unknown adapter and ``RuntimeError`` when neither the bank
+        nor the pool can take it this tick."""
         if name in self._slots:
             self._touch(name)
+            self.resident_hits += 1
             return self._slots[name]
+        if self.pager is not None and name in self._archive:
+            flat, scale = self._archive[name]
+            rk = self._ranks[name]
+            if self.pager.adapter_resident(name):
+                self.resident_hits += 1
+            else:
+                if not self.pager.adapter_admit(name, flat):
+                    raise RuntimeError(
+                        f"no pool capacity to swap in adapter {name!r}")
+                self.swap_ins += 1
+                self.swap_in_bytes += int(flat.nbytes)
+            # gather from the pool — the production read path — rather
+            # than trusting the archive we may just have written
+            slot = self._materialize(
+                name, self._unflatten(self.pager.adapter_gather(name), rk),
+                scale)
+            self.reloads += 1
+            self._note_coresident()
+            return slot
         if name in self._voided:
             v = self._voided[name]
             slot = self.load(name, jax.tree_util.tree_map(jnp.asarray,
                                                           v.adapter),
-                             v.scale, evict=True)
+                             v.scale, evict=True,
+                             rank=self._ranks.get(name))
             self.reloads += 1
+            self.swap_ins += 1
+            self.swap_in_bytes += self.adapter_nbytes(name)
             return slot
         raise KeyError(f"unknown adapter {name!r}")
 
     def retain(self, name: str):
-        """Mark the adapter as backing in-flight work (eviction-exempt)."""
+        """Mark the adapter as backing in-flight work (eviction-exempt;
+        under unified paging the pool blocks are pinned too)."""
         self._refs[name] = self._refs.get(name, 0) + 1
+        if self.pager is not None:
+            self.pager.adapter_pin(name)
 
     def release(self, name: str):
         n = self._refs.get(name, 0) - 1
@@ -189,13 +453,19 @@ class AdapterStore:
             self._refs.pop(name, None)
         else:
             self._refs[name] = n
+        if self.pager is not None:
+            self.pager.adapter_unpin(name)
 
     def pin(self, name: str):
         """Exempt from eviction permanently (training adapters: their slot
         identity is baked into optimizer state and trainer masks)."""
+        if name not in self._pinned and self.pager is not None:
+            self.pager.adapter_pin(name)
         self._pinned.add(name)
 
     def unpin(self, name: str):
+        if name in self._pinned and self.pager is not None:
+            self.pager.adapter_unpin(name)
         self._pinned.discard(name)
 
     def get_adapter(self, name: str):

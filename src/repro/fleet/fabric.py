@@ -96,7 +96,16 @@ def replicate_model(model: MixedLoraModel, n: int) -> List[MixedLoraModel]:
         for name in src.resident:
             store.load(name, jax.tree_util.tree_map(lambda x: x,
                                                     src.get_adapter(name)),
-                       scale=float(src.scale[src.slot_of(name)]))
+                       scale=float(src.scale[src.slot_of(name)]),
+                       # true rank carries over so unified adapter paging
+                       # meters identical per-replica pool footprints
+                       rank=src._ranks.get(name))
+        for name, v in src._voided.items():
+            # host-voided adapters must replicate too — a small staging
+            # bank (unified paging) evicts overflow before the fleet is
+            # built, and every replica must be able to serve every adapter
+            store.load(name, v.adapter, scale=v.scale, evict=True,
+                       rank=src._ranks.get(name))
         out.append(MixedLoraModel(model.cfg, model.base, store))
     return out
 

@@ -39,6 +39,15 @@ def main():
                     help="per-tick prefill-token budget: long prompts "
                          "prefill as bounded chunks co-batched with decode "
                          "(0 = unchunked)")
+    ap.add_argument("--adapter-paging", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="page adapter weights through the KV block pool "
+                         "(unified memory: HBM flows between cache capacity "
+                         "and adapter residency; scheduler prefers resident-"
+                         "adapter waiters and co-batches same-adapter "
+                         "requests).  Implies a small LRU adapter bank so "
+                         "residency actually pages; default off = static "
+                         "bank partition")
     ap.add_argument("--no-hash-dedup", action="store_true",
                     help="disable content-hash KV block dedup (and the "
                          "prefix-aware admission that rides on it): every "
@@ -90,12 +99,21 @@ def main():
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
     from repro.models.schema import init_params
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
-    lcfg = LoRAConfig(n_slots=max(4, args.adapters), r=8)
+    # under unified paging the bank is a small staging tier (adapters page
+    # in/out of the shared pool); the static baseline sizes it to hold
+    # every adapter, the pre-paging behavior
+    n_slots = (max(4, min(args.adapters, 16)) if args.adapter_paging
+               else max(4, args.adapters))
+    lcfg = LoRAConfig(n_slots=n_slots, r=8)
     store = AdapterStore(cfg, lcfg, jax.random.PRNGKey(args.seed + 1))
     names = []
+    ranks = [2, 4, 8]       # heterogeneous true ranks => variable footprints
     for i in range(args.adapters):
         name = f"lora{i}"
-        store.load_random(name, jax.random.PRNGKey(100 + i))
+        store.load_random(name, jax.random.PRNGKey(100 + i),
+                          evict=args.adapter_paging,
+                          rank=(ranks[i % 3] if args.adapter_paging
+                                else None))
         names.append(name)
     model = MixedLoraModel(cfg, params, store)
     spec = None
@@ -107,7 +125,8 @@ def main():
         virtual_time=not args.wall_clock, spec=spec,
         prefill_chunk=args.prefill_chunk,
         hash_dedup=not args.no_hash_dedup,
-        over_admit=args.over_admit)
+        over_admit=args.over_admit,
+        adapter_paging=args.adapter_paging)
     fleet = None
     if args.replicas > 1:
         from repro.fleet import FleetConfig, RouterConfig, build_fleet
@@ -191,6 +210,12 @@ def main():
         print(f"prefix: reused={m.reused_prefix_tokens} "
               f"computed={m.prefill_tokens} "
               f"max_pf_step={tot('max_pf_tokens_step', max)}")
+    if args.adapter_paging or tot("adapter_swap_ins"):
+        print(f"adapters: swap_ins={tot('adapter_swap_ins')} "
+              f"swap_in_bytes={tot('adapter_swap_in_bytes')} "
+              f"resident_hits={tot('adapter_resident_hits')} "
+              f"blocks_resident={tot('adapter_blocks_resident')} "
+              f"peak_coresident={tot('adapter_peak_coresident', max)}")
     if eng.hash_dedup:
         print(f"dedup: hash_hits={m.hash_hits} "
               f"resident_blocks={tot('hash_blocks_resident')} "

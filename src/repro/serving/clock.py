@@ -42,6 +42,13 @@ class CostModel:
     decode_per_row: float = 1.5e-3
     ft_per_tok: float = 28e-6
     remote_per_block: float = 1e-4
+    # adapter swap-in (unified adapter paging / LRU bank reload): one H2D
+    # transfer of an adapter's true-rank A/B payload.  The fixed term is an
+    # 8B-scale rank-16 adapter (~60 MB over ~25 GB/s PCIe, plus launch); it
+    # dominates at this repo's reduced model sizes ON PURPOSE — the clock
+    # emulates paper-scale hardware, where swap-ins are far from free.
+    adapter_swap_fixed: float = 2.5e-3
+    adapter_h2d_per_byte: float = 4e-11
 
 
 class VirtualClock:
@@ -59,7 +66,9 @@ class VirtualClock:
         self._t = max(self._t, t)
 
     def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int,
-                  dec_extra_tokens: int = 0, remote_blocks: int = 0) -> float:
+                  dec_extra_tokens: int = 0, remote_blocks: int = 0,
+                  adapter_swaps: int = 0,
+                  adapter_swap_bytes: int = 0) -> float:
         """``dec_extra_tokens``: drafted tokens verified alongside the
         row's current token.  Decode is memory-bound — the row already pays
         ``decode_per_row`` for streaming weights + cache once — so extra
@@ -70,12 +79,21 @@ class VirtualClock:
         this step (fleet remote fetch), charged at the modeled interconnect
         rate.  A pure-fetch step still pays ``fixed`` — the transfer launch
         is not free — which is what makes the fetch-vs-recompute rule a
-        real per-request decision rather than a per-block tautology."""
+        real per-request decision rather than a per-block tautology.
+
+        ``adapter_swaps`` / ``adapter_swap_bytes``: adapter weight payloads
+        brought in from host this step (unified adapter paging swap-ins, or
+        the LRU bank's voided-adapter reloads — both pay the same H2D
+        price, which keeps equal-HBM comparisons honest).  Charged per
+        transfer plus per byte; co-scheduling same-adapter requests
+        amortizes the whole term to one swap per adapter per tick."""
         c = self.cost
         if (pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0
-                and remote_blocks == 0):
+                and remote_blocks == 0 and adapter_swaps == 0):
             return 0.0
         return (c.fixed + c.prefill_per_tok * pf_tokens
                 + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens
                 + c.prefill_per_tok * dec_extra_tokens
-                + c.remote_per_block * remote_blocks)
+                + c.remote_per_block * remote_blocks
+                + c.adapter_swap_fixed * adapter_swaps
+                + c.adapter_h2d_per_byte * adapter_swap_bytes)

@@ -68,6 +68,18 @@ class EngineConfig:
     #                                   the scheduler prefers admitting
     #                                   requests whose prefixes are resident
     #                                   (False = escape hatch: no reuse)
+    adapter_paging: bool = False      # unified KV + adapter paging: adapter
+    #                                   weights page through the SAME block
+    #                                   pool as the KV cache (S-LoRA
+    #                                   unified memory — HBM flows between
+    #                                   cache capacity and adapter
+    #                                   residency instead of being
+    #                                   statically partitioned), the
+    #                                   scheduler becomes adapter-
+    #                                   residency-aware, and swap-ins are
+    #                                   charged to the virtual clock.
+    #                                   Default OFF: the static bank
+    #                                   partition is the baseline
     cost: Optional[CostModel] = None  # virtual-clock cost model override
 
 
@@ -86,6 +98,15 @@ class UnifiedEngine:
         else:
             self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
                                          e.s_max)
+        # unified adapter paging: adapter weights share the KV block pool
+        self.adapter_paging = self.paged and e.adapter_paging
+        if self.adapter_paging:
+            model.store.attach_pager(self.cachemgr)
+        # swap counters are store-lifetime; baseline them so pre-serving
+        # loads are not billed to (or reported for) this engine
+        st = model.store
+        self._swaps_base = (st.swap_ins, st.swap_in_bytes, st.resident_hits)
+        self._swaps_seen = self._swaps_base[:2]
         self.sched = Scheduler(e.scheduler, e.capacity)
         self.clock = VirtualClock(e.cost) if e.virtual_time else WallClock()
         self.metrics = Metrics()
@@ -239,6 +260,7 @@ class UnifiedEngine:
                 if need > self.cachemgr.total_blocks:
                     r.state = State.FAILED
                     r.t_finish = self.clock.now()
+                    self._drop_retain(r)
                     self.waiting.remove(r)
                     self.finished.append(r)
             suffix_fn = None
@@ -270,6 +292,11 @@ class UnifiedEngine:
                 # by the fairness ramp so cold requests cannot starve
                 probe_fn=(self._resident_tokens if self.hash_dedup
                           else None),
+                # adapter-residency-aware admission: only under unified
+                # paging — the static-bank baseline keeps the pre-paging
+                # ordering byte-for-byte
+                adapter_fn=((lambda r: self.model.store.is_resident(
+                    r.adapter)) if self.adapter_paging else None),
                 now=self.clock.now())
         else:
             decision = self.sched.decide(self.waiting, len(self.active),
@@ -286,92 +313,34 @@ class UnifiedEngine:
             ft_rows.extend(got)
             budget -= len(got)
 
-        # prefill admissions
-        for r in decision.admit:
-            if len(pf_reqs) >= e.pf_capacity:
-                break
-            # resolve the adapter BEFORE reserving cache resources: acquire
-            # can fail (unknown adapter, or every slot pinned/retained) and
-            # must not leak a reservation or abort the tick
-            if r.adapter:
-                try:
-                    aslot = self.model.store.acquire(r.adapter)
-                except KeyError:
-                    r.state = State.FAILED
-                    r.t_finish = self.clock.now()
-                    self.waiting.remove(r)
-                    self.finished.append(r)
-                    continue
-                except RuntimeError:
-                    break          # adapter bank saturated; retry next tick
-            else:
-                aslot = -1
-            reused = 0
-            if self.paged:
-                adm = self.cachemgr.try_admit(r.prompt, r.remaining_new,
-                                              r.adapter,
-                                              headroom=self._headroom_for(r),
-                                              shareable=r.aux_embed is None,
-                                              keys=self._keys_of(r))
-                slot = adm[0] if adm is not None else None
-                reused = adm[1] if adm is not None else 0
-            else:
-                slot = self.cachemgr.alloc()
-            if slot is None:
-                break
-            if r.adapter:
-                self.model.store.retain(r.adapter)
-            r.dec_slot = slot
-            r.state = State.PREFILL
-            if self.spec:
-                kind = ("suffix" if (self.spec.drafter == "suffix"
-                                     and r.draft_suffix is not None)
-                        else "ngram")
-                self._spec[slot] = (
-                    make_drafter(kind, ngram_n=self.spec.ngram_n,
-                                 suffix=r.draft_suffix),
-                    AdaptiveK(self.spec))
-            self.waiting.remove(r)
-            if self.suffix_prefill:
-                # suffix-only prefill: shared-prefix K/V is read through the
-                # full block table; this chunk's writes land at positions
-                # >= cached_len, so they can never touch a shared block.
-                # A COLD start (no reused prefix) keeps the cheaper prompt-
-                # local attention path (cached_len=None) — there is nothing
-                # in the pool for its first chunk to read back.
-                r.prefilled = reused
-                suffix = r.prompt_len - r.prefilled
-                take = (suffix if budget_left is None
-                        else min(suffix, budget_left))
-                self.metrics.reused_prefix_tokens += reused
-                if take <= 0:
-                    # an earlier try_admit this tick shed the prefix this
-                    # request's suffix was priced against, draining the
-                    # budget: park it as a partial prefill (its slot and
-                    # blocks are held) instead of assembling a dead row
-                    self.prefilling[slot] = r
-                    continue
-                if budget_left is not None:
-                    budget_left -= take
-                pf_reqs.append(flow.PFReq(
-                    tokens=r.prompt[r.prefilled:r.prefilled + take],
-                    rid=r.rid, slot=aslot, aux_embed=r.aux_embed,
-                    block_table=(self.cachemgr.table_of(slot) if reused
-                                 else self.cachemgr.write_table_of(slot)),
-                    cached_len=r.prefilled if reused else None))
-                chunks.append((r, take, r.prefilled + take >= r.prompt_len))
-            else:
-                # full-prompt recompute (dense layout, or hybrid models
-                # whose SSM state must see every prompt token): prefill
-                # writes through write_table_of — shared prefix entries are
-                # nulled so prefill never rewrites blocks it doesn't own
-                r.prefilled = 0
-                pf_reqs.append(flow.PFReq(
-                    tokens=r.prompt, rid=r.rid, slot=aslot,
-                    aux_embed=r.aux_embed,
-                    block_table=(self.cachemgr.write_table_of(slot)
-                                 if self.paged else None)))
-                chunks.append((r, r.prompt_len, True))
+        # prefill admissions.  Adapters are resolved ONCE per tick per name
+        # (memoized below): the first same-adapter admit pays the swap-in,
+        # every co-scheduled follower rides it free — the amortization the
+        # scheduler's greedy affinity pass set up.  Each resolved adapter is
+        # held (retain) for the rest of the loop so a later resolve cannot
+        # evict it out from under an earlier admit; the temporary holds are
+        # dropped in the ``finally`` whether or not admission succeeded.
+        resolved: Dict[str, int] = {}
+        unknown: set = set()
+        deferred: set = set()
+
+        def _resolve(name: str):
+            if name in resolved or name in unknown or name in deferred:
+                return
+            try:
+                resolved[name] = self.model.store.acquire(name)
+                self.model.store.retain(name)
+            except KeyError:
+                unknown.add(name)
+            except RuntimeError:
+                deferred.add(name)     # bank/pool saturated this tick
+
+        try:
+            self._admit_loop(decision, pf_reqs, chunks, budget_left,
+                             resolved, unknown, deferred, _resolve)
+        finally:
+            for name in resolved:
+                self.model.store.release(name)
 
         # decode / verify bucket (static: full table when any request is
         # active; chunk width 1 + k_max whenever speculation is on, so the
@@ -488,8 +457,15 @@ class UnifiedEngine:
         ft_tok = int(sum(len(r.tokens) for r in ft_rows))
         dec_extra = int(sum(len(d) for d in drafts.values()))
         if isinstance(self.clock, VirtualClock):
+            # adapter swap-ins since the last charge (paged pool admits AND
+            # static-bank voided reloads both count — equal H2D price)
+            swaps = store.swap_ins - self._swaps_seen[0]
+            swap_bytes = store.swap_in_bytes - self._swaps_seen[1]
+            self._swaps_seen = (store.swap_ins, store.swap_in_bytes)
             cost = self.clock.step_cost(pf_tok, len(self.active), ft_tok,
-                                        dec_extra_tokens=dec_extra)
+                                        dec_extra_tokens=dec_extra,
+                                        adapter_swaps=swaps,
+                                        adapter_swap_bytes=swap_bytes)
             self.clock.charge(cost)
             self.metrics.busy_time += cost
         now = self.clock.now()
@@ -590,13 +566,127 @@ class UnifiedEngine:
         self.metrics.steps += 1
         self.metrics.elapsed = self.clock.now()
         self.metrics.probe_admissions += decision.probe_admissions
+        # adapter residency accounting (store-lifetime counters, baselined
+        # at engine construction so pre-serving loads are not reported)
+        self.metrics.adapter_swap_ins = store.swap_ins - self._swaps_base[0]
+        self.metrics.adapter_swap_in_bytes = (store.swap_in_bytes
+                                              - self._swaps_base[1])
+        self.metrics.adapter_resident_hits = (store.resident_hits
+                                              - self._swaps_base[2])
+        self.metrics.adapter_peak_coresident = store.peak_coresident
         if self.paged:
             self.metrics.lent_blocks_peak = self.cachemgr.lent_blocks_peak
             self.metrics.hash_hits = self.cachemgr.hash_hits
             self.metrics.hash_blocks_resident = \
                 self.cachemgr.hash_blocks_resident
             self.metrics.remote_fetch_blocks = self.cachemgr.remote_imports
+            if self.adapter_paging:
+                self.metrics.adapter_blocks_resident = \
+                    self.cachemgr.adapter_blocks_resident
         return True
+
+    # ------------------------------------------------------- admission body
+    def _admit_loop(self, decision, pf_reqs: List[flow.PFReq],
+                    chunks: List[Tuple[Request, int, bool]],
+                    budget_left: Optional[int],
+                    resolved: Dict[str, int], unknown: set, deferred: set,
+                    resolve):
+        """Admission body of ``tick``, split out so the per-tick adapter
+        holds can wrap it in try/finally.  Appends to ``pf_reqs``/``chunks``
+        in place; ``budget_left`` is the remaining chunked-prefill token
+        budget this tick (None = unchunked)."""
+        e = self.ecfg
+        for r in decision.admit:
+            if len(pf_reqs) >= e.pf_capacity:
+                break
+            # resolve the adapter BEFORE reserving cache resources: acquire
+            # can fail (unknown adapter, or bank/pool saturated) and must
+            # not leak a reservation or abort the tick.  A saturated
+            # adapter defers only ITS requests — co-admitted requests on
+            # other (or no) adapters still run this tick
+            if r.adapter:
+                resolve(r.adapter)
+                if r.adapter in unknown:
+                    r.state = State.FAILED
+                    r.t_finish = self.clock.now()
+                    self._drop_retain(r)
+                    self.waiting.remove(r)
+                    self.finished.append(r)
+                    continue
+                if r.adapter not in resolved:
+                    continue       # saturated: stays waiting, retries later
+                aslot = resolved[r.adapter]
+            else:
+                aslot = -1
+            reused = 0
+            if self.paged:
+                adm = self.cachemgr.try_admit(r.prompt, r.remaining_new,
+                                              r.adapter,
+                                              headroom=self._headroom_for(r),
+                                              shareable=r.aux_embed is None,
+                                              keys=self._keys_of(r))
+                slot = adm[0] if adm is not None else None
+                reused = adm[1] if adm is not None else 0
+            else:
+                slot = self.cachemgr.alloc()
+            if slot is None:
+                break
+            if r.adapter and not r.adapter_retained:
+                # a preempted request kept its retain across the requeue
+                # (anti-thrash) — only first admission takes a new hold
+                self.model.store.retain(r.adapter)
+                r.adapter_retained = True
+            r.dec_slot = slot
+            r.state = State.PREFILL
+            if self.spec:
+                kind = ("suffix" if (self.spec.drafter == "suffix"
+                                     and r.draft_suffix is not None)
+                        else "ngram")
+                self._spec[slot] = (
+                    make_drafter(kind, ngram_n=self.spec.ngram_n,
+                                 suffix=r.draft_suffix),
+                    AdaptiveK(self.spec))
+            self.waiting.remove(r)
+            if self.suffix_prefill:
+                # suffix-only prefill: shared-prefix K/V is read through the
+                # full block table; this chunk's writes land at positions
+                # >= cached_len, so they can never touch a shared block.
+                # A COLD start (no reused prefix) keeps the cheaper prompt-
+                # local attention path (cached_len=None) — there is nothing
+                # in the pool for its first chunk to read back.
+                r.prefilled = reused
+                suffix = r.prompt_len - r.prefilled
+                take = (suffix if budget_left is None
+                        else min(suffix, budget_left))
+                self.metrics.reused_prefix_tokens += reused
+                if take <= 0:
+                    # an earlier try_admit this tick shed the prefix this
+                    # request's suffix was priced against, draining the
+                    # budget: park it as a partial prefill (its slot and
+                    # blocks are held) instead of assembling a dead row
+                    self.prefilling[slot] = r
+                    continue
+                if budget_left is not None:
+                    budget_left -= take
+                pf_reqs.append(flow.PFReq(
+                    tokens=r.prompt[r.prefilled:r.prefilled + take],
+                    rid=r.rid, slot=aslot, aux_embed=r.aux_embed,
+                    block_table=(self.cachemgr.table_of(slot) if reused
+                                 else self.cachemgr.write_table_of(slot)),
+                    cached_len=r.prefilled if reused else None))
+                chunks.append((r, take, r.prefilled + take >= r.prompt_len))
+            else:
+                # full-prompt recompute (dense layout, or hybrid models
+                # whose SSM state must see every prompt token): prefill
+                # writes through write_table_of — shared prefix entries are
+                # nulled so prefill never rewrites blocks it doesn't own
+                r.prefilled = 0
+                pf_reqs.append(flow.PFReq(
+                    tokens=r.prompt, rid=r.rid, slot=aslot,
+                    aux_embed=r.aux_embed,
+                    block_table=(self.cachemgr.write_table_of(slot)
+                                 if self.paged else None)))
+                chunks.append((r, r.prompt_len, True))
 
     # ---------------------------------------------- preemption (over-admit)
     def _grow_or_preempt(self, slot: int, r: Request, L: int, n: int,
@@ -666,8 +756,9 @@ class UnifiedEngine:
         r.recount_pending = True
         self._spec.pop(slot, None)
         self.cachemgr.free(slot)
-        if r.adapter:
-            self.model.store.release(r.adapter)
+        # the victim KEEPS its adapter retain: it resumes from the head of
+        # the waiting queue, and evicting (or pool-shedding) its adapter
+        # just to swap it straight back in would be pure thrash
         self.waiting.insert(0, r)
         self.metrics.preemptions += 1
 
@@ -713,6 +804,9 @@ class UnifiedEngine:
                                                    self.opt_state,
                                                    store.bank, mask)
         store.set_bank(new_bank)
+        # the bank slot now holds newer weights than the host archive /
+        # pool payload — sync happens lazily at the next shed or eviction
+        store.mark_dirty(tr.name)
         inv = 1.0 - mask
         self.grad_accum = tree_mask_slots(self.grad_accum, inv)
 
@@ -726,9 +820,15 @@ class UnifiedEngine:
             self.active.pop(r.dec_slot, None)
             self._spec.pop(r.dec_slot, None)
             self.cachemgr.free(r.dec_slot)
-            if r.adapter:
-                self.model.store.release(r.adapter)
+            self._drop_retain(r)
             self.finished.append(r)
+
+    def _drop_retain(self, r: Request):
+        """Drop the request's adapter hold (if it took one) exactly once —
+        at finish or failure, never at preemption."""
+        if r.adapter and r.adapter_retained:
+            self.model.store.release(r.adapter)
+            r.adapter_retained = False
 
     # ------------------------------------------------------------------
     def run(self, max_ticks: int = 100000, until_drained: bool = True):

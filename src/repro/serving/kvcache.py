@@ -60,6 +60,26 @@ count.  This subsumes both the explicit ``prefix_id`` registry and the
 two-sighting ``auto_prefix`` heuristic of earlier revisions: reuse needs no
 caller-side id and starts at the SECOND sighting of any shared head, at
 per-block granularity.
+
+Unified adapter paging (the S-LoRA unified-memory design): the SAME
+``BlockAllocator`` free list also backs a second block class — LoRA adapter
+weights.  An adapter's A/B matrices are flattened to a raw byte payload at
+its TRUE rank (heterogeneous ranks => variable block counts) and scattered
+into an adapter payload pool shaped ``[n_blocks, adapter_block_bytes]``,
+where ``adapter_block_bytes`` equals the per-block K/V footprint of the KV
+pool — so one allocator unit is one HBM unit for both classes and capacity
+flows freely between cache residency and adapter residency instead of being
+statically partitioned.  (A real device implementation would alias both
+classes into one arena; here they are two same-shaped pools governed by the
+single allocator, which preserves the accounting exactly.)  Adapter blocks
+are held by ``adapter_tables`` (refcount 1 per table entry, same
+conservation law as KV tables), pinned while any scheduled row uses the
+adapter (``adapter_pin``), and shed cold-LRU under pressure — redundant
+copies first (adapters whose bank materialization makes the pool copy free
+to drop), never while pinned.  The shed loops of ``try_admit`` / ``grow`` /
+copy-on-write fall back to ``_shed_adapter`` after the hash index runs dry,
+and over-admission lending sees adapter blocks automatically: they spend
+from the same ``n_free`` every debt property is computed against.
 """
 from __future__ import annotations
 
@@ -104,6 +124,14 @@ def _copy_block(cache, src: jax.Array, dst: jax.Array):
          for k, v in d.items()}
         for d in cache["layers"])
     return {"layers": layers}
+
+
+# adapter payload pool scatter: write N flattened-weight blocks at once.
+# Donated for the same reason as _copy_block — the caller always replaces
+# the pool with the result.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _adapter_write(pool, bids: jax.Array, payload: jax.Array):
+    return pool.at[bids].set(payload)
 
 
 # cross-pool sibling of _copy_block: fetch one block's K/V payload from
@@ -390,6 +418,32 @@ class PagedCacheManager:
         self._chains: Dict[int, List[str]] = {}
         self._adapters: Dict[int, str] = {}
         self._share: Dict[int, bool] = {}
+        # ---- adapter block class (unified paging, see module docstring).
+        # One allocator unit is one HBM unit for both classes: a block's
+        # adapter payload capacity equals its K/V footprint (bytes of every
+        # block-addressed cache leaf per block, across periods).
+        bb = 0
+        for d in self.cache["layers"]:
+            for k, v in d.items():
+                if k in STATE_KEYS:
+                    continue
+                bb += (v.size // v.shape[1]) * v.dtype.itemsize
+        self.adapter_block_bytes = max(int(bb), 1)
+        self._adapter_pool = None                   # lazy [n_blocks, abb] u8
+        self.adapter_tables: Dict[str, List[int]] = {}
+        self._adapter_bytes: Dict[str, int] = {}    # true payload bytes
+        self._adapter_pins: Dict[str, int] = {}     # name -> pin count
+        self._adapter_lru: Dict[str, int] = {}      # name -> last-touch tick
+        self._adapter_tick = 0
+        self.adapter_swap_ins = 0                   # pool admits (H2D writes)
+        self.adapter_swap_in_bytes = 0
+        self.adapter_sheds = 0
+        # set by AdapterStore.attach_pager: notified before a shed victim's
+        # blocks are freed (the store re-archives dirty payloads), and a
+        # predicate marking adapters whose pool copy is REDUNDANT (bank-
+        # materialized and clean) — the cheapest shed victims
+        self.on_adapter_shed: Optional[Callable[[str], None]] = None
+        self.adapter_redundant_fn: Optional[Callable[[str], bool]] = None
 
     # -- budget --------------------------------------------------------------
     @property
@@ -440,17 +494,28 @@ class PagedCacheManager:
         return max(self.reserved.get(slot, 0) - len(self.tables[slot]), 0)
 
     @property
+    def reclaimable_adapter_blocks(self) -> int:
+        """Blocks held by UNPINNED resident adapters — sheddable on demand
+        (cold-LRU) when KV admission or growth needs the capacity.  A
+        pinned adapter (any scheduled row uses it) is working state, not
+        cache, and never counts."""
+        return sum(len(t) for n, t in self.adapter_tables.items()
+                   if not self._adapter_pins.get(n, 0))
+
+    @property
     def reclaimable_blocks(self) -> int:
-        """Blocks held only by the hash index (ref == 1) — pure cache,
-        sheddable on demand by ``try_admit``/``grow``/CoW.  The scheduler's
-        admission gate must count these as available, or index-held blocks
-        would starve admission forever.  Evaluated every tick, and the
-        index can approach pool size — so one vectorized refcount gather,
-        not a per-block Python loop."""
+        """Blocks held only by the hash index (ref == 1) plus unpinned
+        resident adapters' blocks — pure cache, sheddable on demand by
+        ``try_admit``/``grow``/CoW.  The scheduler's admission gate must
+        count these as available, or cache-held blocks would starve
+        admission forever.  Evaluated every tick, and the index can
+        approach pool size — so one vectorized refcount gather, not a
+        per-block Python loop."""
+        n = self.reclaimable_adapter_blocks
         if not self._hashed:
-            return 0
+            return n
         bids = np.fromiter(self._hashed, np.int64, len(self._hashed))
-        return int(np.count_nonzero(self.allocator.ref[bids] == 1))
+        return n + int(np.count_nonzero(self.allocator.ref[bids] == 1))
 
     @property
     def hash_blocks_resident(self) -> int:
@@ -460,9 +525,9 @@ class PagedCacheManager:
     @property
     def pristine(self) -> bool:
         """Post-drain invariant: no live tables, no reservation debt, and
-        every non-free block is held ONLY by the hash index (pure cache,
-        fully reclaimable).  The leak check benches and tests gate on —
-        cache residency is not a leak."""
+        every non-free block is held ONLY by the hash index or an unpinned
+        resident adapter (pure cache, fully reclaimable).  The leak check
+        benches and tests gate on — cache residency is not a leak."""
         return (not self.tables and self._debt == 0
                 and self.allocator.n_free + self.reclaimable_blocks
                 == self.allocator.usable)
@@ -550,12 +615,13 @@ class PagedCacheManager:
         fresh_need = need - len(shared)          # lifetime charge at the gate
         fresh_now = max(now_need - len(shared), 0)
         if fresh_need > self.free_blocks:
-            # shed idle index blocks (zero-hit first, then coldest) to make
-            # room — but never the run this admission is about to adopt
+            # shed idle cache to make room — index blocks first (zero-hit,
+            # then coldest), unpinned adapters after — but never the run
+            # this admission is about to adopt
             protect = frozenset(shared)
-            while self._index and fresh_need > self.free_blocks:
-                if not self._shed_one(protect=protect):
-                    break
+            while (fresh_need > self.free_blocks
+                   and self._shed_any(protect_blocks=protect)):
+                pass
             if fresh_need > self.free_blocks:
                 return None
         for k, bid in zip(adopt_keys, shared):
@@ -618,10 +684,11 @@ class PagedCacheManager:
                 break                       # transient overshoot, pool dry
             d0 = self._debt_of(slot)
             bid = self.allocator.alloc()
-            # shedding an idle index block (ref == 1) is free compared with
-            # the alternatives — a KVAccountingError here or, under lending,
-            # an engine preemption that recomputes a whole context
-            while bid is None and self._shed_one():
+            # shedding an idle index block (ref == 1) or a cold unpinned
+            # adapter is free compared with the alternatives — a
+            # KVAccountingError here or, under lending, an engine
+            # preemption that recomputes a whole context
+            while bid is None and self._shed_any():
                 bid = self.allocator.alloc()
             if bid is None:
                 if within and self.over_admit <= 1.0:
@@ -787,6 +854,163 @@ class PagedCacheManager:
             n += 1
         return n
 
+    # -- adapter block class (unified paging) --------------------------------
+    def adapter_blocks_of(self, nbytes: int) -> int:
+        """Pool blocks a payload of ``nbytes`` occupies (>= 1: even a
+        zero-rank curiosity owns a block — its table must hold the
+        residency)."""
+        return max(-(-int(nbytes) // self.adapter_block_bytes), 1)
+
+    def adapter_resident(self, name: str) -> bool:
+        return name in self.adapter_tables
+
+    @property
+    def adapter_blocks_resident(self) -> int:
+        """Gauge: pool blocks currently holding adapter payloads."""
+        return sum(len(t) for t in self.adapter_tables.values())
+
+    def _adapter_touch(self, name: str):
+        self._adapter_tick += 1
+        self._adapter_lru[name] = self._adapter_tick
+
+    def adapter_admit(self, name: str, payload: np.ndarray,
+                      shed: bool = True) -> bool:
+        """Admit an adapter's flattened weight payload into the shared pool
+        (the H2D swap-in): allocate ``adapter_blocks_of(payload)`` blocks
+        from the SAME free list KV admission spends, scatter the bytes into
+        the adapter payload pool, and record the table.  Spends only the
+        gate's spendable budget (``free_blocks`` — so outstanding KV
+        reservation debt is honored and the conservative ``n_free >= debt``
+        invariant survives), shedding idle index blocks then colder
+        unpinned adapters when short (``shed=False`` = opportunistic
+        preload: admit only into genuinely free capacity).  Returns False
+        when the pool cannot take the payload — the caller falls back to
+        bank-only residency or defers the request."""
+        if name in self.adapter_tables:
+            self._adapter_touch(name)
+            return True
+        flat = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
+        n = self.adapter_blocks_of(flat.nbytes)
+        if shed:
+            while (n > self.free_blocks
+                   and self._shed_any(protect_adapters=frozenset((name,)))):
+                pass
+        if n > self.free_blocks:
+            return False
+        bids = self.allocator.alloc_many(n)
+        if bids is None:                     # free_blocks <= n_free always
+            raise KVAccountingError(
+                "adapter admission gate passed but the pool cannot back it")
+        abb = self.adapter_block_bytes
+        buf = np.zeros((n, abb), np.uint8)
+        buf.reshape(-1)[:flat.size] = flat
+        if self._adapter_pool is None:
+            self._adapter_pool = jnp.zeros(
+                (self.allocator.n_blocks, abb), jnp.uint8)
+        self._adapter_pool = _adapter_write(
+            self._adapter_pool, jnp.asarray(bids, jnp.int32),
+            jnp.asarray(buf))
+        self.adapter_tables[name] = bids
+        self._adapter_bytes[name] = int(flat.size)
+        self._adapter_touch(name)
+        self.adapter_swap_ins += 1
+        self.adapter_swap_in_bytes += int(flat.size)
+        self._touch_lent()
+        return True
+
+    def adapter_gather(self, name: str) -> np.ndarray:
+        """Materialize a resident adapter's payload from its pool blocks
+        (the read side of the paged view: the store unflattens this into
+        the BGMV/smlm bank layout on acquire)."""
+        bids = self.adapter_tables[name]
+        self._adapter_touch(name)
+        flat = np.asarray(
+            self._adapter_pool[jnp.asarray(bids, jnp.int32)]).reshape(-1)
+        return flat[:self._adapter_bytes[name]]
+
+    def adapter_refresh(self, name: str, payload: np.ndarray):
+        """Rewrite a resident adapter's payload in place (training
+        write-back: rank is fixed per adapter, so the footprint cannot
+        change).  Not counted as a swap-in — the fresh bytes were produced
+        on-device."""
+        if name not in self.adapter_tables:
+            return
+        flat = np.ascontiguousarray(payload).view(np.uint8).reshape(-1)
+        bids = self.adapter_tables[name]
+        if self.adapter_blocks_of(flat.nbytes) != len(bids):
+            raise KVAccountingError(
+                f"adapter {name!r} refresh changed its block footprint")
+        buf = np.zeros((len(bids), self.adapter_block_bytes), np.uint8)
+        buf.reshape(-1)[:flat.size] = flat
+        self._adapter_pool = _adapter_write(
+            self._adapter_pool, jnp.asarray(bids, jnp.int32),
+            jnp.asarray(buf))
+        self._adapter_bytes[name] = int(flat.size)
+        self._adapter_touch(name)
+
+    def adapter_free(self, name: str):
+        """Drop an adapter's pool residency: decref every table block back
+        to the shared free list."""
+        for bid in self.adapter_tables.pop(name, []):
+            self.allocator.decref(bid)
+        self._adapter_bytes.pop(name, None)
+        self._adapter_lru.pop(name, None)
+
+    def adapter_pin(self, name: str):
+        """Pin an adapter against shedding while any scheduled row uses it.
+        Pins are counted by NAME, so pinning before (or without) pool
+        residency is valid — a later admit is born protected."""
+        self._adapter_pins[name] = self._adapter_pins.get(name, 0) + 1
+
+    def adapter_unpin(self, name: str):
+        n = self._adapter_pins.get(name, 0) - 1
+        if n <= 0:
+            self._adapter_pins.pop(name, None)
+        else:
+            self._adapter_pins[name] = n
+
+    def _shed_adapter(self, protect: frozenset = frozenset()) -> bool:
+        """Evict one unpinned adapter's pool blocks.  Victim order:
+        REDUNDANT copies first (``adapter_redundant_fn``: bank-materialized
+        and clean — dropping the pool copy costs nothing while the bank
+        copy lives), then coldest LRU.  ``on_adapter_shed`` fires before
+        the blocks are freed so the owner can archive a dirty payload.
+        Pinned adapters are never candidates — a pinned adapter block can
+        be neither shed nor lent (it is already allocated; lending only
+        hands out FREE blocks)."""
+        cands = [n for n in self.adapter_tables
+                 if n not in protect and not self._adapter_pins.get(n, 0)]
+        if not cands:
+            return False
+        redundant = ([n for n in cands if self.adapter_redundant_fn(n)]
+                     if self.adapter_redundant_fn is not None else [])
+        pool = redundant or cands
+        victim = min(pool, key=lambda n: self._adapter_lru.get(n, 0))
+        if self.on_adapter_shed is not None:
+            self.on_adapter_shed(victim)
+        self.adapter_free(victim)
+        self.adapter_sheds += 1
+        return True
+
+    def _shed_any(self, protect_blocks: frozenset = frozenset(),
+                  protect_adapters: frozenset = frozenset()) -> bool:
+        """One unit of cache pressure: shed an idle index block if any,
+        else an unpinned adapter.  Index blocks go first — re-admitting a
+        shed adapter costs one H2D transfer; recomputing a shed prefix
+        block costs a prefill pass, but the index's hit-aging already
+        orders those well and adapters tend to be the hotter working
+        set."""
+        return (self._shed_one(protect=protect_blocks)
+                or self._shed_adapter(protect=protect_adapters))
+
+    def flush_adapters(self) -> int:
+        """Shed every unpinned resident adapter (drain/leak checks).
+        Returns adapters shed."""
+        n = 0
+        while self._shed_adapter():
+            n += 1
+        return n
+
     def import_block(self, key: str, src: "PagedCacheManager",
                      src_bid: int) -> Optional[int]:
         """Fetch one content-addressed block from a sibling manager's pool
@@ -854,9 +1078,8 @@ class PagedCacheManager:
         def _spendable():
             return (self.free_blocks if self.over_admit <= 1.0
                     else self.allocator.n_free)
-        while self._index and _spendable() <= 0:
-            if not self._shed_one():
-                break
+        while _spendable() <= 0 and self._shed_any():
+            pass
         new = self.allocator.alloc() if _spendable() > 0 else None
         if new is None:
             raise OutOfBlocksError("out of KV blocks during copy-on-write")

@@ -51,6 +51,11 @@ class Request:
     recount_pending: bool = False      # preempted and not yet re-prefilled:
     # the next admission charges its recomputed suffix to
     # ``Metrics.preempted_tokens_recomputed``
+    adapter_retained: bool = False     # this request holds a retain (and,
+    # under unified paging, a pool pin) on its adapter.  Kept across
+    # preemption — evicting the victim's adapter while it waits at the
+    # head of the queue would just swap it straight back (thrash) — and
+    # dropped at finish/failure
 
     @property
     def prompt_len(self) -> int:

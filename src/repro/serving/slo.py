@@ -85,6 +85,17 @@ class Metrics:
     # recomputed locally — charged at CostModel.remote_per_block)
     remote_fetch_blocks: int = 0
     remote_fetch_time: float = 0.0
+    # adapter residency accounting (unified adapter paging / LRU bank).
+    # ``adapter_swap_ins`` counts host->device adapter payload transfers
+    # during serving (charged at CostModel.adapter_swap_fixed + per byte);
+    # ``adapter_resident_hits`` counts acquires served with no host
+    # traffic (bank hit or pool-resident gather).
+    adapter_swap_ins: int = 0
+    adapter_swap_in_bytes: int = 0
+    adapter_resident_hits: int = 0
+    adapter_blocks_resident: int = 0   # gauge: pool blocks holding adapter
+    #                              payloads at last step (unified paging)
+    adapter_peak_coresident: int = 0   # max adapters simultaneously in HBM
     # over-admission / preemption accounting.  Preempted requests keep
     # their arrival and t_first_token, so the SLO cost of a preemption is
     # visible as decode latency; these count the mechanism itself.

@@ -1,0 +1,350 @@
+"""Unified KV + adapter paging: true-rank flatten/unflatten exactness,
+variable block footprints, shed/pin semantics over the shared pool,
+adapter-residency-aware scheduling (co-batching, starvation bound,
+preemption anti-thrash), swap-in clock charges, and end-to-end
+byte-exactness of serving with paging on vs off."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.models.schema import init_params
+from repro.serving.clock import CostModel, VirtualClock
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import PagedCacheManager
+from repro.serving.request import Request, State
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+CFG = get_reduced("llama3-8b")
+
+
+def _mgr(capacity=4, n_blocks=32, s_max=64, bs=16):
+    return PagedCacheManager(CFG, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks)
+
+
+def _store(n_slots=3, r=8, seed=0):
+    return AdapterStore(CFG, LoRAConfig(n_slots=n_slots, r=r),
+                        jax.random.PRNGKey(seed))
+
+
+def _load(store, names_ranks, seed=100):
+    for i, (name, rk) in enumerate(names_ranks):
+        store.load_random(name, jax.random.PRNGKey(seed + i), rank=rk,
+                          evict=True)
+
+
+def _bank_np(store):
+    return jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(np.asarray, store.bank))
+
+
+# ------------------------------------------------- flatten / unflatten
+def test_true_rank_round_trip_bit_exact():
+    """The paged view must be lossless: bank contents are byte-identical
+    whether an adapter arrives via direct load or via the pool round-trip
+    (flatten -> blocks -> gather -> unflatten), at every true rank."""
+    pairs = [("a1", 1), ("a2", 3), ("a3", 8)]
+    s_plain = _store()
+    _load(s_plain, pairs)
+    s_paged = _store()
+    _load(s_paged, pairs)
+    m = _mgr()
+    s_paged.attach_pager(m)
+    for a, b in zip(_bank_np(s_plain), _bank_np(s_paged)):
+        assert np.array_equal(a, b)
+    # pool payload is exactly the archived byte image
+    for name, _ in pairs:
+        assert np.array_equal(m.adapter_gather(name),
+                              s_paged._archive[name][0])
+    # full retire (bank + pool) then re-acquire must restore the bank
+    # byte-for-byte through a counted swap-in
+    before = _bank_np(s_paged)
+    s_paged.unload("a2")
+    while m.adapter_resident("a2"):
+        assert m._shed_adapter(frozenset())
+    swaps0 = s_paged.swap_ins
+    s_paged.acquire("a2")
+    assert s_paged.swap_ins == swaps0 + 1
+    for a, b in zip(before, _bank_np(s_paged)):
+        assert np.array_equal(a, b)
+
+
+def test_variable_block_counts_by_rank():
+    """Heterogeneous true ranks cost proportionally many pool blocks: a
+    rank-2k adapter's payload is exactly twice a rank-k one's."""
+    s = _store(r=8)
+    _load(s, [("r2", 2), ("r4", 4), ("r8", 8)])
+    m = _mgr(n_blocks=64)
+    s.attach_pager(m)
+    n2 = len(m.adapter_tables["r2"])
+    n4 = len(m.adapter_tables["r4"])
+    n8 = len(m.adapter_tables["r8"])
+    assert s.adapter_nbytes("r4") == 2 * s.adapter_nbytes("r2")
+    assert s.adapter_nbytes("r8") == 4 * s.adapter_nbytes("r2")
+    assert n2 <= n4 <= n8 and n8 > n2
+    assert m.adapter_blocks_resident == n2 + n4 + n8
+    # and the pool meters them against the same accounting KV blocks use
+    assert m.reclaimable_adapter_blocks == n2 + n4 + n8
+    assert m.reclaimable_blocks >= n2 + n4 + n8
+
+
+# -------------------------------------------------- shed / pin semantics
+def test_pinned_adapter_never_shed_under_kv_pressure():
+    """KV admission sheds cold adapters for blocks — but never a pinned
+    one, no matter the pressure."""
+    m = _mgr(n_blocks=12, bs=16)
+    pay = np.arange(3 * m.adapter_block_bytes, dtype=np.uint8)
+    assert m.adapter_admit("pinned", pay)
+    assert m.adapter_admit("cold", pay[: m.adapter_block_bytes])
+    m.adapter_pin("pinned")
+    prompt = np.zeros((16,), np.int32)
+    admitted = 0
+    while m.try_admit(prompt, max_new=48, adapter=str(admitted)) is not None:
+        admitted += 1
+    assert admitted >= 1
+    assert m.adapter_resident("pinned"), "pinned adapter was shed"
+    assert not m.adapter_resident("cold"), "pressure never reached adapters"
+    assert np.array_equal(m.adapter_gather("pinned"), pay)
+    m.adapter_unpin("pinned")
+
+
+def test_redundant_pool_copies_shed_first():
+    """Victim order: a bank-materialized clean adapter's pool copy is free
+    to drop (the bank copy lives) and must go before a colder pool-only
+    adapter."""
+    m = _mgr(n_blocks=32)
+    pay = np.arange(m.adapter_block_bytes, dtype=np.uint8)
+    m.adapter_admit("older", pay)       # colder, NOT redundant
+    m.adapter_admit("newer", pay)       # hotter, but redundant
+    m.adapter_redundant_fn = lambda n: n == "newer"
+    assert m._shed_adapter(frozenset())
+    assert m.adapter_resident("older")
+    assert not m.adapter_resident("newer")
+
+
+def test_acquire_raises_when_pool_and_bank_are_saturated():
+    """With the pool fully held by KV working state and every bank slot
+    retained, a host-archived adapter cannot come in: acquire raises
+    RuntimeError and the engine defers the request (no crash, no leak)."""
+    s = _store(n_slots=2, r=8)
+    _load(s, [("a", 8), ("b", 8), ("c", 8)])      # c evicts a from the bank
+    m = _mgr(capacity=2, n_blocks=6, bs=16, s_max=64)
+    s.attach_pager(m)
+    m.flush_adapters()                             # pool: adapters out
+    for name in list(s.resident):
+        s.retain(name)                             # bank: all slots held
+    victim = next(n for n in ("a", "b", "c") if n not in s._slots)
+    # occupy every pool block with KV state (tables hold refs, not index)
+    got = m.try_admit(np.zeros((16,), np.int32), max_new=64)
+    assert got is not None
+    m.grow(got[0], 64)
+    with pytest.raises(RuntimeError):
+        s.acquire(victim)
+    for name in list(s.resident):
+        s.release(name)
+
+
+# ------------------------------------------- residency-aware scheduling
+def _req(rid, adapter, arrival=0.0, plen=8, max_new=4):
+    return Request(rid=rid, prompt=np.zeros((plen,), np.int32),
+                   adapter=adapter, max_new_tokens=max_new, arrival=arrival)
+
+
+def test_scheduler_cobatches_same_adapter():
+    """Greedy selection: once a cold adapter's first request is picked,
+    same-adapter waiters become warm and cluster into the same tick —
+    one swap-in amortized over the co-batch."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_tick=4), capacity=8)
+    waiting = [_req(0, "A"), _req(1, "B"), _req(2, "A")]
+    d = sched.decide(waiting, 0, 8, 4, False,
+                     adapter_fn=lambda r: False, now=0.0)
+    assert [r.rid for r in d.admit] == [0, 2, 1]
+
+
+def test_scheduler_prefers_resident_adapters():
+    """A resident-adapter waiter outranks an earlier-but-cold one (within
+    the fairness ramp)."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_tick=2), capacity=8)
+    waiting = [_req(0, "cold", arrival=0.0), _req(1, "warm", arrival=0.1)]
+    d = sched.decide(waiting, 0, 8, 4, False,
+                     adapter_fn=lambda r: r.adapter == "warm", now=0.2)
+    assert [r.rid for r in d.admit] == [1, 0]
+
+
+def test_scheduler_cold_adapter_cannot_starve_past_ramp():
+    """The affinity bonus is capped strictly below the ramp's saturation:
+    a cold request that has waited past ``prefix_ramp_s`` outranks every
+    fresh resident-adapter arrival."""
+    c = SchedulerConfig(max_prefill_per_tick=1, prefix_ramp_s=1.0)
+    sched = Scheduler(c, capacity=8)
+    cold = _req(0, "cold", arrival=0.0)
+    warm = [_req(i, "warm", arrival=1.95) for i in range(1, 4)]
+    d = sched.decide([cold] + warm, 0, 8, 4, False,
+                     adapter_fn=lambda r: r.adapter == "warm", now=2.0)
+    assert [r.rid for r in d.admit] == [0]
+
+
+def test_scheduler_static_order_unchanged_without_adapter_fn():
+    """adapter_fn=None must reproduce the pre-paging admission order
+    byte-for-byte (the static-partition baseline is untouched)."""
+    sched = Scheduler(SchedulerConfig(max_prefill_per_tick=4), capacity=8)
+    waiting = [_req(i, "x", arrival=0.01 * i) for i in range(4)]
+    d = sched.decide(list(waiting), 0, 8, 4, False, now=1.0)
+    assert [r.rid for r in d.admit] == [0, 1, 2, 3]
+
+
+# ------------------------------------------------------------- engine e2e
+def _engine(adapter_paging, n_adapters=6, n_slots=3, seed=0, **kw):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    store = AdapterStore(CFG, LoRAConfig(n_slots=n_slots, r=4),
+                         jax.random.PRNGKey(seed + 1))
+    eng = UnifiedEngine(MixedLoraModel(CFG, params, store), EngineConfig(
+        capacity=4, pf_capacity=2, s_max=64, virtual_time=True,
+        block_size=16, adapter_paging=adapter_paging,
+        **{"n_blocks": 48, **kw}))
+    ranks = [1, 2, 4]
+    for i in range(n_adapters):
+        store.load_random(f"ad{i}", jax.random.PRNGKey(10 + i),
+                          rank=ranks[i % 3], evict=True)
+    return eng
+
+
+def _submit_zipf(eng, n=12, n_adapters=6, plen=8, max_new=6, seed=7):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, CFG.vocab, plen).astype(np.int32),
+            adapter=f"ad{i % n_adapters}", max_new_tokens=max_new,
+            arrival=0.02 * i))
+
+
+def test_e2e_byte_exact_paging_on_vs_off():
+    """Unified paging changes WHERE adapter bytes live and WHEN requests
+    are scheduled — never what they compute.  Same trace, both arms:
+    byte-identical outputs, no pin leaks, pool drains pristine."""
+    outs = {}
+    for paging in (False, True):
+        eng = _engine(paging)
+        _submit_zipf(eng)
+        m = eng.run(max_ticks=4000)
+        assert len(eng.finished) == 12
+        assert all(r.state is State.DONE for r in eng.finished)
+        outs[paging] = {r.rid: list(r.output) for r in eng.finished}
+        cm = eng.cachemgr
+        assert all(v == 0 for v in cm._adapter_pins.values()), "pin leak"
+        assert cm.pristine
+        if paging:
+            # resident gathers served the hot set without host traffic
+            assert m.adapter_resident_hits > 0
+            assert m.adapter_peak_coresident >= 3
+            assert m.adapter_blocks_resident > 0
+            # with the pool holding all six adapters the unified arm never
+            # re-pays a swap the static bank would have charged
+            assert m.adapter_swap_ins <= eng.metrics.adapter_swap_ins
+    assert outs[False] == outs[True]
+
+
+def test_cobatched_requests_amortize_one_swap_in():
+    """Three same-adapter requests arriving together: the tick's batch
+    resolve acquires the adapter ONCE, so exactly one swap-in is counted
+    (and clock-charged) for the whole co-batch."""
+    eng = _engine(True, n_adapters=3, n_slots=2)
+    store = eng.model.store
+    # archive-retire ad0 everywhere: next acquire must swap in
+    if "ad0" in store._slots:
+        store.unload("ad0")
+    while eng.cachemgr.adapter_resident("ad0"):
+        assert eng.cachemgr._shed_adapter(frozenset())
+    assert not store.is_resident("ad0")
+    swaps0 = store.swap_ins
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, CFG.vocab, 8).astype(np.int32),
+            adapter="ad0", max_new_tokens=4, arrival=0.0))
+    assert eng.tick()
+    admitted = sum(1 for r in list(eng.active.values())
+                   + list(eng.prefilling.values()) if r.adapter == "ad0")
+    assert admitted >= 2
+    assert store.swap_ins == swaps0 + 1, "co-batch paid more than one swap"
+    eng.run(max_ticks=2000)
+    assert store.swap_ins == swaps0 + 1
+    assert len(eng.finished) == 3
+
+
+def test_preemption_keeps_victims_adapter_resident():
+    """Recompute preemption must not thrash the victim's adapter: the
+    retain is kept across the requeue, so the adapter can be neither
+    bank-evicted nor pool-shed while the victim waits, and resuming costs
+    zero swap-ins."""
+    eng = _engine(True, n_adapters=2, n_slots=2, n_blocks=8,
+                  over_admit=2.0)
+    store = eng.model.store
+    rng = np.random.default_rng(11)
+    for i in range(3):
+        eng.submit(Request(
+            rid=i, prompt=rng.integers(0, CFG.vocab, 8).astype(np.int32),
+            adapter="ad0", max_new_tokens=40, arrival=0.1 * i))
+    swaps0 = store.swap_ins
+    eng.run(max_ticks=5000)
+    assert eng.metrics.preemptions >= 1
+    assert len(eng.finished) == 3
+    assert all(r.state is State.DONE for r in eng.finished)
+    assert store.swap_ins == swaps0, "preemption thrashed the adapter"
+    assert all(not r.adapter_retained for r in eng.finished)
+    assert all(v == 0 for v in eng.cachemgr._adapter_pins.values())
+
+
+def test_unknown_adapter_fails_cleanly_without_leaks():
+    eng = _engine(True, n_adapters=1)
+    eng.submit(Request(rid=0, prompt=np.zeros((8,), np.int32),
+                       adapter="nope", max_new_tokens=4, arrival=0.0))
+    eng.submit(Request(rid=1, prompt=np.zeros((8,), np.int32),
+                       adapter="ad0", max_new_tokens=4, arrival=0.0))
+    eng.run(max_ticks=2000)
+    by = {r.rid: r for r in eng.finished}
+    assert by[0].state is State.FAILED
+    assert by[1].state is State.DONE
+    assert all(v == 0 for v in eng.cachemgr._adapter_pins.values())
+    assert eng.cachemgr.pristine
+
+
+# ------------------------------------------------------------- clock
+def test_clock_charges_adapter_swaps():
+    clk = VirtualClock(CostModel())
+    c = clk.cost
+    assert clk.step_cost(0, 0, 0) == 0.0
+    got = clk.step_cost(0, 0, 0, adapter_swaps=2, adapter_swap_bytes=1000)
+    assert got == pytest.approx(c.fixed + 2 * c.adapter_swap_fixed
+                                + 1000 * c.adapter_h2d_per_byte)
+    # swap charges stack on top of compute charges
+    base = clk.step_cost(16, 2, 0)
+    with_swap = clk.step_cost(16, 2, 0, adapter_swaps=1)
+    assert with_swap == pytest.approx(base + c.adapter_swap_fixed)
+
+
+def test_trained_adapter_syncs_before_shed():
+    """mark_dirty + pool shed must write the bank's newer weights back to
+    the host archive, so a later swap-in restores the TRAINED adapter."""
+    s = _store(n_slots=2, r=4)
+    _load(s, [("tr", 4)])
+    m = _mgr(n_blocks=32)
+    s.attach_pager(m)
+    # simulate a training update: perturb the bank slot, mark dirty
+    slot = s.slot_of("tr")
+    s.bank = jax.tree_util.tree_map(
+        lambda x: x.at[..., slot, :, :].add(1.0), s.bank)
+    s.mark_dirty("tr")
+    trained = [np.asarray(x) for x in
+               jax.tree_util.tree_leaves(s.get_adapter("tr"))]
+    while m.adapter_resident("tr"):
+        assert m._shed_adapter(frozenset())     # fires the sync callback
+    s.unload("tr")                              # retire the bank copy too
+    s.acquire("tr")                             # swap back in from archive
+    got = [np.asarray(x) for x in
+           jax.tree_util.tree_leaves(s.get_adapter("tr"))]
+    for a, b in zip(trained, got):
+        assert np.array_equal(a, b)

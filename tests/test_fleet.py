@@ -324,27 +324,31 @@ def test_fleet_exact_under_preemption_churn():
 # ------------------------------------------- fleet conservation (hypothesis)
 @_hyp(lambda: [settings(max_examples=15, deadline=None),
                given(ops=st.lists(st.tuples(st.integers(0, 1),
-                                            st.integers(0, 6),
+                                            st.integers(0, 8),
                                             st.integers(0, 7),
                                             st.integers(0, 80)),
                                   min_size=1, max_size=50),
                      over_admit=st.sampled_from([1.0, 1.75]))])
 def test_fleet_block_conservation_property(ops, over_admit):
     """The single-pool conservation property, extended across a 2-replica
-    fleet with cross-pool imports in the op mix: every manager keeps
-    refcount == table + index holds with a mirrored free list, the fleet
-    index stays a bijection with the local indexes (no stale entries,
-    ever), and a full drain of ALL replicas leaves every pool pristine
-    with flush reclaiming everything."""
+    fleet with cross-pool imports AND per-replica adapter paging in the op
+    mix: every manager keeps refcount == table + index + adapter-table
+    holds with a mirrored free list, the fleet index stays a bijection
+    with the local indexes (no stale entries, ever), pinned adapters are
+    never shed by cross-class pressure, and a full drain of ALL replicas
+    leaves every pool pristine with flush reclaiming everything."""
     ms = [_mgr(capacity=4, n_blocks=13, s_max=96, bs=8,
                over_admit=over_admit) for _ in range(2)]
     fi = FleetIndex()
     for i, m in enumerate(ms):
         fi.attach(i, m)
     live = [[], []]
+    pins = [{}, {}]
     rng = np.random.default_rng(0)
     for who, kind, pick, amount in ops:
         m, lv = ms[who], live[who]
+        pinned_resident = {n for n, c in pins[who].items()
+                           if c > 0 and n in m.adapter_tables}
         if kind == 0:                                     # admit (+ adopt)
             prompt = rng.integers(0, 3, 1 + amount % 40).astype(np.int32)
             got = m.try_admit(prompt, max_new=amount % 48)
@@ -374,6 +378,22 @@ def test_fleet_block_conservation_property(ops, over_admit):
             if src._index:
                 key = sorted(src._index)[pick % len(src._index)]
                 m.import_block(key, src, src._index[key])
+        elif kind == 7:                                   # adapter admit
+            name = f"A{pick % 3}"
+            if name not in m.adapter_tables:
+                nb = 1 + (amount * 211) % (2 * m.adapter_block_bytes - 1)
+                m.adapter_admit(name,
+                                rng.integers(0, 256, nb).astype(np.uint8))
+        elif kind == 8:                                   # pin / unpin cycle
+            name = f"A{pick % 3}"
+            if pins[who].get(name, 0) and amount % 2:
+                m.adapter_unpin(name)
+                pins[who][name] -= 1
+            else:
+                m.adapter_pin(name)
+                pins[who][name] = pins[who].get(name, 0) + 1
+        assert pinned_resident <= set(m.adapter_tables), \
+            "a pinned adapter was shed"
         for mm in ms:
             _check_conservation(mm, over_admit)
         fi.check_bijection()
@@ -381,12 +401,17 @@ def test_fleet_block_conservation_property(ops, over_admit):
         for slot in live[who]:
             m.free(slot)
         _check_conservation(m, over_admit)
+        for name, c in list(pins[who].items()):
+            for _ in range(c):
+                m.adapter_unpin(name)
         assert m.pristine
     fi.check_bijection()
     assert fi.entries == sum(len(m._index) for m in ms)
     for m in ms:
+        m.flush_adapters()
         m.flush_index()
         assert m.allocator.n_free == m.allocator.usable
+        assert not m.adapter_tables and not m._adapter_pins
     assert len(fi) == 0 and fi.entries == 0
 
 

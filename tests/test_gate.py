@@ -118,7 +118,7 @@ def test_checked_in_gates_cover_the_ci_matrix():
     with open(_repo("benchmarks", "gates.json")) as f:
         gates = json.load(f)
     expected = {"paged", "spec", "prefix", "preempt", "dedup", "kernels",
-                "fleet"}
+                "fleet", "adapters"}
     assert expected <= set(gates)
     for name in expected:
         assert gates[name]["checks"], f"gate {name} is vacuous"
@@ -129,7 +129,8 @@ def test_checked_in_gates_cover_the_ci_matrix():
     # the workflow itself references the same matrix (no silent drift)
     with open(_repo(".github", "workflows", "ci.yml")) as f:
         ci = f.read()
-    assert "[paged, spec, prefix, preempt, dedup, kernels, fleet]" in ci
+    assert ("[paged, spec, prefix, preempt, dedup, kernels, fleet, "
+            "adapters]" in ci)
     assert "benchmarks/gate.py" in ci
 
 

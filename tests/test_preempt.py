@@ -405,6 +405,9 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
             held[b] = held.get(b, 0) + 1
     for b in m._hashed:                    # the index holds one ref per entry
         held[b] = held.get(b, 0) + 1
+    for t in m.adapter_tables.values():    # adapter payloads: one ref per
+        for b in t:                        # table entry, same pool
+            held[b] = held.get(b, 0) + 1
     free = set(a._free)
     assert len(free) == len(a._free), "free list holds duplicates"
     for bid in range(1, a.n_blocks):
@@ -431,24 +434,39 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
 
 
 @_hyp(lambda: [settings(max_examples=20, deadline=None),
-              given(ops=st.lists(st.tuples(st.integers(0, 5),
+              given(ops=st.lists(st.tuples(st.integers(0, 9),
                                            st.integers(0, 7),
                                            st.integers(0, 80)),
                                  min_size=1, max_size=60),
                     over_admit=st.sampled_from([1.0, 1.75]))])
 def test_block_conservation_property(ops, over_admit):
     """Randomized admit(+adopt)/commit(publish)/grow/truncate/finish
-    sequences over the content-hash index: refcounts must equal
-    table + index holds exactly, the free list must mirror ref==0, the
-    index must stay a stale-free bijection, debt must track per-slot
-    reservations (never spendable), no state slot may leak, and a full
-    drain + index flush must return the pool to pristine.  Prompts draw
-    from a 3-symbol alphabet so hash chains collide often and adoption /
-    publish-collision paths are actually exercised."""
+    sequences over the content-hash index — PLUS adapter-block-class ops
+    (admit / pin / unpin / shed) over the same pool: refcounts must equal
+    table + index + adapter-table holds exactly, the free list must mirror
+    ref==0, the index must stay a stale-free bijection, debt must track
+    per-slot reservations (never spendable), no state slot may leak, a
+    pinned adapter must never be shed (by explicit shed OR by KV-pressure
+    shedding inside try_admit/grow), surviving adapter payloads must
+    gather back byte-identical, and a full drain + flush must return the
+    pool to pristine.  Prompts draw from a 3-symbol alphabet so hash
+    chains collide often and adoption / publish-collision paths are
+    actually exercised."""
     m = _mgr(capacity=6, n_blocks=13, s_max=96, bs=8, over_admit=over_admit)
     live: list = []
+    payloads: dict = {}                    # name -> bytes we admitted
+    pins: dict = {}                        # name -> our pin count
     rng = np.random.default_rng(0)
+
+    def _adapters_ok():
+        for name in m.adapter_tables:
+            got = m.adapter_gather(name)
+            assert np.array_equal(got, payloads[name]), \
+                f"adapter {name} payload corrupted"
+
     for kind, pick, amount in ops:
+        pinned_resident = {n for n, c in pins.items()
+                           if c > 0 and n in m.adapter_tables}
         if kind == 0:                                     # admit (+ adopt)
             prompt = rng.integers(0, 3, 1 + amount % 40).astype(np.int32)
             got = m.try_admit(prompt, max_new=amount % 48)
@@ -474,12 +492,38 @@ def test_block_conservation_property(ops, over_admit):
         elif kind == 5 and live:                          # grow to capacity
             slot = live[pick % len(live)]
             m.grow(slot, m.reserved.get(slot, 1) * m.block_size)
+        elif kind == 6:                                   # adapter admit
+            name = f"A{pick % 4}"
+            if name not in m.adapter_tables:
+                # variable footprints: 1..3 blocks at this pool's geometry
+                nb = 1 + (amount * 211) % (3 * m.adapter_block_bytes - 1)
+                pay = rng.integers(0, 256, nb).astype(np.uint8)
+                if m.adapter_admit(name, pay):
+                    payloads[name] = pay
+        elif kind == 7:                                   # pin (pre-residency
+            name = f"A{pick % 4}"                         # pinning is legal)
+            m.adapter_pin(name)
+            pins[name] = pins.get(name, 0) + 1
+        elif kind == 8 and pins.get(f"A{pick % 4}", 0):   # unpin
+            name = f"A{pick % 4}"
+            m.adapter_unpin(name)
+            pins[name] -= 1
+        elif kind == 9:                                   # explicit pressure
+            m._shed_any()
+        assert pinned_resident <= set(m.adapter_tables), \
+            "a pinned adapter was shed"
+        _adapters_ok()
         _check_conservation(m, over_admit)
     for slot in live:                                     # drain
         m.free(slot)
     _check_conservation(m, over_admit)
-    assert m.pristine                      # leftovers are pure cache...
+    for name, c in list(pins.items()):     # drop our pins: leftovers are
+        for _ in range(c):                 # then pure cache...
+            m.adapter_unpin(name)
+    assert m.pristine
+    m.flush_adapters()
     m.flush_index()                        # ...and flushing reclaims all
     assert m.allocator.n_free == m.allocator.usable
     assert m.reserved_debt == 0
     assert not m._index and not m._hashed
+    assert not m.adapter_tables and not m._adapter_pins
