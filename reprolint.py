@@ -1,0 +1,22 @@
+"""Repo-root shim so ``python -m reprolint src tests`` works without
+installing anything: the real package lives in ``tools/reprolint`` (kept
+out of ``src/`` — it lints the product, it isn't part of it).
+
+Run via ``-m`` this file executes as ``__main__`` and the top-level name
+``reprolint`` stays free for the real package; imported by name, it
+replaces itself in ``sys.modules`` with the real package.
+"""
+import os
+import sys
+
+_TOOLS = os.path.join(os.path.dirname(os.path.abspath(__file__)), "tools")
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)
+
+if __name__ == "__main__":
+    sys.modules.pop("reprolint", None)
+    from reprolint.cli import main
+    sys.exit(main())
+else:
+    sys.modules.pop("reprolint", None)
+    import reprolint  # noqa: F401  (re-resolves to tools/reprolint)

@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lora import LoRAConfig, init_lora_bank
+from repro.errors import ConfigInvariantError, MigrationInvariantError
 from repro.models.configs import ModelConfig
 from repro.models.schema import lora_targets
 
@@ -231,9 +232,12 @@ class AdapterStore:
         pager.adapter_redundant_fn = (
             lambda n: n in self._slots and n not in self._dirty)
         for n in self._pinned:
+            # reprolint: ownership-transfer — mirrors an existing store
+            # pin; unpin happens when that pin is dropped
             pager.adapter_pin(n)
         for n, c in self._refs.items():
             for _ in range(c):
+                # reprolint: ownership-transfer — mirrors existing retains
                 pager.adapter_pin(n)
         for n in list(self._slots):
             self._ranks.setdefault(n, self.lcfg.r)
@@ -489,7 +493,8 @@ class VirtualModel:
 
     def __init__(self, name: str, base_params, store: AdapterStore,
                  mode: str = "infer"):
-        assert mode in ("infer", "train")
+        if mode not in ("infer", "train"):
+            raise ConfigInvariantError(f"unknown VirtualModel mode {mode!r}")
         self.name, self.base, self.store, self.mode = name, base_params, store, mode
 
     @property
@@ -507,7 +512,10 @@ class VirtualModel:
     @staticmethod
     def unvoid(voided: VoidedModel, base_params, store: AdapterStore,
                device=None, mode: str = "infer") -> "VirtualModel":
-        assert store.cfg.name == voided.cfg_name, "config mismatch on migration"
+        if store.cfg.name != voided.cfg_name:
+            raise MigrationInvariantError(
+                f"config mismatch on migration: store={store.cfg.name!r} "
+                f"voided={voided.cfg_name!r}")
         adapter = jax.tree_util.tree_map(
             lambda x: jax.device_put(jnp.asarray(x), device), voided.adapter)
         store.load(voided.name, adapter, voided.scale)

@@ -25,6 +25,24 @@ def bgmv_ref(x: jax.Array, a: jax.Array, b: jax.Array, ids: jax.Array,
     return y.astype(x.dtype)
 
 
+def decode_attention_ref(q: jax.Array, k: jax.Array,
+                         v: jax.Array, pos: jax.Array) -> jax.Array:
+    """Linear/rolling-cache batch-decode oracle.  The cache holds ``sc``
+    slots; for positions past ``sc`` the buffer has wrapped, so each slot's
+    absolute position is reconstructed the same way the model does it
+    (``_dec_cache_pos``): slot ``j`` holds the latest written position
+    ``<= pos`` that is congruent to ``j`` mod ``sc``.
+    q: [B, h, hd]; k/v: [B, sc, g, hd]; pos: [B] (absolute)."""
+    from repro.models.layers import attention
+    sc = k.shape[1]
+    j = jnp.arange(sc, dtype=jnp.int32)[None, :]
+    p = pos[:, None].astype(jnp.int32)
+    k_pos = j + sc * jnp.floor_divide(p - j, sc)
+    k_valid = j <= p
+    return attention(q[:, None], k, v, q_pos=p, k_pos=k_pos,
+                     k_valid=k_valid, causal=True, window=0)[:, 0]
+
+
 def paged_decode_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                      block_tables: jax.Array, pos: jax.Array) -> jax.Array:
     """Block-table batch-decode oracle: gather each request's blocks into a

@@ -173,6 +173,7 @@ class UnifiedEngine:
         # training adapters must never be evicted: their slot identity is
         # baked into the trainer mask and optimizer state (pinning a name
         # before its load is fine — the pin is checked against residents)
+        # reprolint: ownership-transfer — pin lives for the trainer's life
         self.model.store.pin(tr.name)
 
     def trainers_pending(self) -> bool:
@@ -324,6 +325,8 @@ class UnifiedEngine:
         unknown: set = set()
         deferred: set = set()
 
+        # reprolint: ownership-transfer — holds land in ``resolved``; the
+        # finally around _admit_loop releases every one exactly once
         def _resolve(name: str):
             if name in resolved or name in unknown or name in deferred:
                 return
@@ -447,9 +450,12 @@ class UnifiedEngine:
             out = self.forward_step(self.model.base, store.bank, store.scale,
                                     batch, cache)
             grads = None
-        jax.block_until_ready(out.dec_logits if out.dec_logits is not None
-                              else (out.pf_logits if out.pf_logits is not None
-                                    else out.ft_loss_sum))
+        # the ONE deliberate step barrier: the clock charges a finished
+        # step, and the scatter below needs its logits anyway
+        jax.block_until_ready(  # reprolint: sync-point
+            out.dec_logits if out.dec_logits is not None
+            else (out.pf_logits if out.pf_logits is not None
+                  else out.ft_loss_sum))
 
         # ---- time accounting (suffix tokens only: skipped prefix spans
         # cost nothing, which is the whole point of the reuse) ----
@@ -474,7 +480,8 @@ class UnifiedEngine:
         if out.cache is not None:
             self.cachemgr.update(out.cache)
         if pf_reqs:
-            pf_logits = np.asarray(out.pf_logits)
+            # scheduling reads the sampled token: a required sync boundary
+            pf_logits = np.asarray(out.pf_logits)  # reprolint: sync-point
             assignments, lengths = [], []
             finals: List[Request] = []
             for i, (r, take, final) in enumerate(chunks):
@@ -520,7 +527,8 @@ class UnifiedEngine:
             for r in finals:
                 self._maybe_finish(r, now)
         if use_dec:
-            dec_logits = np.asarray(out.dec_logits)
+            # argmax/accept decisions drive the next tick's inputs
+            dec_logits = np.asarray(out.dec_logits)  # reprolint: sync-point
             for slot, r in list(self.active.items()):
                 if r.state is not State.DECODE or slot not in planned:
                     continue    # just (re-)prefilled this tick: no dec row
@@ -540,8 +548,9 @@ class UnifiedEngine:
                     self._maybe_finish(r, now)
 
         if ft_rows:
-            losses = np.asarray(out.ft_loss_sum)
-            counts = np.asarray(out.ft_tok_count)
+            # per-trainer loss bookkeeping happens on host once per step
+            losses = np.asarray(out.ft_loss_sum)  # reprolint: sync-point
+            counts = np.asarray(out.ft_tok_count)  # reprolint: sync-point
             per_row = losses / np.maximum(counts, 1.0)
             self.grad_accum = tree_add(self.grad_accum, grads)
             by_trainer: Dict[str, List] = {}
@@ -634,6 +643,9 @@ class UnifiedEngine:
             if r.adapter and not r.adapter_retained:
                 # a preempted request kept its retain across the requeue
                 # (anti-thrash) — only first admission takes a new hold
+                # reprolint: ownership-transfer — the hold moves onto the
+                # request (adapter_retained); _drop_retain releases it at
+                # finish/failure, never at preemption
                 self.model.store.retain(r.adapter)
                 r.adapter_retained = True
             r.dec_slot = slot

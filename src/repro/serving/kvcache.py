@@ -93,6 +93,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.errors import ConfigInvariantError, InvariantError
 from repro.models.configs import ModelConfig
 from repro.models.model import init_cache, init_paged_cache, STATE_KEYS
 
@@ -146,7 +147,7 @@ def _copy_block_from(dst_cache, src_cache, src: jax.Array, dst: jax.Array):
     return {"layers": layers}
 
 
-class KVAccountingError(RuntimeError):
+class KVAccountingError(InvariantError):
     """A block-accounting invariant was violated: refcount misuse, or a
     within-reservation ``grow`` finding an empty pool under the conservative
     gate (which guarantees ``n_free >= debt``).  A real exception — not an
@@ -294,7 +295,9 @@ class BlockAllocator:
     """
 
     def __init__(self, n_blocks: int):
-        assert n_blocks >= 2, "need at least one usable block beyond null"
+        if n_blocks < 2:
+            raise ConfigInvariantError(
+                "need at least one usable block beyond null")
         self.n_blocks = n_blocks
         self._free: Deque[int] = deque(range(1, n_blocks))
         self.ref = np.zeros((n_blocks,), np.int64)
@@ -625,6 +628,8 @@ class PagedCacheManager:
             if fresh_need > self.free_blocks:
                 return None
         for k, bid in zip(adopt_keys, shared):
+            # reprolint: ownership-transfer — the adopted ref is owned by
+            # this slot's table; ``free``/``truncate`` decref it
             self.allocator.incref(bid)
             self._hits[k] = self._hits.get(k, 0) + 1
             self._index.move_to_end(k)                # LRU touch
@@ -800,6 +805,8 @@ class PagedCacheManager:
             self._index[key] = bid
             self._hashed[bid] = key
             self._hits.setdefault(key, 0)
+            # reprolint: ownership-transfer — the index owns this ref;
+            # _depublish / shed decref it
             self.allocator.incref(bid)
             if self.on_publish is not None:
                 self.on_publish(key, bid)
@@ -924,7 +931,8 @@ class PagedCacheManager:
         the BGMV/smlm bank layout on acquire)."""
         bids = self.adapter_tables[name]
         self._adapter_touch(name)
-        flat = np.asarray(
+        # swap path, not the tick loop: gathers happen once per acquire
+        flat = np.asarray(  # reprolint: sync-point
             self._adapter_pool[jnp.asarray(bids, jnp.int32)]).reshape(-1)
         return flat[:self._adapter_bytes[name]]
 

@@ -7,6 +7,7 @@ from typing import Iterable
 
 import numpy as np
 
+from repro.errors import AccountingInvariantError
 from repro.serving.request import Request, State
 
 
@@ -23,7 +24,9 @@ def spread_token_times(t_prev: float, now: float, n: int) -> list:
     tokens, so each is charged ``step_latency / n`` — NOT one inflated
     inter-step gap — keeping ``request_meets_slo`` meaningful under
     speculation."""
-    assert n >= 1
+    if n < 1:
+        raise AccountingInvariantError(
+            f"spread_token_times needs n >= 1 accepted tokens, got {n}")
     dt = (now - t_prev) / n
     return [t_prev + (i + 1) * dt for i in range(n)]
 

@@ -312,6 +312,48 @@ def test_unknown_adapter_fails_cleanly_without_leaks():
     assert eng.cachemgr.pristine
 
 
+def test_midtick_exception_leaks_no_adapter_holds():
+    """The per-tick adapter holds taken by ``_resolve`` must be released
+    even when admission explodes mid-loop (engine.py's try/finally around
+    ``_admit_loop``).  Inject a failure into ``try_admit``, let the tick
+    abort, and check the store's refcounts show ONLY the retains owned by
+    in-flight requests — then recover and drain to a pristine pool."""
+    from collections import Counter
+
+    eng = _engine(True)
+    _submit_zipf(eng)
+    for _ in range(3):     # get some requests mid-flight holding retains
+        eng.tick()
+    store = eng.model.store
+    real_try_admit = eng.cachemgr.try_admit
+
+    def boom(*a, **kw):
+        raise RuntimeError("injected mid-tick failure")
+
+    eng.cachemgr.try_admit = boom
+    # the failing tick needs a pending admission for try_admit to fire;
+    # ticks where the scheduler admits nothing pass through harmlessly
+    with pytest.raises(RuntimeError, match="injected"):
+        for _ in range(200):
+            eng.tick()
+
+    live = (list(eng.waiting) + list(eng.prefilling.values())
+            + list(eng.active.values()))
+    expected = Counter(r.adapter for r in live if r.adapter_retained)
+    assert store._refs == dict(expected), \
+        "temporary _resolve holds leaked past the aborted tick"
+
+    # recovery: the aborted tick lost no request state — restore try_admit
+    # and every submitted request still runs to completion
+    eng.cachemgr.try_admit = real_try_admit
+    eng.run(max_ticks=4000)
+    assert len(eng.finished) == 12
+    assert all(r.state is State.DONE for r in eng.finished)
+    assert store._refs == {}
+    assert all(v == 0 for v in eng.cachemgr._adapter_pins.values())
+    assert eng.cachemgr.pristine
+
+
 # ------------------------------------------------------------- clock
 def test_clock_charges_adapter_swaps():
     clk = VirtualClock(CostModel())

@@ -7,9 +7,8 @@ import pytest
 from repro.kernels.decode_attn import (decode_attention,
                                        paged_decode_attention,
                                        paged_verify_attention)
-from repro.kernels.ref import paged_decode_ref, paged_verify_ref
-from repro.models.layers import attention
-from repro.models.model import _dec_cache_pos
+from repro.kernels.ref import (decode_attention_ref, paged_decode_ref,
+                               paged_verify_ref)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -25,9 +24,7 @@ def test_decode_linear_cache(dtype, B, h, g, hd, S, bk):
     v = jax.random.normal(ks[2], (B, S, g, hd)).astype(dtype)
     pos = jax.random.randint(ks[3], (B,), 0, S)
     y = decode_attention(q, k, v, pos, block_k=bk, interpret=True)
-    kp, kv = _dec_cache_pos(pos, S)
-    yr = attention(q[:, None], k, v, q_pos=pos[:, None], k_pos=kp,
-                   k_valid=kv, causal=True)[:, 0]
+    yr = decode_attention_ref(q, k, v, pos)
     tol = 2e-5 if dtype == jnp.float32 else 5e-2
     np.testing.assert_allclose(np.asarray(y, np.float32),
                                np.asarray(yr, np.float32), rtol=tol, atol=tol)
@@ -44,9 +41,7 @@ def test_decode_rolling_window(pos_val):
     v = jax.random.normal(ks[2], (B, W, g, hd))
     pos = jnp.array([pos_val, max(pos_val - 2, 0)])
     y = decode_attention(q, k, v, pos, block_k=8, window=W, interpret=True)
-    kp, kv = _dec_cache_pos(pos, W)
-    yr = attention(q[:, None], k, v, q_pos=pos[:, None], k_pos=kp,
-                   k_valid=kv, causal=True)[:, 0]
+    yr = decode_attention_ref(q, k, v, pos)
     np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
                                rtol=3e-5, atol=3e-5)
 

@@ -38,6 +38,16 @@ def test_smlm_sweep(dtype, T, d, r, n, o, bt, bo):
                                np.asarray(yr, np.float32),
                                atol=TOLS[dtype] * max(1.0, float(jnp.abs(yr).max())),
                                rtol=TOLS[dtype])
+    # the tile-form oracle must agree too (smlm <-> smlm_ref is the pairing
+    # reprolint's kernel-oracle rule enforces; the wrapper derives the same
+    # per-tile scalars from the per-token stream)
+    tile_valid = (tile_ids >= 0) & (tile_ids < n)
+    yt = ref.smlm_ref(x, a, b, jnp.clip(tile_ids, 0, n - 1),
+                      tile_valid.astype(jnp.float32), bt)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yt, np.float32),
+                               atol=TOLS[dtype] * max(1.0, float(jnp.abs(yt).max())),
+                               rtol=TOLS[dtype])
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

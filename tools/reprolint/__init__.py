@@ -1,0 +1,16 @@
+"""reprolint — AST/CFG static analysis that mechanically enforces this
+repo's hard-won serving-engine invariants (see INVARIANTS.md).
+
+Run from the repo root:
+
+    python -m reprolint src tests
+
+Each rule encodes a defect class PRs 1-8 hit by hand: bare asserts erased
+by ``python -O``, Pallas kernels with no ``*_ref`` oracle, host syncs
+inside the tick loop, unpaired refcount acquires, and jit step caches
+keyed without the trace-time inputs that can go stale.
+"""
+from reprolint.core import Finding, Project, SourceFile  # noqa: F401
+from reprolint.registry import all_rules, register  # noqa: F401
+
+__version__ = "1.0"

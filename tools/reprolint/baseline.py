@@ -1,0 +1,43 @@
+"""Baseline file: pre-existing findings tolerated while they're burned
+down.  Same philosophy as ``benchmarks/gate.py``: a baseline entry that no
+longer matches anything is a DANGLING entry and fails the run loudly — a
+gate that checks nothing must not pass vacuously.
+
+Identity is (rule, path, symbol, message) — deliberately not the line
+number, so unrelated edits above a finding don't churn the file.  The
+checked-in baseline (``tools/reprolint/baseline.json``) is empty: this PR
+fixed every true positive instead of baselining it.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Tuple
+
+from reprolint.core import Finding
+
+
+def load(path: str) -> List[Dict[str, str]]:
+    with open(path, "r", encoding="utf-8") as fh:
+        doc = json.load(fh)
+    entries = doc.get("findings", doc if isinstance(doc, list) else None)
+    if entries is None or not isinstance(entries, list):
+        raise ValueError(f"{path}: expected {{'findings': [...]}}")
+    for e in entries:
+        missing = {"rule", "path", "symbol", "message"} - set(e)
+        if missing:
+            raise ValueError(f"{path}: baseline entry missing {missing}")
+    return entries
+
+
+def split(findings: List[Finding], entries: List[Dict[str, str]]
+          ) -> Tuple[List[Finding], List[Finding], List[Dict[str, str]]]:
+    """-> (new findings, baselined findings, dangling entries)."""
+    keys = {(e["rule"], e["path"], e["symbol"], e["message"])
+            for e in entries}
+    new = [f for f in findings if f.key not in keys]
+    old = [f for f in findings if f.key in keys]
+    live = {f.key for f in old}
+    dangling = [e for e in entries
+                if (e["rule"], e["path"], e["symbol"], e["message"])
+                not in live]
+    return new, old, dangling

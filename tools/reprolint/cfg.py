@@ -1,0 +1,196 @@
+"""A small per-function control-flow graph for the refcount-pairing rule.
+
+One node per AST statement.  The graph models explicit control flow
+(``if``/``for``/``while``/``try``/``return``/``raise``/``break``/
+``continue``) plus two conservative exception approximations:
+
+* every statement inside a ``try`` body may jump to each of its handlers
+  (an exception can occur anywhere in the body);
+* abrupt exits (``return``/``raise``/``break``/``continue``) route through
+  every enclosing ``finally`` body before leaving.
+
+The only query the linter needs is reachability with a kill-set: "starting
+just after statement A, can the function exit be reached along a path on
+which no statement matches ``release``?"  Conservative extra edges can
+produce false positives, never false negatives — the right polarity for a
+leak detector whose escape hatch is an explicit annotation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Callable, Dict, List, Set
+
+EXIT = -1
+
+
+class CFG:
+    def __init__(self):
+        self.stmts: Dict[int, ast.stmt] = {}
+        self.succ: Dict[int, Set[int]] = {EXIT: set()}
+        self._next = 0
+
+    def new_node(self, stmt: ast.stmt) -> int:
+        nid = self._next
+        self._next += 1
+        self.stmts[nid] = stmt
+        self.succ[nid] = set()
+        return nid
+
+    def edge(self, a: int, b: int):
+        if a != EXIT:
+            self.succ[a].add(b)
+
+    def nodes_for(self, pred: Callable[[ast.stmt], bool]) -> Set[int]:
+        return {nid for nid, s in self.stmts.items() if pred(s)}
+
+    def reaches_exit_avoiding(self, start_after: int,
+                              avoid: Set[int]) -> bool:
+        """True if EXIT is reachable from the successors of
+        ``start_after`` without passing through any node in ``avoid``."""
+        stack = [s for s in self.succ.get(start_after, ())]
+        seen: Set[int] = set()
+        while stack:
+            nid = stack.pop()
+            if nid in seen or nid in avoid:
+                continue
+            if nid == EXIT:
+                return True
+            seen.add(nid)
+            stack.extend(self.succ[nid])
+        return False
+
+
+class _Builder:
+    def __init__(self):
+        self.cfg = CFG()
+        # stack of (break_sinks, continue_target) per enclosing loop
+        self.loops: List[tuple] = []
+        # stack of pending-abrupt-exit lists per enclosing try-with-finally;
+        # entries are node ids whose flow must route through the finally
+        self.finallies: List[List[int]] = []
+
+    # ------------------------------------------------------------------
+    def build(self, fn: ast.FunctionDef) -> CFG:
+        exits = self._seq(fn.body, ["ENTRY"])
+        for e in exits:
+            self._to_exit(e)
+        return self.cfg
+
+    def _to_exit(self, nid):
+        if nid == "ENTRY":
+            return
+        self.cfg.edge(nid, EXIT)
+
+    def _link(self, preds, nid: int):
+        for p in preds:
+            if p == "ENTRY":
+                continue
+            self.cfg.edge(p, nid)
+
+    def _abrupt(self, nid: int, targets: List[int]):
+        """Route an abrupt exit: through the innermost pending finally if
+        any, else straight to its targets (EXIT / loop header / sinks)."""
+        if self.finallies:
+            self.finallies[-1].append(nid)
+        else:
+            for t in targets:
+                self.cfg.edge(nid, t)
+
+    # ------------------------------------------------------------------
+    def _seq(self, stmts: List[ast.stmt], preds):
+        for s in stmts:
+            if not preds:
+                break  # unreachable tail
+            preds = self._stmt(s, preds)
+        return preds
+
+    def _stmt(self, s: ast.stmt, preds):
+        nid = self.cfg.new_node(s)
+        self._link(preds, nid)
+
+        if isinstance(s, ast.If):
+            body = self._seq(s.body, [nid])
+            orelse = self._seq(s.orelse, [nid]) if s.orelse else [nid]
+            return body + orelse
+
+        if isinstance(s, (ast.For, ast.While, ast.AsyncFor)):
+            breaks: List[int] = []
+            self.loops.append((breaks, nid))
+            body = self._seq(s.body, [nid])
+            for e in body:
+                if e != "ENTRY":
+                    self.cfg.edge(e, nid)  # loop back
+            self.loops.pop()
+            orelse = self._seq(s.orelse, [nid]) if s.orelse else [nid]
+            return orelse + breaks
+
+        if isinstance(s, (ast.Try, getattr(ast, "TryStar", ast.Try))):
+            has_finally = bool(s.finalbody)
+            if has_finally:
+                self.finallies.append([])
+            body_start = len(self.cfg.stmts)
+            body = self._seq(s.body, [nid])
+            body_nodes = list(range(body_start, len(self.cfg.stmts)))
+            handler_exits: List = []
+            handler_entries: List[int] = []
+            for h in s.handlers:
+                h_start = len(self.cfg.stmts)
+                h_exits = self._seq(h.body, [nid])
+                h_nodes = list(range(h_start, len(self.cfg.stmts)))
+                if h_nodes:
+                    handler_entries.append(h_nodes[0])
+                handler_exits.extend(h_exits)
+            # conservative: any body statement may raise into any handler
+            for b in body_nodes:
+                for h in handler_entries:
+                    self.cfg.edge(b, h)
+            orelse = self._seq(s.orelse, body) if s.orelse else body
+            normal = orelse + handler_exits
+            if has_finally:
+                pending = self.finallies.pop()
+                fin_preds = normal + pending
+                # an unhandled exception in the body also reaches finally
+                fin_preds = fin_preds + body_nodes
+                fin = self._seq(s.finalbody, fin_preds or [nid])
+                # abrupt entries leave through the finally: approximate by
+                # letting the finally's exits ALSO reach EXIT when any
+                # pending abrupt exit was routed through it
+                if pending:
+                    for e in fin:
+                        self._to_exit(e)
+                return fin
+            return normal
+
+        if isinstance(s, (ast.With, ast.AsyncWith)):
+            return self._seq(s.body, [nid])
+
+        if isinstance(s, ast.Return):
+            self._abrupt(nid, [EXIT])
+            return []
+        if isinstance(s, ast.Raise):
+            self._abrupt(nid, [EXIT])
+            return []
+        if isinstance(s, ast.Break):
+            if self.loops:
+                self.loops[-1][0].append(nid)
+                if self.finallies:
+                    self.finallies[-1].append(nid)
+            else:
+                self._abrupt(nid, [EXIT])
+            return []
+        if isinstance(s, ast.Continue):
+            if self.loops:
+                target = self.loops[-1][1]
+                if self.finallies:
+                    self.finallies[-1].append(nid)
+                else:
+                    self.cfg.edge(nid, target)
+            return []
+
+        # plain statement (nested defs are opaque single nodes: their
+        # bodies get their own CFG when the rule visits them)
+        return [nid]
+
+
+def build_cfg(fn: ast.FunctionDef) -> CFG:
+    return _Builder().build(fn)

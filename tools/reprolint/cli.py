@@ -1,0 +1,128 @@
+"""Command line: ``python -m reprolint [paths...]``.
+
+Exit codes: 0 clean (or everything baselined), 1 unsuppressed findings or
+dangling baseline entries or a failed self-check, 2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from reprolint import baseline as baseline_mod
+from reprolint.core import Finding, Project, load_files
+from reprolint.registry import all_rules
+
+DEFAULT_PATHS = ["src", "tests"]
+
+
+def run_paths(root: str, paths: List[str]) -> List[Finding]:
+    project = Project(load_files(root, paths))
+    findings: List[Finding] = []
+    for rule in all_rules().values():
+        findings.extend(rule.check(project))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return findings
+
+
+def _default_baseline() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.json")
+
+
+def self_check(root: str) -> int:
+    """Lint the fixture corpus: every rule must catch >=1 seeded violation
+    in the ``bad_*`` fixtures and none in the ``clean_*`` ones.  This is
+    CI's guard against a silently-broken linter passing green."""
+    fixtures = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "tests", "fixtures")
+    findings = run_paths(root, [fixtures])
+    by_rule = {rid: [] for rid in all_rules()}
+    ok = True
+    for f in findings:
+        base = os.path.basename(f.path)
+        if base.startswith("clean_"):
+            print(f"SELF-CHECK FAIL: clean fixture flagged: {f.render()}")
+            ok = False
+        elif base.startswith("bad_"):
+            by_rule.setdefault(f.rule, []).append(f)
+    for rid, hits in sorted(by_rule.items()):
+        status = f"{len(hits)} seeded violation(s) caught"
+        if not hits:
+            print(f"SELF-CHECK FAIL: rule {rid} caught nothing in the "
+                  "bad fixtures")
+            ok = False
+        else:
+            print(f"self-check: {rid}: {status}")
+    print("self-check: " + ("OK" if ok else "FAILED"))
+    return 0 if ok else 1
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="reprolint",
+        description="AST/CFG invariant linter for this repo "
+                    "(see INVARIANTS.md)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to lint (default: {DEFAULT_PATHS})")
+    ap.add_argument("--root", default=os.getcwd(),
+                    help="repo root for relative paths (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: tools/reprolint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline file")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    ap.add_argument("--list-rules", action="store_true")
+    ap.add_argument("--self-check", action="store_true",
+                    help="lint the fixture corpus; fail unless every rule "
+                         "catches its seeded violation")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in all_rules().values():
+            print(f"{rule.rule_id}: {rule.description}")
+        return 0
+    if args.self_check:
+        return self_check(args.root)
+
+    paths = args.paths or DEFAULT_PATHS
+    try:
+        findings = run_paths(args.root, paths)
+    except (OSError, SyntaxError) as e:
+        print(f"reprolint: error: {e}", file=sys.stderr)
+        return 2
+
+    dangling: List[dict] = []
+    baselined: List[Finding] = []
+    if not args.no_baseline:
+        bpath = args.baseline or _default_baseline()
+        if os.path.exists(bpath):
+            entries = baseline_mod.load(bpath)
+            findings, baselined, dangling = baseline_mod.split(
+                findings, entries)
+        elif args.baseline is not None:
+            print(f"reprolint: error: baseline {bpath} not found",
+                  file=sys.stderr)
+            return 2
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [f.__dict__ for f in findings],
+            "baselined": [f.__dict__ for f in baselined],
+            "dangling": dangling,
+        }, indent=2))
+    else:
+        for f in findings:
+            print(f.render())
+        for e in dangling:
+            print(f"DANGLING baseline entry (fixed or moved — remove it): "
+                  f"{e['rule']}: {e['path']} [{e['symbol']}]")
+        n_files = "src/tests" if paths == DEFAULT_PATHS else ",".join(paths)
+        print(f"reprolint: {len(findings)} finding(s), "
+              f"{len(baselined)} baselined, {len(dangling)} dangling "
+              f"baseline entr(ies) over {n_files}")
+    return 1 if (findings or dangling) else 0

@@ -1,0 +1,213 @@
+"""Source model: files, roles, annotations, findings.
+
+Annotations are magic comments of the form
+
+    # reprolint: token[, token ...]
+
+attached to the line they sit on; a pure-comment annotation line also
+attaches to the next code line.  Tokens:
+
+    disable=<rule-id>       suppress that rule's findings on this line
+    sync-point              declared host-sync boundary (host-sync rule)
+    ownership-transfer      the acquired ref is handed to a data structure
+                            whose owner releases it (refcount rule)
+    oracle=<name>           explicit oracle pairing (kernel-oracle rule)
+    allow-assert            a deliberate trace-time/shape assert
+    cache-key-exempt        cache provably independent of kernel mode
+
+Roles classify what rules apply where.  A file's role normally derives
+from its repo-relative path; a fixture can override it with a header
+comment ``# reprolint-fixture: role=<role>`` so the rule corpus under
+``tools/reprolint/tests/fixtures/`` exercises every rule without living
+inside ``src/``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set
+
+_ANN_RE = re.compile(r"#\s*reprolint:\s*(?P<body>[^#]*)")
+_ROLE_RE = re.compile(r"#\s*reprolint-fixture:\s*role=(?P<role>[\w-]+)")
+
+# role vocabulary
+ENGINE = "engine"      # src/repro/{serving,core,fleet} — stateful runtime
+KERNELS = "kernels"    # src/repro/kernels — Pallas entry points + oracles
+SRC = "src"            # anything under src/repro
+TESTS = "tests"        # test files (oracle-pairing evidence)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # repo-relative posix path
+    line: int
+    message: str
+    symbol: str = ""   # enclosing qualname, baseline identity
+
+    @property
+    def key(self) -> tuple:
+        # line numbers are deliberately NOT identity: a baseline must
+        # survive unrelated edits above the finding
+        return (self.rule, self.path, self.symbol, self.message)
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{sym}"
+
+
+def _parse_tokens(body: str) -> Set[str]:
+    return {t for t in re.split(r"[\s,]+", body.strip()) if t}
+
+
+class SourceFile:
+    def __init__(self, path: str, rel: str, text: str):
+        self.path = path
+        self.rel = rel.replace(os.sep, "/")
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=rel)
+        self.annotations: Dict[int, Set[str]] = {}
+        self._collect_annotations()
+        self.roles = self._roles()
+
+    # -- annotations -------------------------------------------------------
+    def _collect_annotations(self):
+        pending: Set[str] = set()
+        for i, line in enumerate(self.lines, start=1):
+            m = _ANN_RE.search(line)
+            tokens = _parse_tokens(m.group("body")) if m else set()
+            if line.strip().startswith("#"):
+                # standalone comment: accumulate for the next code line
+                pending |= tokens
+                continue
+            if tokens or pending:
+                self.annotations[i] = tokens | pending
+            pending = set()
+
+    def tokens_at(self, line: int) -> Set[str]:
+        return self.annotations.get(line, set())
+
+    def has_token(self, line: int, token: str) -> bool:
+        return token in self.tokens_at(line)
+
+    def is_disabled(self, line: int, rule: str) -> bool:
+        return f"disable={rule}" in self.tokens_at(line)
+
+    # -- roles -------------------------------------------------------------
+    def _roles(self) -> Set[str]:
+        for line in self.lines[:5]:
+            m = _ROLE_RE.search(line)
+            if m:
+                role = m.group("role")
+                out = {role}
+                if role in (ENGINE, KERNELS):
+                    out.add(SRC)
+                return out
+        rel = self.rel
+        out: Set[str] = set()
+        if rel.startswith(("src/repro/serving/", "src/repro/core/",
+                           "src/repro/fleet/")):
+            out |= {ENGINE, SRC}
+        elif rel.startswith("src/repro/kernels/"):
+            out |= {KERNELS, SRC}
+        elif rel.startswith("src/"):
+            out.add(SRC)
+        base = os.path.basename(rel)
+        if rel.startswith("tests/") or base.startswith("test_"):
+            out.add(TESTS)
+        return out
+
+
+class Project:
+    """Everything a rule sees: the parsed files plus shared AST helpers."""
+
+    def __init__(self, files: List[SourceFile]):
+        self.files = files
+
+    def with_role(self, role: str) -> List[SourceFile]:
+        return [f for f in self.files if role in f.roles]
+
+
+# -- shared AST helpers ----------------------------------------------------
+
+def iter_functions(tree: ast.AST):
+    """Yield (qualname, FunctionDef) for every function, including nested
+    ones and methods."""
+    def walk(node, prefix):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                yield q, child
+                yield from walk(child, q)
+            elif isinstance(child, ast.ClassDef):
+                q = f"{prefix}.{child.name}" if prefix else child.name
+                yield from walk(child, q)
+            else:
+                yield from walk(child, prefix)
+    yield from walk(tree, "")
+
+
+def attr_chain(node: ast.AST) -> Optional[str]:
+    """Dotted name of an attribute/name expression, or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(call: ast.Call) -> str:
+    """Trailing identifier of the called object (``a.b.c()`` -> ``c``)."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def mentions(tree: ast.AST) -> Set[str]:
+    """All identifiers a module references: names, attribute tails, and
+    import aliases.  Used as the oracle-pairing test-evidence relation —
+    robust to both ``from m import f`` and ``m.f`` styles."""
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for alias in node.names:
+                out.add(alias.name.split(".")[-1])
+    return out
+
+
+def load_files(root: str, paths: Iterable[str]) -> List[SourceFile]:
+    files: List[SourceFile] = []
+    seen: Set[str] = set()
+    for p in paths:
+        absd = p if os.path.isabs(p) else os.path.join(root, p)
+        if os.path.isfile(absd):
+            cand = [absd]
+        else:
+            cand = []
+            for dirpath, dirnames, filenames in os.walk(absd):
+                dirnames[:] = [d for d in sorted(dirnames)
+                               if d not in ("__pycache__", ".git")]
+                cand.extend(os.path.join(dirpath, f)
+                            for f in sorted(filenames) if f.endswith(".py"))
+        for fp in cand:
+            fp = os.path.abspath(fp)
+            if fp in seen:
+                continue
+            seen.add(fp)
+            rel = os.path.relpath(fp, root)
+            with open(fp, "r", encoding="utf-8") as fh:
+                files.append(SourceFile(fp, rel, fh.read()))
+    return files

@@ -1,0 +1,32 @@
+"""Rule registry: a rule is a generator ``check(project) -> Finding``
+registered under a stable kebab-case id (the id is what suppressions,
+baselines, and INVARIANTS.md refer to)."""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterator, NamedTuple
+
+from reprolint.core import Finding, Project
+
+
+class Rule(NamedTuple):
+    rule_id: str
+    description: str
+    check: Callable[[Project], Iterator[Finding]]
+
+
+_RULES: Dict[str, Rule] = {}
+
+
+def register(rule_id: str, description: str):
+    def deco(fn):
+        if rule_id in _RULES:
+            raise ValueError(f"duplicate rule id {rule_id!r}")
+        _RULES[rule_id] = Rule(rule_id, description, fn)
+        return fn
+    return deco
+
+
+def all_rules() -> Dict[str, Rule]:
+    # importing the rules package populates the registry
+    import reprolint.rules  # noqa: F401
+    return dict(_RULES)

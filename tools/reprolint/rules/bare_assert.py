@@ -1,0 +1,51 @@
+"""no-bare-invariant-assert: runtime invariants in the stateful engine
+layers (serving/core/fleet) must raise typed exceptions.
+
+The CI tier-1 matrix runs ``python -O``, which strips ``assert``
+statements — a bare assert guarding block accounting or adapter state is
+load-bearing control flow that silently vanishes in exactly the
+configuration closest to production.  ``KVAccountingError`` /
+``InvariantError`` are the precedent.  A deliberate trace-time shape
+assert can be kept with ``# reprolint: allow-assert``.
+"""
+from __future__ import annotations
+
+import ast
+
+from reprolint.core import ENGINE, Finding, Project
+from reprolint.registry import register
+
+RULE = "no-bare-invariant-assert"
+
+
+@register(RULE, "engine invariants must raise typed exceptions, not assert")
+def check(project: Project):
+    for f in project.with_role(ENGINE):
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Assert):
+                continue
+            line = node.lineno
+            if (f.is_disabled(line, RULE)
+                    or f.has_token(line, "allow-assert")):
+                continue
+            test = ast.unparse(node.test)
+            if len(test) > 40:
+                test = test[:37] + "..."
+            yield Finding(
+                rule=RULE, path=f.rel, line=line,
+                message=(f"bare `assert {test}` is erased under python -O; "
+                         "raise an InvariantError subclass instead"),
+                symbol=_enclosing(f.tree, node))
+
+
+def _enclosing(tree: ast.AST, target: ast.AST) -> str:
+    best = ""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            if (node.lineno <= target.lineno
+                    and target.lineno <= max(getattr(node, "end_lineno",
+                                                     node.lineno),
+                                             node.lineno)):
+                best = node.name if not best else f"{best}.{node.name}"
+    return best

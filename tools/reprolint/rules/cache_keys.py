@@ -1,0 +1,186 @@
+"""jit-cache-key-hygiene: trace caches must key on every trace-time input,
+and jitted functions must not close over mutable module state.
+
+The PR 6 defect class: ``unified_forward`` reads the paged-attention
+backend flag and the autotune table at TRACE time, so any cache of jitted
+step functions that omits ``_paged_kernel_mode()`` or
+``autotune.table_version()`` from its key serves stale traces after a flag
+flip or a tuning-table load.  Two checks:
+
+(a) In modules that define a ``*_CACHE`` dict, every literal-tuple cache
+    key (stored by subscript or passed to a ``_cached`` helper) must
+    contain calls to BOTH ``_paged_kernel_mode`` and ``table_version``.
+    Keys that are opaque parameters (the memo helper itself) are skipped —
+    construction sites are where the hygiene lives.  A cache that is
+    provably independent of kernel selection can annotate
+    ``# reprolint: cache-key-exempt``.
+
+(b) A ``@jax.jit`` function whose body reads a module-level MUTABLE
+    global (dict/list/set literal, or a name rebound via ``global``) has
+    baked that value into its trace — mutations after first call are
+    silently ignored.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from reprolint.core import (SRC, Finding, Project, SourceFile, attr_chain,
+                            call_name, iter_functions)
+from reprolint.registry import register
+from reprolint.rules.host_sync import _is_jitted
+
+RULE = "jit-cache-key-hygiene"
+
+REQUIRED_KEY_CALLS = ("_paged_kernel_mode", "table_version")
+MUTABLE_CTORS = {"dict", "list", "set", "deque", "defaultdict",
+                 "OrderedDict", "Counter"}
+
+
+def _module_cache_names(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in tree.body:
+        targets = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets = [node.target]
+        for t in targets:
+            if isinstance(t, ast.Name) and t.id.endswith("_CACHE"):
+                out.add(t.id)
+    return out
+
+
+def _mutable_globals(tree: ast.Module) -> Set[str]:
+    out: Set[str] = set()
+    for node in tree.body:
+        targets: List[ast.expr] = []
+        value: Optional[ast.expr] = None
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            targets, value = [node.target], node.value
+        elif isinstance(node, ast.AugAssign):
+            targets, value = [node.target], None
+        for t in targets:
+            if not isinstance(t, ast.Name):
+                continue
+            if value is None or isinstance(value, (
+                    ast.Dict, ast.List, ast.Set, ast.DictComp, ast.ListComp,
+                    ast.SetComp)):
+                out.add(t.id)
+            elif isinstance(value, ast.Call) \
+                    and call_name(value) in MUTABLE_CTORS:
+                out.add(t.id)
+    # names any function rebinds via `global` are mutable module state
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Global):
+            out.update(node.names)
+    return out
+
+
+def _resolve_key_expr(fn: ast.FunctionDef,
+                      expr: ast.expr) -> Optional[ast.expr]:
+    """Follow one local assignment hop: ``key = (...)`` then ``CACHE[key]``.
+    Returns a Tuple literal to inspect, or None when the key is opaque
+    (a parameter, a starred splat, ...)."""
+    if isinstance(expr, ast.Tuple):
+        if any(isinstance(e, ast.Starred) for e in expr.elts):
+            return None
+        return expr
+    if isinstance(expr, ast.Name):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) \
+                    and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name) \
+                    and node.targets[0].id == expr.id:
+                return _resolve_key_expr(fn, node.value)
+    return None
+
+
+def _key_sites(fn: ast.FunctionDef,
+               cache_names: Set[str]) -> List[Tuple[int, ast.expr]]:
+    """(line, key-expression) for every cache-key construction in ``fn``."""
+    sites = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Subscript) \
+                and isinstance(node.value, ast.Name) \
+                and node.value.id in cache_names:
+            sites.append((node.lineno, node.slice))
+        elif isinstance(node, ast.Call) and call_name(node) == "_cached":
+            # _cached(kind, key, build) — the key is the tuple argument
+            for arg in node.args:
+                if isinstance(arg, (ast.Tuple, ast.Name)):
+                    sites.append((node.lineno, arg))
+                    break
+    return sites
+
+
+def _free_loads(fn: ast.FunctionDef) -> Set[str]:
+    bound: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs
+              + ([args.vararg] if args.vararg else [])
+              + ([args.kwarg] if args.kwarg else [])):
+        bound.add(a.arg)
+    loads: Set[str] = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, (ast.Store, ast.Del)):
+                bound.add(node.id)
+            else:
+                loads.add(node.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node is not fn:
+            bound.add(node.name)
+    return loads - bound
+
+
+@register(RULE, "step caches key on kernel mode + table version; no jit "
+                "closures over mutable globals")
+def check(project: Project):
+    for f in project.with_role(SRC):
+        if not isinstance(f.tree, ast.Module):
+            continue
+        cache_names = _module_cache_names(f.tree)
+        mutable = _mutable_globals(f.tree)
+
+        for qual, fn in iter_functions(f.tree):
+            # (a) key hygiene at construction sites
+            if cache_names:
+                for line, key_expr in _key_sites(fn, cache_names):
+                    if (f.is_disabled(line, RULE)
+                            or f.has_token(line, "cache-key-exempt")
+                            or f.has_token(fn.lineno, "cache-key-exempt")):
+                        continue
+                    tup = _resolve_key_expr(fn, key_expr)
+                    if tup is None:
+                        continue  # opaque key: constructed by the caller
+                    if (f.has_token(tup.lineno, "cache-key-exempt")
+                            or f.is_disabled(tup.lineno, RULE)):
+                        continue  # annotated at the key construction site
+                    present = {call_name(n) for n in ast.walk(tup)
+                               if isinstance(n, ast.Call)}
+                    missing = [c for c in REQUIRED_KEY_CALLS
+                               if c not in present]
+                    if missing:
+                        yield Finding(
+                            rule=RULE, path=f.rel, line=line,
+                            message=("step-cache key omits trace-time "
+                                     f"input(s) {missing}: stale traces "
+                                     "survive flag flips / table loads"),
+                            symbol=qual)
+
+            # (b) jitted closures over mutable module globals
+            if _is_jitted(fn):
+                leaked = sorted(_free_loads(fn) & mutable)
+                for name in leaked:
+                    line = fn.lineno
+                    if f.is_disabled(line, RULE):
+                        continue
+                    yield Finding(
+                        rule=RULE, path=f.rel, line=line,
+                        message=(f"@jax.jit function `{fn.name}` closes "
+                                 f"over mutable module global `{name}` — "
+                                 "its value is frozen into the trace"),
+                        symbol=qual)

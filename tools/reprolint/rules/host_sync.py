@@ -1,0 +1,157 @@
+"""host-sync-in-hot-path: device->host synchronization must be declared.
+
+Two checks:
+
+(a) Inside traced code — functions compiled with ``jax.jit`` (directly or
+    through ``functools.partial``) and Pallas kernel bodies — ``.item()``,
+    ``np.asarray(...)``, and ``float()``/``bool()`` over non-literal values
+    are either trace-time errors or silent recompile/sync hazards.
+
+(b) In the engine's per-tick assembly (serving/core/fleet), a host sync on
+    a device value — ``jax.block_until_ready(...)`` or ``np.asarray``
+    applied to a known device-valued expression (a ``ModelOut`` logits /
+    loss field or the paged adapter pool) — stalls the dispatch pipeline.
+    The ~6 legitimate boundaries (the engine must read logits to schedule
+    the next step) carry an explicit ``# reprolint: sync-point``
+    annotation; anything unannotated is a new sync creeping into the hot
+    path.
+
+The device-rooted attribute list is deliberately an under-approximation:
+this lints the engine we have, not arbitrary programs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Set
+
+from reprolint.core import (ENGINE, SRC, Finding, Project, SourceFile,
+                            attr_chain, call_name, iter_functions)
+from reprolint.registry import register
+
+RULE = "host-sync-in-hot-path"
+
+# ModelOut fields that hold device arrays, plus the device-resident
+# adapter byte pool: np.asarray over any expression touching these is a
+# device->host transfer.
+DEVICE_ATTRS = {"pf_logits", "dec_logits", "ft_loss_sum", "ft_tok_count",
+                "_adapter_pool"}
+
+
+def _is_jitted(fn: ast.FunctionDef) -> bool:
+    for dec in fn.decorator_list:
+        chain = attr_chain(dec)
+        if chain in ("jax.jit", "jit"):
+            return True
+        if isinstance(dec, ast.Call):
+            fchain = attr_chain(dec.func)
+            if fchain in ("jax.jit", "jit"):
+                return True
+            if fchain in ("functools.partial", "partial") and dec.args:
+                if attr_chain(dec.args[0]) in ("jax.jit", "jit"):
+                    return True
+    return False
+
+
+def _pallas_kernel_names(tree: ast.AST) -> Set[str]:
+    """Function names traced by pallas_call: names passed directly, or via
+    a ``kern = functools.partial(<name>, ...)`` local binding."""
+    partial_of: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            fchain = attr_chain(node.value.func)
+            if fchain in ("functools.partial", "partial") and node.value.args:
+                src = node.value.args[0]
+                if isinstance(src, ast.Name) and len(node.targets) == 1 \
+                        and isinstance(node.targets[0], ast.Name):
+                    partial_of[node.targets[0].id] = src.id
+    out: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and call_name(node) == "pallas_call":
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    out.add(partial_of.get(arg.id, arg.id))
+                elif isinstance(arg, ast.Call):
+                    fchain = attr_chain(arg.func)
+                    if fchain in ("functools.partial", "partial") and arg.args:
+                        if isinstance(arg.args[0], ast.Name):
+                            out.add(arg.args[0].id)
+    return out
+
+
+def _is_shape_like(node: ast.expr) -> bool:
+    """float()/bool() over shapes/dtypes/constants is trace-time, fine."""
+    if isinstance(node, ast.Constant):
+        return True
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in (
+                "shape", "ndim", "size", "dtype"):
+            return True
+        if isinstance(sub, ast.Call) and call_name(sub) in ("len",):
+            return True
+    return False
+
+
+def _sync_calls_in_traced(f: SourceFile, fn: ast.FunctionDef, qual: str):
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        line = node.lineno
+        if f.is_disabled(line, RULE) or f.has_token(line, "sync-point"):
+            continue
+        name = call_name(node)
+        chain = attr_chain(node.func)
+        if name == "item" and isinstance(node.func, ast.Attribute):
+            what = ".item()"
+        elif chain in ("np.asarray", "numpy.asarray", "np.array",
+                       "numpy.array"):
+            what = f"{chain}(...)"
+        elif isinstance(node.func, ast.Name) and name in ("float", "bool") \
+                and node.args and not _is_shape_like(node.args[0]):
+            what = f"{name}() on a traced value"
+        else:
+            continue
+        yield Finding(
+            rule=RULE, path=f.rel, line=line,
+            message=(f"{what} inside traced function `{fn.name}` forces a "
+                     "host sync (or fails to trace)"),
+            symbol=qual)
+
+
+def _touches_device_attr(node: ast.expr) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr in DEVICE_ATTRS:
+            return True
+    return False
+
+
+@register(RULE, "host syncs in jitted code / the tick loop need annotation")
+def check(project: Project):
+    # (a) traced functions anywhere under src
+    for f in project.with_role(SRC):
+        kernel_names = _pallas_kernel_names(f.tree)
+        for qual, fn in iter_functions(f.tree):
+            if _is_jitted(fn) or fn.name in kernel_names:
+                yield from _sync_calls_in_traced(f, fn, qual)
+
+    # (b) engine hot-path assembly
+    for f in project.with_role(ENGINE):
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            line = node.lineno
+            if f.is_disabled(line, RULE) or f.has_token(line, "sync-point"):
+                continue
+            chain = attr_chain(node.func)
+            if chain in ("jax.block_until_ready", "block_until_ready"):
+                yield Finding(
+                    rule=RULE, path=f.rel, line=line,
+                    message=("jax.block_until_ready is a host sync; "
+                             "annotate `# reprolint: sync-point` if this "
+                             "boundary is deliberate"))
+            elif chain in ("np.asarray", "numpy.asarray") and node.args \
+                    and _touches_device_attr(node.args[0]):
+                yield Finding(
+                    rule=RULE, path=f.rel, line=line,
+                    message=("np.asarray over a device-valued expression "
+                             "is a host sync; annotate "
+                             "`# reprolint: sync-point` if deliberate"))

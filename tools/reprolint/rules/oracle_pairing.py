@@ -1,0 +1,89 @@
+"""kernel-oracle-pairing: every ``pl.pallas_call`` entry point must have a
+pure-jnp ``*_ref`` oracle and at least one test exercising both.
+
+The repo's exactness story (byte-identical optimized paths, PRs 1-6) only
+holds while every kernel is allclose-gated against an oracle.  An entry
+point is any public function whose body issues a ``pallas_call``.  Pairing
+is by name: an oracle ``<base>_ref`` covers entries named ``<base>`` or
+``<base>_*`` (so ``paged_decode_ref`` covers both ``paged_decode_attention``
+and its split-K variant); an explicit ``# reprolint: oracle=<name>`` on the
+entry's ``def`` line overrides.  Test evidence is a single test module that
+mentions both the entry and its oracle.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from reprolint.core import (KERNELS, TESTS, Finding, Project, SourceFile,
+                            call_name, iter_functions, mentions)
+from reprolint.registry import register
+
+RULE = "kernel-oracle-pairing"
+
+
+def _contains_pallas_call(fn: ast.FunctionDef) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call) and call_name(node) == "pallas_call":
+            return True
+    return False
+
+
+def _explicit_oracle(f: SourceFile, fn: ast.FunctionDef) -> Optional[str]:
+    for tok in f.tokens_at(fn.lineno):
+        if tok.startswith("oracle="):
+            return tok.split("=", 1)[1]
+    return None
+
+
+def _match_oracle(entry: str, oracle_bases: Set[str]) -> Optional[str]:
+    """Longest oracle base covering this entry name."""
+    best = None
+    for base in oracle_bases:
+        if entry == base or entry.startswith(base + "_"):
+            if best is None or len(base) > len(best):
+                best = base
+    return best
+
+
+@register(RULE, "pallas_call entry points need a *_ref oracle and a test")
+def check(project: Project):
+    entries: List[Tuple[SourceFile, str, ast.FunctionDef]] = []
+    oracles: Dict[str, str] = {}  # base name -> oracle function name
+    for f in project.with_role(KERNELS):
+        for qual, fn in iter_functions(f.tree):
+            if fn.name.endswith("_ref"):
+                oracles[fn.name[:-4]] = fn.name
+            if fn.name.startswith("_"):
+                continue
+            if _contains_pallas_call(fn):
+                entries.append((f, qual, fn))
+
+    evidence = [mentions(t.tree) for t in project.with_role(TESTS)]
+
+    for f, qual, fn in entries:
+        line = fn.lineno
+        if f.is_disabled(line, RULE):
+            continue
+        explicit = _explicit_oracle(f, fn)
+        if explicit is not None:
+            oracle = explicit
+            known = explicit in oracles.values()
+        else:
+            base = _match_oracle(fn.name, set(oracles))
+            oracle = oracles.get(base) if base else None
+            known = oracle is not None
+        if not known:
+            yield Finding(
+                rule=RULE, path=f.rel, line=line,
+                message=(f"kernel entry point `{fn.name}` has no matching "
+                         "*_ref oracle (add one to kernels/ref.py or "
+                         "annotate `# reprolint: oracle=<name>`)"),
+                symbol=qual)
+            continue
+        if not any(fn.name in m and oracle in m for m in evidence):
+            yield Finding(
+                rule=RULE, path=f.rel, line=line,
+                message=(f"no test exercises `{fn.name}` against its "
+                         f"oracle `{oracle}`"),
+                symbol=qual)

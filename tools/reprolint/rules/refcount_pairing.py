@@ -1,0 +1,109 @@
+"""refcount-retain-pairing: every acquire-family call must be released on
+all exit paths, or be an explicit ownership transfer.
+
+The engine's correctness under preemption/CoW churn rests on exact
+refcount conservation (``BlockAllocator`` refs, ``AdapterStore`` retains,
+pager pins).  For every function that calls an acquire-family method, a
+CFG walk checks that no explicit path from the acquire to the function
+exit avoids a matching release-family call — the try/finally shape the
+tick loop uses.  Acquires whose reference is handed to a long-lived data
+structure (a block table, the hash index, a request) are not leaks: they
+carry ``# reprolint: ownership-transfer`` (on the call line or the
+enclosing ``def``), which documents who releases later.
+
+Functions named like the resource layer itself (``acquire``, ``retain``,
+``pin``, ``incref``, ...) are exempt: their body IS the acquisition.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional, Set
+
+from reprolint.core import ENGINE, Finding, Project, iter_functions
+from reprolint.registry import register
+from reprolint.cfg import build_cfg
+
+RULE = "refcount-retain-pairing"
+
+# acquire attr -> matching release attrs
+FAMILIES = {
+    "incref": {"decref"},
+    "acquire": {"release"},
+    "retain": {"release"},
+    "pin": {"unpin", "adapter_unpin"},
+    "adapter_pin": {"adapter_unpin", "unpin"},
+}
+RESOURCE_LAYER_NAMES = set(FAMILIES) | {
+    "release", "unpin", "decref", "adapter_unpin", "_drop_retain"}
+
+
+def _acquire_attr(call: ast.Call) -> Optional[str]:
+    if isinstance(call.func, ast.Attribute) and call.func.attr in FAMILIES:
+        return call.func.attr
+    return None
+
+
+def _calls_in_stmt(stmt: ast.stmt) -> list:
+    """Calls executed directly BY this statement: nested statements belong
+    to their own CFG node, and nested function bodies don't run here."""
+    out = []
+    stack = [stmt]
+    first = True
+    while stack:
+        node = stack.pop()
+        if not first and isinstance(node, (ast.stmt, ast.Lambda)):
+            continue
+        first = False
+        if isinstance(node, ast.Call):
+            out.append(node)
+        stack.extend(ast.iter_child_nodes(node))
+    return out
+
+
+def _releases(stmt: ast.stmt, release_attrs: Set[str]) -> bool:
+    return any(isinstance(c.func, ast.Attribute)
+               and c.func.attr in release_attrs
+               for c in _calls_in_stmt(stmt))
+
+
+@register(RULE, "acquire/retain/incref must pair with release on all paths")
+def check(project: Project):
+    for f in project.with_role(ENGINE):
+        for qual, fn in iter_functions(f.tree):
+            if fn.name in RESOURCE_LAYER_NAMES:
+                continue
+            acquires = []
+            for stmt in ast.walk(fn):
+                if not isinstance(stmt, ast.stmt):
+                    continue
+                for call in _calls_in_stmt(stmt):
+                    attr = _acquire_attr(call)
+                    if attr:
+                        acquires.append((stmt, call, attr))
+            if not acquires:
+                continue
+            cfg = None
+            for stmt, call, attr in acquires:
+                line = call.lineno
+                if (f.is_disabled(line, RULE)
+                        or f.has_token(line, "ownership-transfer")
+                        or f.has_token(fn.lineno, "ownership-transfer")):
+                    continue
+                if cfg is None:
+                    cfg = build_cfg(fn)
+                node_ids = [nid for nid, s in cfg.stmts.items()
+                            if s is stmt]
+                if not node_ids:
+                    continue  # statement inside a nested def's own scope
+                release_attrs = FAMILIES[attr]
+                releases = cfg.nodes_for(
+                    lambda s: _releases(s, release_attrs))
+                if any(cfg.reaches_exit_avoiding(nid, releases)
+                       for nid in node_ids):
+                    yield Finding(
+                        rule=RULE, path=f.rel, line=line,
+                        message=(f"`.{attr}(...)` has an exit path with no "
+                                 f"matching {sorted(release_attrs)} release; "
+                                 "use try/finally or annotate "
+                                 "`# reprolint: ownership-transfer`"),
+                        symbol=qual)

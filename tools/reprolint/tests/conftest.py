@@ -1,0 +1,6 @@
+import os
+import sys
+
+_TOOLS = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+if _TOOLS not in sys.path:
+    sys.path.insert(0, _TOOLS)

@@ -1,0 +1,12 @@
+# reprolint-fixture: role=engine
+"""Seeded violation: a runtime invariant guarded by a bare assert."""
+
+
+class Pool:
+    def __init__(self, n_blocks):
+        assert n_blocks >= 2, "need a usable block"  # erased under -O
+        self.n_blocks = n_blocks
+
+    def free(self, bid, ref):
+        assert ref[bid] > 0
+        ref[bid] -= 1

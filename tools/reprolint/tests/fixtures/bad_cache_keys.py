@@ -1,0 +1,21 @@
+# reprolint-fixture: role=src
+"""Seeded violations: a step cache keyed without the trace-time inputs,
+and a jitted function closing over a mutable module global."""
+import jax
+
+from somewhere import _paged_kernel_mode, table_version, build  # noqa
+
+_STEP_CACHE: dict = {}
+_TUNING_TABLE = {"lanes": 4}
+
+
+def make_step_stale(cfg, remat):
+    key = ("fwd", cfg, remat, _paged_kernel_mode())   # missing table_version
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = build(cfg, remat)
+    return _STEP_CACHE[key]
+
+
+@jax.jit
+def frozen_lanes_step(x):
+    return x * _TUNING_TABLE["lanes"]   # value baked into the first trace

@@ -1,0 +1,21 @@
+# reprolint-fixture: role=engine
+"""Seeded violations: an unannotated host sync in the tick assembly and a
+device->host transfer inside a jitted function."""
+import functools
+
+import jax
+import numpy as np
+
+
+class Engine:
+    def tick(self, out):
+        jax.block_until_ready(out.dec_logits)       # unannotated barrier
+        logits = np.asarray(out.dec_logits)         # unannotated transfer
+        return logits.argmax()
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bad_step(x, n):
+    host = np.asarray(x)        # sync inside a trace
+    s = float(x.sum())          # traced value forced to host
+    return host, s, x.item()    # and an .item()

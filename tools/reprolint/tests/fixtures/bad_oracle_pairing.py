@@ -1,0 +1,22 @@
+# reprolint-fixture: role=kernels
+"""Seeded violations: a pallas_call entry point with no *_ref oracle, and
+one whose oracle exists but no test exercises the pair."""
+from jax.experimental import pallas as pl
+
+
+def orphan_matmul(x, w):
+    # no orphan_matmul_ref anywhere
+    return pl.pallas_call(_kern, out_shape=None)(x, w)
+
+
+def untested_scan(x):
+    # untested_scan_ref exists below, but no tests-role file mentions both
+    return pl.pallas_call(_kern, out_shape=None)(x)
+
+
+def untested_scan_ref(x):
+    return x
+
+
+def _kern(x_ref, o_ref):
+    o_ref[...] = x_ref[...]

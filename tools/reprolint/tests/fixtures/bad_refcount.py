@@ -1,0 +1,16 @@
+# reprolint-fixture: role=engine
+"""Seeded violations: acquires with leaky exit paths."""
+
+
+class Admitter:
+    def admit_leaky(self, store, name, budget):
+        slot = store.acquire(name)
+        if budget <= 0:
+            return None          # leaks the acquire on this path
+        store.release(name)
+        return slot
+
+    def adopt_unpaired(self, allocator, bids):
+        for bid in bids:
+            allocator.incref(bid)   # no decref on any path, no annotation
+        return len(bids)

@@ -1,0 +1,18 @@
+# reprolint-fixture: role=engine
+"""Clean counterpart: typed exceptions survive python -O; a deliberate
+trace-time assert is annotated."""
+
+
+class InvariantError(RuntimeError):
+    pass
+
+
+class Pool:
+    def __init__(self, n_blocks):
+        if n_blocks < 2:
+            raise InvariantError("need a usable block")
+        self.n_blocks = n_blocks
+
+    def check_shape(self, x, d):
+        assert x.shape[-1] == d  # reprolint: allow-assert
+        return x

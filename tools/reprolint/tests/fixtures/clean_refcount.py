@@ -1,0 +1,22 @@
+# reprolint-fixture: role=engine
+"""Clean counterpart: try/finally pairing, and an explicit ownership
+transfer for a ref that a long-lived table owns."""
+
+
+class Admitter:
+    def admit_paired(self, store, name, budget):
+        slot = store.acquire(name)
+        try:
+            if budget <= 0:
+                return None
+            return slot
+        finally:
+            store.release(name)
+
+    def adopt_into_table(self, allocator, table, bids):
+        for bid in bids:
+            # reprolint: ownership-transfer — the table owns the ref;
+            # free() decrefs when the slot is released
+            allocator.incref(bid)
+            table.append(bid)
+        return len(bids)

@@ -1,0 +1,10 @@
+# reprolint-fixture: role=tests
+"""Test-evidence fixture: mentions the clean kernel AND its oracle, so
+the pairing rule sees the clean entry as fully covered.  (Deliberately
+not named test_*.py — pytest must not collect fixture code.)"""
+from clean_oracle_pairing import fused_rowsum, fused_rowsum_ref
+
+
+def check_fused_rowsum_matches_ref():
+    x = [[1.0, 2.0]]
+    assert fused_rowsum(x) == fused_rowsum_ref(x)

@@ -1,0 +1,207 @@
+"""Tests for the reprolint linter itself: the fixture corpus, the
+annotation machinery, the baseline gate, and a meta-test pinning the real
+tree to the checked-in baseline."""
+import json
+import os
+
+import pytest
+
+from reprolint import baseline as baseline_mod
+from reprolint.cli import main, run_paths, self_check
+from reprolint.core import Finding, Project, SourceFile
+from reprolint.registry import all_rules
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+FIXTURES = os.path.join(HERE, "fixtures")
+REPO_ROOT = os.path.abspath(os.path.join(HERE, "..", "..", ".."))
+
+ALL_RULES = (
+    "no-bare-invariant-assert",
+    "kernel-oracle-pairing",
+    "host-sync-in-hot-path",
+    "refcount-retain-pairing",
+    "jit-cache-key-hygiene",
+)
+
+
+def _fixture_findings():
+    return run_paths(REPO_ROOT, [FIXTURES])
+
+
+def _by_file(findings):
+    out = {}
+    for f in findings:
+        out.setdefault(os.path.basename(f.path), []).append(f)
+    return out
+
+
+# -- fixture corpus ---------------------------------------------------------
+
+def test_registry_has_all_rules():
+    assert set(all_rules()) == set(ALL_RULES)
+
+
+def test_every_rule_catches_a_seeded_violation():
+    by_rule = {}
+    for f in _fixture_findings():
+        if os.path.basename(f.path).startswith("bad_"):
+            by_rule.setdefault(f.rule, []).append(f)
+    for rule in ALL_RULES:
+        assert by_rule.get(rule), f"rule {rule} caught nothing in bad_*"
+
+
+def test_clean_fixtures_are_silent():
+    flagged = [f for f in _fixture_findings()
+               if os.path.basename(f.path).startswith("clean_")]
+    assert flagged == [], [f.render() for f in flagged]
+
+
+def test_self_check_passes_on_shipped_corpus(capsys):
+    assert self_check(REPO_ROOT) == 0
+    assert "self-check: OK" in capsys.readouterr().out
+
+
+def test_bare_assert_findings_name_the_symbols():
+    hits = _by_file(_fixture_findings())["bad_bare_assert.py"]
+    assert all(f.rule == "no-bare-invariant-assert" for f in hits)
+    assert len(hits) == 2
+    assert all("python -O" in f.message for f in hits)
+
+
+def test_oracle_pairing_distinguishes_missing_oracle_from_missing_test():
+    hits = _by_file(_fixture_findings())["bad_oracle_pairing.py"]
+    msgs = {f.symbol: f.message for f in hits}
+    assert "no matching *_ref oracle" in msgs["orphan_matmul"]
+    assert "no test exercises" in msgs["untested_scan"]
+
+
+def test_refcount_rule_flags_leaky_path_and_unpaired_incref():
+    hits = _by_file(_fixture_findings())["bad_refcount.py"]
+    syms = {f.symbol for f in hits}
+    assert "Admitter.admit_leaky" in syms
+    assert "Admitter.adopt_unpaired" in syms
+
+
+def test_cache_key_rule_names_the_missing_call():
+    hits = _by_file(_fixture_findings())["bad_cache_keys.py"]
+    key_hits = [f for f in hits if "omits trace-time" in f.message]
+    closure_hits = [f for f in hits if "mutable module global" in f.message]
+    assert any("table_version" in f.message for f in key_hits)
+    assert any("_TUNING_TABLE" in f.message for f in closure_hits)
+
+
+# -- annotation machinery ---------------------------------------------------
+
+def _sf(text, rel="src/repro/serving/fake.py"):
+    return SourceFile(path=rel, rel=rel, text=text)
+
+
+def test_inline_annotation_attaches_to_its_line():
+    sf = _sf("x = 1  # reprolint: sync-point\n")
+    assert sf.has_token(1, "sync-point")
+    assert not sf.has_token(2, "sync-point")
+
+
+def test_standalone_comment_attaches_to_next_code_line():
+    sf = _sf("# reprolint: ownership-transfer\n"
+             "# more prose about why\n"
+             "store.incref(b)\n")
+    assert sf.has_token(3, "ownership-transfer")
+
+
+def test_disable_is_per_rule():
+    sf = _sf("assert x  # reprolint: disable=no-bare-invariant-assert\n")
+    assert sf.is_disabled(1, "no-bare-invariant-assert")
+    assert not sf.is_disabled(1, "host-sync-in-hot-path")
+
+
+def test_disable_suppresses_a_bare_assert():
+    text = ("class P:\n"
+            "    def f(self, n):\n"
+            "        assert n > 0  "
+            "# reprolint: disable=no-bare-invariant-assert\n")
+    project = Project([_sf(text)])
+    rule = all_rules()["no-bare-invariant-assert"]
+    assert list(rule.check(project)) == []
+
+
+def test_role_override_header():
+    sf = _sf("# reprolint-fixture: role=kernels\nx = 1\n",
+             rel="tools/whatever/snippet.py")
+    assert "kernels" in sf.roles and "src" in sf.roles
+
+
+def test_roles_from_path():
+    assert "engine" in _sf("x = 1\n", "src/repro/fleet/router.py").roles
+    assert "kernels" in _sf("x = 1\n", "src/repro/kernels/ops.py").roles
+    assert "tests" in _sf("x = 1\n", "tests/test_ops.py").roles
+
+
+# -- baseline gate ----------------------------------------------------------
+
+def _finding(**kw):
+    base = dict(rule="no-bare-invariant-assert", path="src/a.py", line=3,
+                message="m", symbol="f")
+    base.update(kw)
+    return Finding(**base)
+
+
+def test_baseline_split_matches_on_identity_not_line():
+    f = _finding(line=99)
+    entry = {"rule": f.rule, "path": f.path, "symbol": f.symbol,
+             "message": f.message}
+    new, old, dangling = baseline_mod.split([f], [entry])
+    assert new == [] and old == [f] and dangling == []
+
+
+def test_dangling_baseline_entry_is_reported():
+    entry = {"rule": "r", "path": "gone.py", "symbol": "f", "message": "m"}
+    new, old, dangling = baseline_mod.split([], [entry])
+    assert dangling == [entry]
+
+
+def test_dangling_baseline_entry_fails_the_cli(tmp_path, capsys):
+    bl = tmp_path / "baseline.json"
+    bl.write_text(json.dumps({"findings": [
+        {"rule": "no-bare-invariant-assert", "path": "gone.py",
+         "symbol": "f", "message": "m"}]}))
+    src = tmp_path / "src"
+    src.mkdir()
+    (src / "ok.py").write_text("x = 1\n")
+    rc = main([str(src), "--root", str(tmp_path), "--baseline", str(bl)])
+    assert rc == 1
+    assert "DANGLING" in capsys.readouterr().out
+
+
+def test_baseline_load_rejects_malformed(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"findings": [{"rule": "r"}]}))
+    with pytest.raises(ValueError):
+        baseline_mod.load(str(p))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean), "--root", str(tmp_path),
+                 "--no-baseline"]) == 0
+    capsys.readouterr()
+    assert main([FIXTURES, "--root", REPO_ROOT, "--no-baseline"]) == 1
+    capsys.readouterr()
+    assert main(["--baseline", str(tmp_path / "nope.json"), "src",
+                 "--root", REPO_ROOT]) == 2
+
+
+# -- meta-test: the real tree matches the checked-in baseline ---------------
+
+def test_repo_matches_checked_in_baseline():
+    """A fresh run over src/ + tests/ must agree exactly with
+    tools/reprolint/baseline.json: no new findings, no dangling entries.
+    The shipped baseline is empty — the tree is lint-clean."""
+    findings = run_paths(REPO_ROOT, ["src", "tests"])
+    bpath = os.path.join(REPO_ROOT, "tools", "reprolint", "baseline.json")
+    entries = baseline_mod.load(bpath)
+    new, old, dangling = baseline_mod.split(findings, entries)
+    assert new == [], [f.render() for f in new]
+    assert dangling == []
+    assert entries == []  # this PR fixed every finding instead of baselining
