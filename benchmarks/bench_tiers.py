@@ -1,0 +1,206 @@
+# Tiered KV memory: swap-to-host preemption vs recompute preemption.
+#
+# Four arms replay the SAME trace (one eos-probed greedy workload) through a
+# paged engine under enough block pressure to force preemptions:
+#
+#   recompute  host pool off (``kv_host_blocks=0``) — the PR-4 baseline:
+#              every preemption discards the victim's KV and re-prefills.
+#   swap       host pool on.  At preemption the victim's committed blocks
+#              D2H-copy into the HostBlockPool; re-admission restores them
+#              H2D and suffix-prefill computes only the final token.  The
+#              cost model prices the transfer cheaper than the recompute, so
+#              the decision rule chooses swap every time.
+#   decline    host pool on, but with D2H/H2D per-byte cost inflated until
+#              transfer loses to recompute.  The decision rule must now
+#              decline EVERY swap (``kv_swap_skips == preemptions``,
+#              ``kv_swap_outs == 0``) and the arm must behave byte-
+#              identically to the recompute baseline — the rule, not the
+#              pool, owns the choice.
+#   quant      swap arm with ``kv_host_quant`` — host residency stored
+#              int8.  EXACTNESS-EXEMPT by design (dequantized KV is not
+#              bit-identical); gated on completion + leak-freedom + the
+#              capacity claim (quantized per-block bytes < raw).
+#
+# Exactness is asserted FIRST: the swap and decline arms must produce
+# byte-identical outputs to the recompute baseline at equal HBM — tiering
+# changes *when* KV is materialized, never *what* the model computes.
+# Every logged swap decision is then replayed through the analytic rule
+# (``swap_beats_recompute`` on statically-known bytes/tokens) and must
+# match what the engine actually chose: hit rate 1.0 or the gate fails.
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+
+import numpy as np
+
+from benchmarks.common import build_model, csv
+from repro.serving.clock import CostModel
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import swap_beats_recompute
+from repro.serving.request import Request, State
+from repro.serving.slo import SLOConfig, slo_attainment
+
+COST = CostModel()
+# transfer priced ~3 orders above recompute: the rule must decline
+COST_DECLINE = dataclasses.replace(COST, d2h_per_byte=1e-3, h2d_per_byte=1e-3)
+BLOCK = 16
+S_MAX = 96
+MAX_NEW = 80
+N_BLOCKS = 16        # tight enough that over-admission must preempt
+N_REQUESTS = 12
+HOST_BLOCKS = 24
+OVER_ADMIT = 1.5
+
+
+def _requests(vocab: int, eos: int):
+    rng = np.random.default_rng(9)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, 12).astype(np.int32),
+                    adapter="lora0", max_new_tokens=MAX_NEW, eos_token=eos,
+                    arrival=0.05 * i)
+            for i in range(N_REQUESTS)]
+
+
+def _engine(model, host_blocks: int, cost: CostModel, quant: bool = False):
+    return UnifiedEngine(model, EngineConfig(
+        capacity=8, pf_capacity=4, s_max=S_MAX, block_size=BLOCK,
+        n_blocks=N_BLOCKS, over_admit=OVER_ADMIT, virtual_time=True,
+        cost=cost, hash_dedup=False, prefill_chunk=BLOCK,
+        kv_host_blocks=host_blocks, kv_host_quant=quant))
+
+
+def _probe_eos(model) -> int:
+    """Most-common greedy token of a probe request = an eos that actually
+    fires, so arms finish early and preemption victims get re-admitted."""
+    eng = _engine(model, 0, COST)
+    probe = _requests(model.cfg.vocab, eos=-1)[0]
+    eng.submit(probe)
+    eng.run(max_ticks=20000)
+    return int(Counter(probe.output).most_common(1)[0][0])
+
+
+def _run_arm(model, eos: int, host_blocks: int, cost: CostModel,
+             quant: bool = False) -> dict:
+    eng = _engine(model, host_blocks, cost, quant)
+    for r in _requests(model.cfg.vocab, eos):
+        eng.submit(r)
+    m = eng.run(max_ticks=200000)
+    assert len(eng.finished) == N_REQUESTS
+    assert all(r.state is State.DONE for r in eng.finished)
+
+    # leak audit covers BOTH tiers: after draining the run and flushing
+    # every cache (hash index, adapter residency, host pool) the allocator
+    # must be fully free with zero reservation debt, and the host pool must
+    # hold neither swap sets nor demoted bytes
+    mgr = eng.cachemgr
+    pristine = mgr.pristine
+    mgr.flush_index()
+    mgr.flush_adapters()
+    mgr.flush_host()
+    hp = mgr.host_pool
+    leak_free = (pristine
+                 and mgr.allocator.n_free == mgr.allocator.usable
+                 and mgr.reserved_debt == 0
+                 and not mgr.tables
+                 and (hp is None or (hp.used_bytes == 0
+                                     and hp.n_swap_sets == 0
+                                     and hp.n_demoted == 0)))
+    return {
+        "finished": len(eng.finished),
+        "elapsed": m.elapsed,
+        "DTPS": m.decode_tokens / max(m.elapsed, 1e-9),
+        "slo_attainment": slo_attainment(eng.finished, SLOConfig()),
+        "preemptions": m.preemptions,
+        "recompute_tokens": m.preempted_tokens_recomputed,
+        "kv_swap_outs": m.kv_swap_outs,
+        "kv_swap_out_bytes": m.kv_swap_out_bytes,
+        "kv_swap_skips": m.kv_swap_skips,
+        "kv_restores": m.kv_restores,
+        "kv_restored_tokens": m.kv_restored_tokens,
+        "host_bytes_peak": m.host_bytes_peak,
+        "host_block_bytes": mgr.host_block_bytes,
+        "leak_free": leak_free,
+        "outputs": {r.rid: [int(t) for t in r.output] for r in eng.finished},
+        "decisions": eng.swap_decisions,
+    }
+
+
+def _replay_decisions(arm: dict, cost: CostModel):
+    """Re-derive every swap-or-recompute choice from statically-known
+    quantities (block count x per-block host bytes vs suffix tokens) and
+    count mismatches with what the engine actually did.  ``swapped`` must
+    also equal ``chose_swap``: a host pool refusal would silently degrade
+    the arm to recompute and still be byte-exact, so only this replay
+    catches it."""
+    hits = total = 0
+    for d in arm["decisions"]:
+        expected = d["blocks"] > 0 and swap_beats_recompute(
+            d["blocks"] * arm["host_block_bytes"],
+            d["recompute_tokens"], cost)
+        hits += (expected == d["chose_swap"]
+                 and d["swapped"] == d["chose_swap"])
+        total += 1
+    return hits, total
+
+
+def main() -> None:
+    model = build_model(n_adapters=1)
+    eos = _probe_eos(model)
+
+    base = _run_arm(model, eos, 0, COST)
+    swap = _run_arm(model, eos, HOST_BLOCKS, COST)
+    decline = _run_arm(model, eos, HOST_BLOCKS, COST_DECLINE)
+    quant = _run_arm(model, eos, HOST_BLOCKS, COST, quant=True)
+
+    # exactness FIRST: restored-KV decode must be byte-identical to
+    # recompute decode, and a declined swap must be indistinguishable from
+    # never having had a host pool
+    exact = swap["outputs"] == base["outputs"]
+    decline_exact = decline["outputs"] == base["outputs"]
+    assert exact, "swap-restore arm diverged from recompute baseline"
+    assert decline_exact, "decline arm diverged from recompute baseline"
+
+    hits_s, total_s = _replay_decisions(swap, COST)
+    hits_d, total_d = _replay_decisions(decline, COST_DECLINE)
+    decisions_total = total_s + total_d
+    hit_rate = ((hits_s + hits_d) / decisions_total
+                if decisions_total else 0.0)
+
+    speedup = base["elapsed"] / max(swap["elapsed"], 1e-9)
+    quant_ratio = quant["host_block_bytes"] / max(swap["host_block_bytes"], 1)
+    doc = {
+        "exact": exact,
+        "decline_exact": decline_exact,
+        "decision_hit_rate": hit_rate,
+        "decisions_total": decisions_total,
+        "speedup": speedup,
+        "quant_bytes_ratio": quant_ratio,
+        "host_quant_exempt": True,   # quant arm is exactness-exempt by flag
+        "workload": {"n_requests": N_REQUESTS, "n_blocks": N_BLOCKS,
+                     "host_blocks": HOST_BLOCKS, "over_admit": OVER_ADMIT,
+                     "block_size": BLOCK},
+        "arms": {name: {k: v for k, v in arm.items()
+                        if k not in ("outputs", "decisions")}
+                 for name, arm in (("recompute", base), ("swap", swap),
+                                   ("decline", decline), ("quant", quant))},
+    }
+    with open("BENCH_tiers.json", "w") as f:
+        json.dump(doc, f, indent=1)
+
+    csv("tiers_exact", 0.0, f"swap==recompute={exact}")
+    csv("tiers_decision_hit_rate", 0.0,
+        f"{hit_rate:.2f} over {decisions_total} decisions")
+    csv("tiers_recompute_tokens", 0.0,
+        f"base={base['recompute_tokens']} swap={swap['recompute_tokens']}")
+    csv("tiers_slo", 0.0,
+        f"base={base['slo_attainment']:.2f} swap={swap['slo_attainment']:.2f}")
+    csv("tiers_speedup", 0.0, f"{speedup:.3f}x")
+    csv("tiers_quant_bytes", 0.0,
+        f"ratio={quant_ratio:.2f} ({quant['host_block_bytes']}B vs "
+        f"{swap['host_block_bytes']}B)")
+
+
+if __name__ == "__main__":
+    main()

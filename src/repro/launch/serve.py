@@ -16,7 +16,7 @@ from repro.core.lora import LoRAConfig
 from repro.core.virtualization import AdapterStore, MixedLoraModel
 from repro.data import datasets, workload
 from repro.serving.engine import EngineConfig, UnifiedEngine
-from repro.serving.request import Request
+from repro.serving.request import PRIORITY_CLASSES, Request
 from repro.serving.slo import SLOConfig, slo_attainment
 from repro.training.trainer import MixedLoraTrainer, TrainerConfig
 
@@ -70,6 +70,26 @@ def main():
                          "charges only 1/F of outstanding reservation debt "
                          "and preempts (recompute) when lending comes due "
                          "(1.0 = conservative gate)")
+    ap.add_argument("--kv-host-blocks", type=int, default=0, metavar="N",
+                    help="tiered KV memory: host-side block pool sized to N "
+                         "device blocks' worth of host RAM.  Preemption "
+                         "victims swap out D2H (and restore H2D at "
+                         "re-admission) when the modeled transfer beats "
+                         "suffix recompute, and shed hash-index blocks "
+                         "demote to the host tier instead of being dropped "
+                         "(0 = recompute-only preemption)")
+    ap.add_argument("--kv-host-quant", action="store_true",
+                    help="int8-quantize host-tier KV residency (~2x host "
+                         "capacity at equal budget).  NOT bit-exact: "
+                         "restored K/V is dequantized, so outputs may "
+                         "differ from the recompute path")
+    ap.add_argument("--priority", default="standard",
+                    choices=["interactive", "standard", "batch", "mixed"],
+                    help="request priority class: interactive is preempted "
+                         "last and never lends its KV reservation; batch is "
+                         "preempted first and lends first under "
+                         "--over-admit; mixed round-robins the three "
+                         "classes across requests")
     ap.add_argument("--replicas", type=int, default=1, metavar="N",
                     help="in-process engine replicas behind one router "
                          "(shared base weights, per-replica KV pools and "
@@ -126,7 +146,9 @@ def main():
         prefill_chunk=args.prefill_chunk,
         hash_dedup=not args.no_hash_dedup,
         over_admit=args.over_admit,
-        adapter_paging=args.adapter_paging)
+        adapter_paging=args.adapter_paging,
+        kv_host_blocks=args.kv_host_blocks,
+        kv_host_quant=args.kv_host_quant)
     fleet = None
     if args.replicas > 1:
         from repro.fleet import FleetConfig, RouterConfig, build_fleet
@@ -161,10 +183,13 @@ def main():
                                         seed=args.seed)
     arrivals = workload.poisson_arrivals(args.rps, args.requests, args.seed)
     front = fleet if fleet is not None else eng
+    classes = (PRIORITY_CLASSES if args.priority == "mixed"
+               else (args.priority,))
     for i, (p, t) in enumerate(zip(prompts, arrivals)):
         front.submit(Request(rid=i, prompt=p, adapter=names[i % len(names)],
                              max_new_tokens=args.max_new, arrival=float(t),
-                             aux_embed=aux))
+                             aux_embed=aux,
+                             priority_class=classes[i % len(classes)]))
 
     if args.finetune:
         rows = datasets.alpaca_like(32, vocab=cfg.vocab, seed=args.seed)
@@ -216,6 +241,15 @@ def main():
               f"resident_hits={tot('adapter_resident_hits')} "
               f"blocks_resident={tot('adapter_blocks_resident')} "
               f"peak_coresident={tot('adapter_peak_coresident', max)}")
+    if args.kv_host_blocks > 0:
+        print(f"kv-tiers: host_blocks={args.kv_host_blocks} "
+              f"quant={args.kv_host_quant} "
+              f"swap_outs={tot('kv_swap_outs')} "
+              f"restores={tot('kv_restores')} "
+              f"skips={tot('kv_swap_skips')} "
+              f"demotions={tot('kv_demotions')} "
+              f"rehydrated={tot('kv_rehydrated_blocks')} "
+              f"host_peak_bytes={tot('host_bytes_peak', max)}")
     if eng.hash_dedup:
         print(f"dedup: hash_hits={m.hash_hits} "
               f"resident_blocks={tot('hash_blocks_resident')} "

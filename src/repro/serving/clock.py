@@ -49,6 +49,16 @@ class CostModel:
     # emulates paper-scale hardware, where swap-ins are far from free.
     adapter_swap_fixed: float = 2.5e-3
     adapter_h2d_per_byte: float = 4e-11
+    # tiered KV memory (host block pool): per-byte PCIe-class transfer
+    # rates for KV block payloads moving between HBM and host RAM.  These
+    # feed the swap-vs-recompute decision rule (``kvcache.transfer_cost``
+    # vs suffix-prefill recompute at ``prefill_per_tok``): at these
+    # defaults a reduced-model block (~KBs) transfers orders of magnitude
+    # cheaper than recomputing its 16-32 tokens of prefill, so swap wins
+    # whenever the victim's context is not already index-resident —
+    # exactly the regime the paper-scale hardware sits in.
+    h2d_per_byte: float = 4e-11
+    d2h_per_byte: float = 4e-11
 
 
 class VirtualClock:
@@ -68,7 +78,9 @@ class VirtualClock:
     def step_cost(self, pf_tokens: int, dec_rows: int, ft_tokens: int,
                   dec_extra_tokens: int = 0, remote_blocks: int = 0,
                   adapter_swaps: int = 0,
-                  adapter_swap_bytes: int = 0) -> float:
+                  adapter_swap_bytes: int = 0,
+                  kv_d2h_bytes: int = 0,
+                  kv_h2d_bytes: int = 0) -> float:
         """``dec_extra_tokens``: drafted tokens verified alongside the
         row's current token.  Decode is memory-bound — the row already pays
         ``decode_per_row`` for streaming weights + cache once — so extra
@@ -86,14 +98,24 @@ class VirtualClock:
         the LRU bank's voided-adapter reloads — both pay the same H2D
         price, which keeps equal-HBM comparisons honest).  Charged per
         transfer plus per byte; co-scheduling same-adapter requests
-        amortizes the whole term to one swap per adapter per tick."""
+        amortizes the whole term to one swap per adapter per tick.
+
+        ``kv_d2h_bytes`` / ``kv_h2d_bytes``: KV block payload moved between
+        HBM and the host block pool this step (swap-outs + demotions going
+        down, restores + rehydrations coming back up), charged at the
+        modeled PCIe rates — the same per-byte terms the swap-vs-recompute
+        decision rule prices, so a chosen swap costs on the clock exactly
+        what the rule predicted."""
         c = self.cost
         if (pf_tokens == 0 and dec_rows == 0 and ft_tokens == 0
-                and remote_blocks == 0 and adapter_swaps == 0):
+                and remote_blocks == 0 and adapter_swaps == 0
+                and kv_d2h_bytes == 0 and kv_h2d_bytes == 0):
             return 0.0
         return (c.fixed + c.prefill_per_tok * pf_tokens
                 + c.decode_per_row * dec_rows + c.ft_per_tok * ft_tokens
                 + c.prefill_per_tok * dec_extra_tokens
                 + c.remote_per_block * remote_blocks
                 + c.adapter_swap_fixed * adapter_swaps
-                + c.adapter_h2d_per_byte * adapter_swap_bytes)
+                + c.adapter_h2d_per_byte * adapter_swap_bytes
+                + c.d2h_per_byte * kv_d2h_bytes
+                + c.h2d_per_byte * kv_h2d_bytes)

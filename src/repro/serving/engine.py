@@ -21,7 +21,8 @@ from repro.core.virtualization import MixedLoraModel
 from repro.models.stream import UnifiedBatch
 from repro.serving.clock import CostModel, VirtualClock, WallClock
 from repro.serving.kvcache import (CacheManager, OutOfBlocksError,
-                                   PagedCacheManager, request_chain_keys)
+                                   PagedCacheManager, request_chain_keys,
+                                   swap_beats_recompute)
 from repro.serving.request import Request, State
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 from repro.serving.slo import Metrics, SLOConfig, spread_token_times
@@ -81,6 +82,22 @@ class EngineConfig:
     #                                   Default OFF: the static bank
     #                                   partition is the baseline
     cost: Optional[CostModel] = None  # virtual-clock cost model override
+    kv_host_blocks: int = 0           # tiered KV memory: host-side block
+    #                                   pool budget, in device blocks' worth
+    #                                   of host RAM.  > 0 enables swap-to-
+    #                                   host preemption (victims' blocks
+    #                                   D2H, restored H2D at re-admission
+    #                                   when the modeled transfer beats
+    #                                   suffix recompute) and demotion of
+    #                                   shed index blocks to the host tier.
+    #                                   0 = recompute-only preemption
+    #                                   (byte-identical baseline)
+    kv_host_quant: bool = False       # int8-quantize host-tier residency
+    #                                   (~2x host capacity at equal budget).
+    #                                   EXACTNESS-EXEMPT: dequantized KV is
+    #                                   not bit-identical, so outputs may
+    #                                   differ from the recompute path —
+    #                                   hence an explicit opt-in
 
 
 class UnifiedEngine:
@@ -90,11 +107,14 @@ class UnifiedEngine:
         self.cfg = model.cfg
         e = self.ecfg
         self.paged = e.paged and self.cfg.sliding_window == 0
+        self._cost = e.cost or CostModel()
         if self.paged:
             self.cachemgr = PagedCacheManager(
                 self.cfg, e.capacity, e.pf_capacity, e.s_max,
                 block_size=e.block_size, n_blocks=e.n_blocks,
-                over_admit=e.over_admit, hash_dedup=e.hash_dedup)
+                over_admit=e.over_admit, hash_dedup=e.hash_dedup,
+                host_blocks=e.kv_host_blocks, host_quant=e.kv_host_quant,
+                cost=self._cost)
         else:
             self.cachemgr = CacheManager(self.cfg, e.capacity, e.pf_capacity,
                                          e.s_max)
@@ -120,6 +140,18 @@ class UnifiedEngine:
                              else 0)
         self.prefilling: Dict[int, Request] = {}  # slot -> partial prefill
         self.hash_dedup = self.paged and e.hash_dedup
+        # tiered KV memory: swap-outs are only worth taking when restore
+        # can actually skip the restored span — which is the suffix-prefill
+        # cached_len path.  Models that must recompute the full prompt
+        # (hybrid/mamba) keep recompute-only preemption; demote/rehydrate
+        # of index blocks rides the normal adoption path and stays on.
+        self.kv_tiering = (self.paged and e.kv_host_blocks > 0
+                           and self.suffix_prefill)
+        self._kv_seen = (0, 0)                 # (d2h, h2d) bytes charged
+        # every swap-vs-recompute decision, in order — bench_tiers replays
+        # the rule analytically against this log and gates on an exact
+        # match (the "decision hit rate")
+        self.swap_decisions: List[dict] = []
 
         self.forward_step = make_forward_step(self.cfg, attn_chunk=e.attn_chunk)
         self.grad_step = make_grad_step(self.cfg, attn_chunk=e.attn_chunk)
@@ -262,6 +294,7 @@ class UnifiedEngine:
                     r.state = State.FAILED
                     r.t_finish = self.clock.now()
                     self._drop_retain(r)
+                    self._drop_swap(r)
                     self.waiting.remove(r)
                     self.finished.append(r)
             suffix_fn = None
@@ -468,10 +501,21 @@ class UnifiedEngine:
             swaps = store.swap_ins - self._swaps_seen[0]
             swap_bytes = store.swap_in_bytes - self._swaps_seen[1]
             self._swaps_seen = (store.swap_ins, store.swap_in_bytes)
+            # KV host-tier traffic since the last charge (same cumulative-
+            # counter delta pattern as adapter swaps; bytes moved on a tick
+            # that returned early are picked up by the next charging tick)
+            kvd = kvh = 0
+            if self.paged:
+                kvd = self.cachemgr.kv_d2h_bytes - self._kv_seen[0]
+                kvh = self.cachemgr.kv_h2d_bytes - self._kv_seen[1]
+                self._kv_seen = (self.cachemgr.kv_d2h_bytes,
+                                 self.cachemgr.kv_h2d_bytes)
             cost = self.clock.step_cost(pf_tok, len(self.active), ft_tok,
                                         dec_extra_tokens=dec_extra,
                                         adapter_swaps=swaps,
-                                        adapter_swap_bytes=swap_bytes)
+                                        adapter_swap_bytes=swap_bytes,
+                                        kv_d2h_bytes=kvd,
+                                        kv_h2d_bytes=kvh)
             self.clock.charge(cost)
             self.metrics.busy_time += cost
         now = self.clock.now()
@@ -589,6 +633,16 @@ class UnifiedEngine:
             self.metrics.hash_blocks_resident = \
                 self.cachemgr.hash_blocks_resident
             self.metrics.remote_fetch_blocks = self.cachemgr.remote_imports
+            if self.cachemgr.host_pool is not None:
+                m, hp = self.cachemgr, self.cachemgr.host_pool
+                self.metrics.kv_swap_outs = m.kv_swap_outs
+                self.metrics.kv_swap_out_bytes = m.kv_swap_out_bytes
+                self.metrics.kv_restores = m.kv_restores
+                self.metrics.kv_restore_bytes = m.kv_restore_bytes
+                self.metrics.kv_demotions = m.kv_demotions
+                self.metrics.kv_rehydrated_blocks = m.kv_rehydrations
+                self.metrics.host_bytes_used = hp.used_bytes
+                self.metrics.host_bytes_peak = hp.peak_used_bytes
             if self.adapter_paging:
                 self.metrics.adapter_blocks_resident = \
                     self.cachemgr.adapter_blocks_resident
@@ -619,6 +673,7 @@ class UnifiedEngine:
                     r.state = State.FAILED
                     r.t_finish = self.clock.now()
                     self._drop_retain(r)
+                    self._drop_swap(r)
                     self.waiting.remove(r)
                     self.finished.append(r)
                     continue
@@ -633,13 +688,25 @@ class UnifiedEngine:
                                               r.adapter,
                                               headroom=self._headroom_for(r),
                                               shareable=r.aux_embed is None,
-                                              keys=self._keys_of(r))
+                                              keys=self._keys_of(r),
+                                              priority=r.priority_class)
                 slot = adm[0] if adm is not None else None
                 reused = adm[1] if adm is not None else 0
             else:
                 slot = self.cachemgr.alloc()
             if slot is None:
                 break
+            if r.swap_sid is not None:
+                # re-admission of a swapped-out victim: the H2D restore
+                # covers its rolled context minus one live token, so the
+                # suffix prefill below recomputes exactly that token —
+                # byte-identical to the recompute path, without the
+                # recompute
+                restored = self.cachemgr.restore_swap(slot, r.swap_sid)
+                r.swap_sid = None
+                if restored > reused:
+                    self.metrics.kv_restored_tokens += restored - reused
+                    reused = restored
             if r.adapter and not r.adapter_retained:
                 # a preempted request kept its retain across the requeue
                 # (anti-thrash) — only first admission takes a new hold
@@ -724,9 +791,14 @@ class UnifiedEngine:
             self._preempt(victim)
 
     def _pick_victim(self, exclude: frozenset) -> Optional[int]:
-        """Lowest-priority resident: latest arrival, tie-broken toward the
-        lowest speculative acceptance rate (the row burning the most verify
-        compute per emitted token), then the latest rid for determinism."""
+        """Lowest-priority resident.  Priority CLASS dominates — batch
+        residents are evicted before standard, interactive last ("batch
+        lends first, interactive preempts last") — then, within a class:
+        latest arrival, tie-broken toward the lowest speculative acceptance
+        rate (the row burning the most verify compute per emitted token),
+        then the latest rid for determinism.  All-standard traffic (the
+        default) makes the class rank a constant and reproduces the
+        pre-class victim order exactly."""
         cands = [(s, r) for s, r in list(self.active.items())
                  + list(self.prefilling.items()) if s not in exclude]
         if not cands:
@@ -736,7 +808,7 @@ class UnifiedEngine:
             s, r = item
             ctl = self._spec.get(s)
             acc = ctl[1].rate if ctl is not None else 0.0
-            return (r.arrival, -acc, r.rid)
+            return (r.class_rank, r.arrival, -acc, r.rid)
 
         return max(cands, key=badness)[0]
 
@@ -767,12 +839,52 @@ class UnifiedEngine:
         r.preemptions += 1
         r.recount_pending = True
         self._spec.pop(slot, None)
+        if self.kv_tiering:
+            # tiered KV memory: swap the victim's blocks to host instead of
+            # recomputing when the modeled transfer beats suffix recompute.
+            # Must run BEFORE free() — the D2H gather reads the table.
+            r.swap_sid = self._maybe_swap_out(slot, r)
         self.cachemgr.free(slot)
         # the victim KEEPS its adapter retain: it resumes from the head of
         # the waiting queue, and evicting (or pool-shedding) its adapter
         # just to swap it straight back in would be pure thrash
         self.waiting.insert(0, r)
         self.metrics.preemptions += 1
+
+    def _maybe_swap_out(self, slot: int, r: Request) -> Optional[int]:
+        """Price one preemption victim's swap with the virtual cost model
+        and take it only when it wins; every decision is appended to
+        ``swap_decisions`` so the bench can replay the rule analytically.
+        ``recompute_tokens`` is the victim's committed tokens minus the
+        blocks OTHER holders keep device-resident through the free (sibling
+        tables, multi-adopter index entries) — what suffix prefill would
+        actually recompute if the remaining index-only blocks are shed
+        before re-admission, which is precisely the memory-pressure regime
+        preemption runs in."""
+        m = self.cachemgr
+        nb = m.swap_payload_blocks(slot)
+        tokens = int(m.lens[slot])
+        surviving = m.surviving_blocks(slot, nb)
+        recompute = max(tokens - surviving * m.block_size, 0)
+        stored = nb * m.host_block_bytes
+        chose = nb > 0 and swap_beats_recompute(stored, recompute,
+                                                self._cost)
+        sid = m.swap_out(slot) if chose else None
+        self.swap_decisions.append({
+            "rid": r.rid, "tokens": tokens, "blocks": nb,
+            "stored_bytes": stored, "recompute_tokens": recompute,
+            "chose_swap": bool(chose), "swapped": sid is not None})
+        if sid is None:
+            self.metrics.kv_swap_skips += 1
+        return sid
+
+    def _drop_swap(self, r: Request):
+        """Release the request's host swap set (if any) exactly once — on
+        failure paths that retire the request before re-admission ever
+        consumes it."""
+        if r.swap_sid is not None and self.paged:
+            self.cachemgr.drop_swap(r.swap_sid)
+            r.swap_sid = None
 
     def _scatter_verify(self, slot: int, r: Request, logits: np.ndarray,
                         draft: Optional[np.ndarray], now: float):

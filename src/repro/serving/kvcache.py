@@ -96,6 +96,9 @@ import numpy as np
 from repro.errors import ConfigInvariantError, InvariantError
 from repro.models.configs import ModelConfig
 from repro.models.model import init_cache, init_paged_cache, STATE_KEYS
+from repro.models.quant import dequant_leaf, quantize_leaf
+from repro.serving.clock import CostModel
+from repro.serving.request import priority_rank
 
 
 # cache leaves are [n_periods, n_rows, ...]: rows live on axis 1
@@ -147,6 +150,19 @@ def _copy_block_from(dst_cache, src_cache, src: jax.Array, dst: jax.Array):
     return {"layers": layers}
 
 
+# host-tier sibling of _copy_block_from: scatter a restored payload (one
+# per-layer dict of [n_periods, n, block_size, ...] leaves, STATE leaves
+# absent) into ``bids`` of the destination pool.  Donated destination —
+# the caller always replaces the cache with the result.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _blocks_write(cache, bids: jax.Array, payload):
+    layers = tuple(
+        {k: (v.at[:, bids].set(pd[k]) if k in pd else v)
+         for k, v in d.items()}
+        for d, pd in zip(cache["layers"], payload))
+    return {"layers": layers}
+
+
 class KVAccountingError(InvariantError):
     """A block-accounting invariant was violated: refcount misuse, or a
     within-reservation ``grow`` finding an empty pool under the conservative
@@ -161,6 +177,145 @@ class OutOfBlocksError(RuntimeError):
     was lent out by over-admission).  Not a bug: under ``over_admit > 1``
     this is the growth-failure signal the engine answers by preempting a
     resident request to reclaim capacity."""
+
+
+def swap_beats_recompute(stored_bytes: int, recompute_tokens: int,
+                         cost: CostModel) -> bool:
+    """THE tiered-memory decision rule: a D2H + H2D round-trip of the
+    stored payload vs suffix-prefill recompute of the tokens no other
+    holder keeps device-resident.  Strict ``<`` — at a tie recompute wins
+    (not transferring is simpler than a free transfer).  Module-level and
+    pure so the bench can replay every engine decision analytically and
+    gate on an exact hit rate."""
+    transfer = stored_bytes * (cost.d2h_per_byte + cost.h2d_per_byte)
+    return transfer < recompute_tokens * cost.prefill_per_tok
+
+
+class HostBlockPool:
+    """Host-RAM tier behind the device block pool (tiered KV memory).
+
+    One byte budget (``capacity_bytes``: the host RAM the operator grants,
+    expressed by the engine as N device blocks' worth of raw K/V payload),
+    two entry kinds:
+
+    * **swap sets** — a preemption victim's gathered blocks, PINNED until
+      the victim is re-admitted (restored H2D) or dropped.  Owned by the
+      waiting request through ``Request.swap_sid`` — working state, not
+      cache, so ``pristine`` requires none outstanding.
+    * **demoted blocks** — single index-shed blocks keyed by the same
+      content hash the device index uses; an LRU-evictable cache (oldest
+      untouched entry dropped first when space is needed), never pinned.
+
+    Entry byte sizes are the manager's STATIC per-block footprint (raw or
+    int8-quantized), not ``ndarray.nbytes`` — accounting must be exactly
+    reproducible by the bench's analytic replay.  With ``quant`` the same
+    byte budget holds roughly twice the blocks; the price is that restored
+    K/V is no longer bit-identical (the engine exposes that only behind an
+    explicit exactness-exempt flag)."""
+
+    def __init__(self, capacity_bytes: int, quant: bool = False):
+        if capacity_bytes <= 0:
+            raise ConfigInvariantError(
+                "host block pool needs a positive byte budget")
+        self.capacity_bytes = int(capacity_bytes)
+        self.quant = bool(quant)
+        self._swap_sets: Dict[int, dict] = {}
+        self._demoted: "OrderedDict[str, dict]" = OrderedDict()
+        self._next_sid = 0
+        self.used_bytes = 0
+        self.peak_used_bytes = 0
+        self.evictions = 0            # demoted entries LRU-dropped for space
+
+    # -- gauges --------------------------------------------------------------
+    @property
+    def n_swap_sets(self) -> int:
+        return len(self._swap_sets)
+
+    @property
+    def n_demoted(self) -> int:
+        return len(self._demoted)
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity_bytes - self.used_bytes
+
+    def demoted_keys(self):
+        """Snapshot of host-resident demoted keys (tests: the two-tier
+        disjointness invariant checks this against the device index)."""
+        return set(self._demoted)
+
+    # -- space ---------------------------------------------------------------
+    def _evict_for(self, nbytes: int) -> bool:
+        """Make room by LRU-dropping demoted entries; swap sets are pinned
+        and never touched.  False when even a full demoted flush cannot
+        fit ``nbytes`` (the pinned tier has the budget)."""
+        if nbytes > self.capacity_bytes:
+            return False
+        while (self.used_bytes + nbytes > self.capacity_bytes
+               and self._demoted):
+            _, old = self._demoted.popitem(last=False)
+            self.used_bytes -= old["bytes"]
+            self.evictions += 1
+        return self.used_bytes + nbytes <= self.capacity_bytes
+
+    def _charge(self, nbytes: int):
+        self.used_bytes += nbytes
+        self.peak_used_bytes = max(self.peak_used_bytes, self.used_bytes)
+
+    # -- swap sets (pinned) --------------------------------------------------
+    def put_swap(self, entry: dict) -> Optional[int]:
+        if not self._evict_for(entry["bytes"]):
+            return None
+        sid = self._next_sid
+        self._next_sid += 1
+        self._swap_sets[sid] = entry
+        self._charge(entry["bytes"])
+        return sid
+
+    def pop_swap(self, sid: int, missing_ok: bool = False) -> Optional[dict]:
+        entry = self._swap_sets.pop(sid, None)
+        if entry is None:
+            if missing_ok:
+                return None
+            raise KVAccountingError(f"unknown swap set {sid}")
+        self.used_bytes -= entry["bytes"]
+        return entry
+
+    # -- demoted blocks (LRU cache) ------------------------------------------
+    def put_demoted(self, key: str, entry: dict) -> bool:
+        if key in self._demoted:      # refresh: same content by construction
+            self._demoted.move_to_end(key)
+            return True
+        if not self._evict_for(entry["bytes"]):
+            return False
+        self._demoted[key] = entry
+        self._charge(entry["bytes"])
+        return True
+
+    def has_demoted(self, key: str) -> bool:
+        return key in self._demoted
+
+    def pop_demoted(self, key: str) -> Optional[dict]:
+        entry = self._demoted.pop(key, None)
+        if entry is not None:
+            self.used_bytes -= entry["bytes"]
+        return entry
+
+    def drop_demoted(self, key: str) -> bool:
+        """Forget a demoted entry (disjointness: fired when its key becomes
+        device-resident again through publish/import)."""
+        return self.pop_demoted(key) is not None
+
+    def flush_demoted(self) -> int:
+        """Drop every demoted entry (drain/leak checks — demoted blocks are
+        cache; swap sets are NOT flushed, they are owned by waiting
+        requests and must be restored or dropped through them).  Returns
+        entries dropped."""
+        n = len(self._demoted)
+        for e in self._demoted.values():
+            self.used_bytes -= e["bytes"]
+        self._demoted.clear()
+        return n
 
 
 def projected_blocks(prompt_len: int, max_new: int, block_size: int,
@@ -362,7 +517,8 @@ class PagedCacheManager:
     def __init__(self, cfg: ModelConfig, capacity: int, pf_capacity: int,
                  s_max: int, block_size: int = 32, n_blocks: int = 0,
                  over_admit: float = 1.0, hash_dedup: bool = True,
-                 dtype=None):
+                 host_blocks: int = 0, host_quant: bool = False,
+                 cost: Optional[CostModel] = None, dtype=None):
         if cfg.sliding_window > 0:
             raise ValueError("paged cache does not support sliding windows; "
                              "use the dense CacheManager")
@@ -426,12 +582,46 @@ class PagedCacheManager:
         # adapter payload capacity equals its K/V footprint (bytes of every
         # block-addressed cache leaf per block, across periods).
         bb = 0
+        qb = 0
         for d in self.cache["layers"]:
             for k, v in d.items():
                 if k in STATE_KEYS:
                     continue
-                bb += (v.size // v.shape[1]) * v.dtype.itemsize
+                e = v.size // v.shape[1]          # elements per block
+                bb += e * v.dtype.itemsize
+                # int8 residency footprint: 1-byte payload plus f32 scales
+                # over quantize_leaf's axis=-2 reduction of the leaf
+                qb += e + (e // v.shape[-2]) * 4
         self.adapter_block_bytes = max(int(bb), 1)
+        # ---- tiered KV memory: host block pool (see HostBlockPool).  The
+        # budget is ``host_blocks`` RAW device blocks' worth of host RAM;
+        # quantized residency stores each block at the smaller int8
+        # footprint, which is exactly how quant ~doubles host capacity at
+        # equal budget.  Byte accounting everywhere uses these two STATIC
+        # per-block numbers, never ndarray.nbytes — the bench replays the
+        # swap decisions analytically and must reproduce them bit-for-bit.
+        self.cost = cost                  # CostModel; None = transfers free
+        self.host_quant = bool(host_quant)
+        self.host_block_bytes = max(int(qb), 1) if host_quant \
+            else self.adapter_block_bytes
+        self.host_pool: Optional[HostBlockPool] = (
+            HostBlockPool(host_blocks * self.adapter_block_bytes,
+                          quant=host_quant)
+            if host_blocks > 0 else None)
+        self.kv_swap_outs = 0             # preemption swap-outs (D2H)
+        self.kv_swap_out_bytes = 0
+        self.kv_restores = 0              # re-admission restores (H2D)
+        self.kv_restore_bytes = 0
+        self.kv_swap_drops = 0            # swap sets released unrestored
+        self.kv_demotions = 0             # index sheds captured to host (D2H)
+        self.kv_demote_bytes = 0
+        self.kv_rehydrations = 0          # demoted blocks re-published (H2D)
+        self.kv_rehydrate_bytes = 0
+        # per-priority-rank reservation debt (interactive/standard/batch):
+        # shapes the over-admission lending ORDER in charged_debt.  The
+        # rank-indexed sum always equals self._debt.
+        self._class_debt = [0, 0, 0]
+        self._slot_rank: Dict[int, int] = {}
         self._adapter_pool = None                   # lazy [n_blocks, abb] u8
         self.adapter_tables: Dict[str, List[int]] = {}
         self._adapter_bytes: Dict[str, int] = {}    # true payload bytes
@@ -460,8 +650,25 @@ class PagedCacheManager:
         gate charges only a ``1 / over_admit`` slice and lends the rest out,
         betting that admitted requests rarely all reach their worst-case
         length at once — ``grow`` failures (and the engine's recompute
-        preemption) cover the bet when it loses."""
-        return math.ceil(self._debt / self.over_admit)
+        preemption) cover the bet when it loses.
+
+        The lending ORDER is priority-shaped: the lendable slice comes out
+        of batch-class debt first, then standard — interactive debt is
+        never lent, so an interactive request's ``grow`` can only be
+        starved by over-admission of its own class ("batch lends first,
+        interactive preempts last").  With every request standard (the
+        default) this reduces exactly to ``ceil(debt / over_admit)``."""
+        lend = self._debt - math.ceil(self._debt / self.over_admit)
+        lend_batch = min(lend, self._class_debt[2])
+        lend_std = min(lend - lend_batch, self._class_debt[1])
+        return self._debt - lend_batch - lend_std
+
+    def _debt_add(self, slot: int, delta: int):
+        """The ONLY mutation path for reservation debt: keeps the
+        per-priority-class split (lending order) in lockstep with the
+        total every other budget property is derived from."""
+        self._debt += delta
+        self._class_debt[self._slot_rank.get(slot, 1)] += delta
 
     @property
     def free_blocks(self) -> int:
@@ -530,10 +737,15 @@ class PagedCacheManager:
         """Post-drain invariant: no live tables, no reservation debt, and
         every non-free block is held ONLY by the hash index or an unpinned
         resident adapter (pure cache, fully reclaimable).  The leak check
-        benches and tests gate on — cache residency is not a leak."""
+        benches and tests gate on — cache residency is not a leak.  With a
+        host tier: no live swap sets either (a swap set is a preempted
+        request's working state; DEMOTED host entries are cache, like the
+        index, and are reclaimed by ``flush_host``)."""
         return (not self.tables and self._debt == 0
                 and self.allocator.n_free + self.reclaimable_blocks
-                == self.allocator.usable)
+                == self.allocator.usable
+                and (self.host_pool is None
+                     or self.host_pool.n_swap_sets == 0))
 
     # -- content-hash chain --------------------------------------------------
     def chain_keys(self, prompt: np.ndarray, adapter: str = "") -> List[str]:
@@ -589,7 +801,8 @@ class PagedCacheManager:
     # -- admission -----------------------------------------------------------
     def try_admit(self, prompt: np.ndarray, max_new: int, adapter: str = "",
                   headroom: int = 0, shareable: bool = True,
-                  keys: Optional[Sequence[str]] = None
+                  keys: Optional[Sequence[str]] = None,
+                  priority: str = "standard"
                   ) -> Optional[Tuple[int, int]]:
         """Reserve a state slot + the request's projected block budget,
         adopting the longest index-resident run of the prompt's block-key
@@ -612,6 +825,18 @@ class PagedCacheManager:
             if keys is None:
                 keys = self.chain_keys(prompt, adapter)
             shared = self._resident_run(keys)
+            if self.host_pool is not None:
+                # two-tier walk: extend the device-resident run by
+                # rehydrating consecutive DEMOTED host blocks (entries only
+                # exist when the demote-time cost rule said the H2D beats
+                # recomputing the block, so rehydration here is always the
+                # cheaper move)
+                while len(shared) < len(keys):
+                    bid = self._rehydrate(keys[len(shared)],
+                                          protect=frozenset(shared))
+                    if bid is None:
+                        break
+                    shared.append(bid)
             adopt_keys = list(keys[:len(shared)])
         # blocks that must exist before prefill writes: the whole prompt
         now_need = min(self.projected_blocks(len(prompt), 0), need)
@@ -642,7 +867,8 @@ class PagedCacheManager:
         self.tables[slot] = shared + fresh
         self.shared_count[slot] = len(shared)
         self.reserved[slot] = max(need, len(self.tables[slot]))
-        self._debt += self._debt_of(slot)
+        self._slot_rank[slot] = priority_rank(priority)
+        self._debt_add(slot, self._debt_of(slot))
         self.lens[slot] = 0
         n_rec = min(len(prompt), self.s_max)
         buf = np.zeros((self.s_max,), np.int64)
@@ -656,7 +882,8 @@ class PagedCacheManager:
         return slot, len(shared) * self.block_size
 
     def free(self, slot: int):
-        self._debt -= self._debt_of(slot)
+        self._debt_add(slot, -self._debt_of(slot))
+        self._slot_rank.pop(slot, None)
         self.reserved.pop(slot, None)
         for bid in self.tables.pop(slot, []):
             self.allocator.decref(bid)
@@ -704,7 +931,7 @@ class PagedCacheManager:
                 break                       # lent-out reservation: growth
             #                                 fails, engine preempts
             table.append(bid)
-            self._debt += self._debt_of(slot) - d0
+            self._debt_add(slot, self._debt_of(slot) - d0)
         self._touch_lent()
         return min(len(table) * self.block_size, self.s_max)
 
@@ -739,7 +966,7 @@ class PagedCacheManager:
             # grow()'s within-reservation guarantee
             self.reserved[slot] = max(
                 self.reserved.get(slot, 0) - (dropped - freed), len(table))
-            self._debt += self._debt_of(slot) - d0
+            self._debt_add(slot, self._debt_of(slot) - d0)
         if slot in self._seqs:
             self._seq_len[slot] = min(self._seq_len[slot], new_len)
             chain = self._chains[slot]
@@ -808,6 +1035,9 @@ class PagedCacheManager:
             # reprolint: ownership-transfer — the index owns this ref;
             # _depublish / shed decref it
             self.allocator.incref(bid)
+            if self.host_pool is not None:
+                # two-tier disjointness: a key lives in exactly one tier
+                self.host_pool.drop_demoted(key)
             if self.on_publish is not None:
                 self.on_publish(key, bid)
 
@@ -849,6 +1079,13 @@ class PagedCacheManager:
             self._hits[k] >>= 1
         if best is None:
             return False
+        if self.host_pool is not None:
+            # tiered shed: capture the victim's payload D2H into the host
+            # pool's demoted cache BEFORE de-publication drops the device
+            # copy — a dead-then-revived template then rehydrates by
+            # transfer instead of recompute.  Best-effort and cost-gated;
+            # the de-publish below happens either way.
+            self._demote(best[1])
         self._depublish(best[1])
         return True
 
@@ -1058,9 +1295,259 @@ class PagedCacheManager:
         self._hashed[bid] = key
         self._hits.setdefault(key, 0)
         self.remote_imports += 1
+        if self.host_pool is not None:
+            # the remote copy supersedes any stale host-demoted copy (two-
+            # tier disjointness: one tier per key)
+            self.host_pool.drop_demoted(key)
         if self.on_publish is not None:
             self.on_publish(key, bid)
         return bid
+
+    # -- tiered host memory (swap-to-host preemption + demote/rehydrate) -----
+    @property
+    def kv_d2h_bytes(self) -> int:
+        """Cumulative device-to-host KV payload bytes (swap-outs +
+        demotions) — the engine charges per-tick deltas to the clock."""
+        return self.kv_swap_out_bytes + self.kv_demote_bytes
+
+    @property
+    def kv_h2d_bytes(self) -> int:
+        """Cumulative host-to-device KV payload bytes (restores +
+        rehydrations)."""
+        return self.kv_restore_bytes + self.kv_rehydrate_bytes
+
+    def _encode_blocks(self, bids: Sequence[int]):
+        """Gather ``bids``'s K/V payload D2H as host-resident numpy leaves,
+        one per-layer dict of ``[n_periods, n, block_size, ...]`` arrays
+        (STATE leaves excluded — they are request rows, not
+        block-addressed), int8-quantized when the host tier is quantized.
+        This is the swap/demote path, not the tick hot loop — the gathers
+        happen once per preemption or shed."""
+        idx = jnp.asarray(list(bids), jnp.int32)
+        layers = []
+        for d in self.cache["layers"]:
+            ld = {}
+            for k, v in d.items():
+                if k in STATE_KEYS:
+                    continue
+                blk = v[:, idx]
+                if self.host_quant:
+                    q = quantize_leaf(blk)
+                    ld[k] = {
+                        "_q8": np.asarray(q["_q8"]),  # reprolint: sync-point
+                        "_qs": np.asarray(q["_qs"]),  # reprolint: sync-point
+                    }
+                else:
+                    ld[k] = np.asarray(blk)  # reprolint: sync-point
+            layers.append(ld)
+        return tuple(layers)
+
+    def _decode_payload(self, layers):
+        """Materialize stored host leaves back into device arrays of the
+        pool leaf's dtype for the H2D scatter.  Quantized leaves dequantize
+        here — NOT bit-exact, which is why the quant tier sits behind an
+        explicit exactness-exempt flag."""
+        out = []
+        for d, ld in zip(self.cache["layers"], layers):
+            dd = {}
+            for k, arr in ld.items():
+                if isinstance(arr, dict):
+                    dd[k] = dequant_leaf(
+                        {"_q8": jnp.asarray(arr["_q8"]),
+                         "_qs": jnp.asarray(arr["_qs"])}, d[k].dtype)
+                else:
+                    dd[k] = jnp.asarray(arr)
+            out.append(dd)
+        return tuple(out)
+
+    def swap_payload_blocks(self, slot: int) -> int:
+        """Blocks a swap-out of ``slot`` would store: the leading table
+        blocks covering its committed tokens.  The engine prices the
+        decision (``swap_beats_recompute``) from this BEFORE committing to
+        the D2H gather."""
+        tokens = int(self.lens[slot])
+        if tokens <= 0:
+            return 0
+        return min(-(-tokens // self.block_size),
+                   len(self.tables.get(slot, ())))
+
+    def surviving_blocks(self, slot: int, nb: Optional[int] = None) -> int:
+        """Of ``slot``'s leading ``nb`` table blocks, how many stay
+        device-resident through a ``free`` + swap-out de-publish: blocks
+        some OTHER holder (a sibling table, or an index entry with >= 2
+        adopters) keeps alive.  The swap decision must not charge their
+        recompute — they would be re-adopted for free either way."""
+        table = self.tables.get(slot, [])
+        nb = len(table) if nb is None else min(nb, len(table))
+        n = 0
+        for bid in table[:nb]:
+            holders = int(self.allocator.ref[bid]) - 1    # minus this table
+            if bid in self._hashed:
+                holders -= 1                              # minus the index
+            if holders >= 1:
+                n += 1
+        return n
+
+    def swap_out(self, slot: int) -> Optional[int]:
+        """Preemption swap-out: D2H-copy the blocks covering ``slot``'s
+        committed tokens into the host pool as a PINNED swap set, then
+        de-publish this slot's private index entries (table + index is all
+        that holds them, ref == 2) so the preemption actually reclaims
+        them — and so a fleet mirror retracts keys whose payload now rides
+        on a host buffer instead of a device block.  Restore re-publishes
+        through the normal commit path.  Blocks other holders share are
+        left published (they survive the free and cost the swap nothing).
+
+        Returns the swap-set id to park on the victim request, or None
+        when there is no host pool, nothing is committed, or the pool
+        cannot pin the payload — the caller falls back to recompute
+        preemption exactly as before.  The caller still ``free``s the
+        slot."""
+        if self.host_pool is None:
+            return None
+        nb = self.swap_payload_blocks(slot)
+        if nb <= 0:
+            return None
+        nbytes = nb * self.host_block_bytes
+        bids = self.tables[slot][:nb]
+        entry = {"layers": self._encode_blocks(bids), "n": nb,
+                 "tokens": int(self.lens[slot]), "bytes": nbytes}
+        sid = self.host_pool.put_swap(entry)
+        if sid is None:
+            return None
+        for bid in bids:
+            key = self._hashed.get(bid)
+            if key is not None and self.allocator.ref[bid] == 2:
+                self._depublish(key)
+        self.kv_swap_outs += 1
+        self.kv_swap_out_bytes += nbytes
+        return sid
+
+    def restore_swap(self, slot: int, sid: int) -> int:
+        """Re-admission H2D restore: scatter a swap set's payload into
+        ``slot``'s freshly-admitted table and consume the set.  Positions
+        inside the adopted shared run are SKIPPED — those blocks arrived
+        by refcount, already hold exactly this content, and may be shared
+        with live siblings (writing even a bit-identical payload into a
+        shared block is a CoW violation; a dequantized one would corrupt
+        them outright).  The restorable span is clipped one token short of
+        the recorded prompt so suffix prefill always has a live query —
+        at a decode-time preemption the stored length IS prompt - 1, so
+        nothing is lost and the result is byte-identical to recompute.
+
+        Restored full blocks re-publish at commit via ``_publish_upto``:
+        the fleet mirror learns the keys again exactly when the local
+        index does.  Returns the prompt tokens now covered by adopted +
+        restored K/V — what suffix-only prefill may skip."""
+        entry = self.host_pool.pop_swap(sid)
+        table = self.tables[slot]
+        shared = min(self.shared_count.get(slot, 0), len(table))
+        tokens = min(entry["tokens"],
+                     max(self._seq_len.get(slot, 1) - 1, 0))
+        nb = min(-(-tokens // self.block_size) if tokens > 0 else 0,
+                 entry["n"], len(table))
+        if nb > shared:
+            payload = self._decode_payload(entry["layers"])
+            if shared or nb < entry["n"]:
+                payload = tuple({k: v[:, shared:nb] for k, v in d.items()}
+                                for d in payload)
+            self.cache = _blocks_write(
+                self.cache, jnp.asarray(table[shared:nb], jnp.int32),
+                payload)
+            self.kv_restores += 1
+            self.kv_restore_bytes += (nb - shared) * self.host_block_bytes
+        covered = min(tokens, nb * self.block_size)
+        return max(covered, shared * self.block_size)
+
+    def drop_swap(self, sid: Optional[int]) -> bool:
+        """Release a swap set without restoring it — the victim failed (or
+        was dropped) before re-admission, or the caller decided to
+        recompute after all.  Idempotent-safe on unknown ids so failure
+        paths cannot double-release."""
+        if self.host_pool is None or sid is None:
+            return False
+        if self.host_pool.pop_swap(sid, missing_ok=True) is None:
+            return False
+        self.kv_swap_drops += 1
+        return True
+
+    def _rehydrate_wins(self) -> bool:
+        """Cost gate for the demote/rehydrate tier: one block's D2H + H2D
+        round-trip must beat recomputing its ``block_size`` tokens of
+        prefill.  No cost model attached (tests constructing the manager
+        directly) means transfers are modeled free and the tier always
+        wins."""
+        if self.cost is None:
+            return True
+        return swap_beats_recompute(self.host_block_bytes, self.block_size,
+                                    self.cost)
+
+    def _demote(self, key: str) -> bool:
+        """Capture one about-to-be-shed index block's payload into the host
+        pool's demoted cache under the SAME content key.  Cost-gated
+        (pointless when the round-trip costs more than recomputing the
+        block) and best-effort (the host LRU may refuse)."""
+        if not self._rehydrate_wins():
+            return False
+        entry = {"layers": self._encode_blocks([self._index[key]]), "n": 1,
+                 "tokens": self.block_size, "bytes": self.host_block_bytes}
+        if not self.host_pool.put_demoted(key, entry):
+            return False
+        self.kv_demotions += 1
+        self.kv_demote_bytes += self.host_block_bytes
+        return True
+
+    def _rehydrate(self, key: str,
+                   protect: frozenset = frozenset()) -> Optional[int]:
+        """Bring one demoted host block back H2D and publish it into the
+        local index — the host-tier sibling of ``import_block``: the
+        alloc's ref of 1 IS the index hold, ``on_publish`` re-announces
+        the key to the fleet, and the host entry is REMOVED (move, not
+        copy — a key is resident in exactly one tier).  Spends only truly
+        spendable capacity (a cache fill is never worth a reservation
+        violation), shedding idle cache first; returns None when the key
+        is not demoted or the pool cannot take it (entry put back
+        untouched)."""
+        if self.host_pool is None or not self.hash_dedup:
+            return None
+        got = self._index.get(key)
+        if got is not None:
+            return got
+        entry = self.host_pool.pop_demoted(key)
+        if entry is None:
+            return None
+        # pop BEFORE shedding: the shed loop below may itself demote
+        # blocks into the host LRU, which must not evict this entry out
+        # from under us
+        while (self.free_blocks <= 0
+               and self._shed_any(protect_blocks=protect)):
+            pass
+        if self.free_blocks <= 0:
+            self.host_pool.put_demoted(key, entry)
+            return None
+        bid = self.allocator.alloc()
+        if bid is None:                      # free_blocks > 0 => n_free > 0
+            raise KVAccountingError(
+                "spendable budget positive but the pool has no free block")
+        self.cache = _blocks_write(self.cache,
+                                   jnp.asarray([bid], jnp.int32),
+                                   self._decode_payload(entry["layers"]))
+        self._index[key] = bid
+        self._hashed[bid] = key
+        self._hits.setdefault(key, 0)
+        self.kv_rehydrations += 1
+        self.kv_rehydrate_bytes += self.host_block_bytes
+        if self.on_publish is not None:
+            self.on_publish(key, bid)
+        return bid
+
+    def flush_host(self) -> int:
+        """Drop every DEMOTED host entry (drain/leak checks: demoted blocks
+        are cache; live swap sets are owned by waiting requests and must be
+        restored or dropped through them).  Returns entries dropped."""
+        if self.host_pool is None:
+            return 0
+        return self.host_pool.flush_demoted()
 
     # -- copy-on-write -------------------------------------------------------
     def ensure_writable(self, slot: int, pos: Optional[int] = None) -> int:

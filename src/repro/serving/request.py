@@ -16,6 +16,21 @@ class State(enum.Enum):
     FAILED = "failed"       # dropped (e.g. SLO-expired before admission)
 
 
+# Per-request priority classes (tiered KV memory): rank 0 preempts LAST
+# and its reservation debt is never lent out; rank 2 preempts FIRST and
+# lends first under over-admission.  "standard" is the default everywhere,
+# under which every priority-aware order degenerates to the pre-class
+# behavior byte-for-byte.
+PRIORITY_CLASSES = ("interactive", "standard", "batch")
+PRIORITY_RANK = {c: i for i, c in enumerate(PRIORITY_CLASSES)}
+
+
+def priority_rank(priority_class: str) -> int:
+    """Victim/lending rank of a class (unknown classes rank as standard —
+    a misspelled class must not silently become un-preemptable)."""
+    return PRIORITY_RANK.get(priority_class, PRIORITY_RANK["standard"])
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -30,6 +45,10 @@ class Request:
     # so identical prompt heads share automatically (engine ``hash_dedup``)
     draft_suffix: Optional[np.ndarray] = None  # reference token stream
     # (prompt + expected output) for the static-suffix drafter (trace replay)
+    priority_class: str = "standard"   # "interactive" | "standard" | "batch":
+    # shapes the preemption victim order (batch evicted first, interactive
+    # last) and over-admission lending (batch debt lent first, interactive
+    # debt never lent); orthogonal to the scheduler's fairness ramp
 
     state: State = State.WAITING
     output: List[int] = dataclasses.field(default_factory=list)
@@ -56,6 +75,14 @@ class Request:
     # preemption — evicting the victim's adapter while it waits at the
     # head of the queue would just swap it straight back (thrash) — and
     # dropped at finish/failure
+    swap_sid: Optional[int] = None     # host-pool swap-set id while the
+    # request waits preempted with its KV blocks swapped out (tiered KV
+    # memory).  Consumed (restored H2D or dropped) at re-admission; must be
+    # dropped explicitly if the request fails before it is ever re-admitted
+
+    @property
+    def class_rank(self) -> int:
+        return priority_rank(self.priority_class)
 
     @property
     def prompt_len(self) -> int:

@@ -156,8 +156,12 @@ class Scheduler:
             and len(waiting) > 1
         if reorder and adapter_fn is None:
             # static scores: one sort up front (the pre-paging behavior,
-            # byte-identical ordering)
-            remaining.sort(key=lambda r: (-score(r), r.arrival, r.rid))
+            # byte-identical ordering).  Priority class breaks score ties
+            # only (interactive ahead of standard ahead of batch) — with
+            # all-standard traffic the rank is a constant and the order is
+            # exactly the pre-class one
+            remaining.sort(key=lambda r: (-score(r), r.class_rank,
+                                          r.arrival, r.rid))
         budget = (c.max_prefill_tokens if pf_token_budget is None
                   else pf_token_budget)
         row_cap = max(min(c.max_prefill_per_tick, n_free_slots,
@@ -170,7 +174,8 @@ class Scheduler:
                 # greedy: every pick can warm its adapter for the rest of
                 # the queue, so scores are recomputed per pick (the queue
                 # is tick-bounded; this is O(n^2 log n) over a small n)
-                remaining.sort(key=lambda r: (-score(r), r.arrival, r.rid))
+                remaining.sort(key=lambda r: (-score(r), r.class_rank,
+                                              r.arrival, r.rid))
             r = remaining[0]
             tok = suffix_fn(r) if suffix_fn is not None else r.prompt_len
             if chunked:

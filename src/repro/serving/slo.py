@@ -108,6 +108,23 @@ class Metrics:
     #                              registry-resident prefix blocks)
     lent_blocks_peak: int = 0    # peak reservation debt not backed by the
     #                              free list (capacity actually lent out)
+    # tiered KV memory (host block pool).  Swap-outs move a preemption
+    # victim's blocks D2H instead of discarding them; restores bring them
+    # back H2D at re-admission; demotions/rehydrations are the same tiering
+    # applied to shed hash-index blocks.  Transfer bytes are charged to the
+    # virtual clock at CostModel.d2h_per_byte / h2d_per_byte.
+    kv_swap_outs: int = 0        # preemption victims swapped to host
+    kv_swap_out_bytes: int = 0
+    kv_swap_skips: int = 0       # preemptions where the decision rule (or
+    #                              a full host pool) chose recompute
+    kv_restores: int = 0         # swap sets restored H2D at re-admission
+    kv_restore_bytes: int = 0
+    kv_restored_tokens: int = 0  # prompt tokens served from restored K/V
+    #                              beyond what index adoption already covered
+    kv_demotions: int = 0        # shed index blocks captured to the host tier
+    kv_rehydrated_blocks: int = 0  # demoted blocks re-published on demand
+    host_bytes_used: int = 0     # gauge: host pool bytes at last step
+    host_bytes_peak: int = 0     # high-water mark of host pool residency
 
     @property
     def acceptance_rate(self) -> float:

@@ -13,6 +13,11 @@ try:
 
     settings.register_profile("ci", derandomize=True, deadline=None,
                               max_examples=40, print_blob=True)
+    # the scheduled nightly job's budget: RANDOMIZED (fresh draws each
+    # night, unlike the derandomized merge-blocking profile) and an order
+    # of magnitude more examples — depth where a flake costs nobody a merge
+    settings.register_profile("nightly", deadline=None, max_examples=300,
+                              print_blob=True)
     _profile = os.environ.get("HYPOTHESIS_PROFILE")
     if _profile:
         settings.load_profile(_profile)

@@ -118,6 +118,51 @@ def test_fleet_index_stale_free_under_truncate_and_cow_churn():
     assert len(fi) == len(m._index)
 
 
+def test_fleet_index_tracks_swap_out_and_rehydrate():
+    """Tiered-KV moves must keep the fleet mirror exact: swap-out
+    de-publishes a victim's private blocks (the fleet retracts — their
+    payload now rides a host buffer no sibling can import), restore
+    re-publishes through the normal commit path, index shedding demotes to
+    host (retract), and admission-time rehydration re-announces the key.
+    The bijection check at every step IS the no-stale guarantee."""
+    m = _mgr(n_blocks=16, host_blocks=8)
+    fi = FleetIndex()
+    fi.attach(0, m)
+    p = np.arange(20, dtype=np.int32)              # 2 full blocks at bs=8
+    s, _ = m.try_admit(p, max_new=4)
+    m.commit_prefill([(0, s)], [20])
+    keys = m.chain_keys(p)
+    assert fi.entries == 2
+    sid = m.swap_out(s)
+    assert sid is not None
+    assert fi.entries == 0                         # retracted on de-publish
+    fi.check_bijection()
+    m.free(s)
+    s2, reused = m.try_admit(p, max_new=4)
+    assert reused == 0
+    m.restore_swap(s2, sid)
+    m.commit_prefill([(0, s2)], [20])              # re-publish on commit
+    assert fi.entries == 2
+    assert all(fi.locate(k) == (0, m._index[k]) for k in keys)
+    fi.check_bijection()
+    m.free(s2)                                     # index-only now (ref 1)
+    while m._shed_any():                           # demote both to host
+        pass
+    assert fi.entries == 0                         # retracted on demote
+    assert m.host_pool.n_demoted == 2
+    fi.check_bijection()
+    s3, reused = m.try_admit(p, max_new=4)         # rehydration republishes
+    assert reused == 16
+    assert fi.entries == 2
+    assert all(fi.locate(k) == (0, m._index[k]) for k in keys)
+    fi.check_bijection()
+    m.free(s3)
+    assert m.pristine
+    m.flush_index()
+    m.flush_host()
+    assert len(fi) == 0 and fi.entries == 0
+
+
 # -------------------------------------------------------------- import_block
 def test_import_block_copies_payload_and_adopts():
     a, b = _mgr(), _mgr()

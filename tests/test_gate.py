@@ -112,26 +112,66 @@ def _repo(*parts):
     return os.path.join(os.path.dirname(__file__), "..", *parts)
 
 
+def _ci_bench_matrix() -> set:
+    """The ``bench:`` matrix list parsed out of ci.yml (flow sequence, may
+    wrap lines).  Parsed, not substring-matched: the consistency assertions
+    below must fail when EITHER side drifts — a matrix entry without a
+    gate, or a gate no matrix job ever runs."""
+    import re
+    with open(_repo(".github", "workflows", "ci.yml")) as f:
+        ci = f.read()
+    assert "benchmarks/gate.py" in ci
+    m = re.search(r"bench:\s*\[([^\]]*)\]", ci, re.DOTALL)
+    assert m, "ci.yml bench matrix not found"
+    return {s.strip() for s in m.group(1).split(",") if s.strip()}
+
+
 def test_checked_in_gates_cover_the_ci_matrix():
-    """Every benchmark the CI matrix runs has a non-empty gate whose
-    artifact matches what run.py registers for that bench."""
+    """BIDIRECTIONAL matrix <-> gates <-> run.py consistency: every bench
+    the CI matrix runs has a non-empty gate whose artifact run.py
+    registers, every gate is exercised by a matrix job, and every
+    registered BENCH artifact is gated.  Adding any one of the three
+    without the other two fails loudly here."""
     with open(_repo("benchmarks", "gates.json")) as f:
         gates = json.load(f)
-    expected = {"paged", "spec", "prefix", "preempt", "dedup", "kernels",
-                "fleet", "adapters"}
-    assert expected <= set(gates)
-    for name in expected:
+    matrix = _ci_bench_matrix()
+    assert matrix == set(gates), (
+        f"ci.yml bench matrix {sorted(matrix)} != gates.json keys "
+        f"{sorted(gates)} — a matrix entry without a gate (or a gate no "
+        f"job runs) ships unchecked numbers")
+    for name in sorted(gates):
         assert gates[name]["checks"], f"gate {name} is vacuous"
         assert gates[name]["artifact"] == f"BENCH_{name}.json"
     from benchmarks.run import TABLES
     registered = {a for _, _, a in TABLES if a}
-    assert {g["artifact"] for g in gates.values()} <= registered
-    # the workflow itself references the same matrix (no silent drift)
-    with open(_repo(".github", "workflows", "ci.yml")) as f:
-        ci = f.read()
-    assert ("[paged, spec, prefix, preempt, dedup, kernels, fleet, "
-            "adapters]" in ci)
-    assert "benchmarks/gate.py" in ci
+    gated = {g["artifact"] for g in gates.values()}
+    assert gated == registered, (
+        f"run.py registers {sorted(registered)} but gates.json covers "
+        f"{sorted(gated)} — an ungated artifact green-passes on any "
+        f"regression")
+
+
+def test_run_py_summary():
+    """Every registered BENCH artifact charts a headline metric, and the
+    --summarize-only path folds whatever artifacts exist into
+    BENCH_summary.json (and fails loudly when there are none)."""
+    import json as _json
+    from benchmarks.run import (HEADLINES, SUMMARY, TABLES, headline_of,
+                                summarize_only)
+    registered = {a for _, _, a in TABLES if a}
+    assert set(HEADLINES) == registered
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        assert summarize_only(d) == 1          # nothing to summarize = fail
+        with open(os.path.join(d, "BENCH_spec.json"), "w") as f:
+            _json.dump({"speedup": 2.0, "exact": True}, f)
+        assert headline_of("BENCH_spec.json", d) == ("speedup", 2.0)
+        assert summarize_only(d) == 0
+        with open(os.path.join(d, SUMMARY)) as f:
+            rows = _json.load(f)["benches"]
+        assert rows == {"spec_decode": {"artifact": "BENCH_spec.json",
+                                        "headline": "speedup",
+                                        "value": 2.0, "wall_s": None}}
 
 
 def test_run_py_artifact_check():

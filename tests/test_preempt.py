@@ -23,10 +23,10 @@ from _hyputil import given, hyp as _hyp, settings, st
 LCFG = LoRAConfig(n_slots=4, r=4)
 
 
-def _mgr(capacity=4, n_blocks=8, s_max=64, bs=16, over_admit=1.0):
+def _mgr(capacity=4, n_blocks=8, s_max=64, bs=16, over_admit=1.0, **kw):
     cfg = get_reduced("llama3-8b")
     return PagedCacheManager(cfg, capacity, 2, s_max, block_size=bs,
-                             n_blocks=n_blocks, over_admit=over_admit)
+                             n_blocks=n_blocks, over_admit=over_admit, **kw)
 
 
 # --------------------------------------------------------- lending gate
@@ -431,15 +431,36 @@ def _check_conservation(m: PagedCacheManager, over_admit: float):
     if over_admit <= 1.0:
         assert a.n_free >= m.reserved_debt, "conservative invariant broken"
     assert len(m.tables) + len(m._free_slots) == m.capacity, "slot leak"
+    # per-class reservation debt mirrors the total exactly (the lending
+    # order reshapes charged_debt but never invents or loses debt)
+    class_debt = getattr(m, "_class_debt", None)
+    if class_debt is not None:
+        assert sum(class_debt) == m.reserved_debt, "class-debt drift"
+        assert all(d >= 0 for d in class_debt)
+        assert 0 <= m.charged_debt <= m.reserved_debt
+    # tiered host pool (guarded: test_fleet reuses this checker on
+    # managers without a host tier)
+    hp = getattr(m, "host_pool", None)
+    if hp is not None:
+        booked = (sum(e["bytes"] for e in hp._swap_sets.values())
+                  + sum(e["bytes"] for e in hp._demoted.values()))
+        assert hp.used_bytes == booked, "host byte-accounting drift"
+        assert hp.used_bytes <= hp.capacity_bytes, "host budget overrun"
+        assert hp.peak_used_bytes >= hp.used_bytes
+        # two-tier disjointness: a content key is device-resident XOR
+        # host-demoted, never both
+        both = set(m._index) & hp.demoted_keys()
+        assert not both, f"keys resident in both tiers: {both}"
 
 
 @_hyp(lambda: [settings(max_examples=20, deadline=None),
-              given(ops=st.lists(st.tuples(st.integers(0, 9),
+              given(ops=st.lists(st.tuples(st.integers(0, 11),
                                            st.integers(0, 7),
                                            st.integers(0, 80)),
                                  min_size=1, max_size=60),
-                    over_admit=st.sampled_from([1.0, 1.75]))])
-def test_block_conservation_property(ops, over_admit):
+                    over_admit=st.sampled_from([1.0, 1.75]),
+                    host_blocks=st.sampled_from([0, 6]))])
+def test_block_conservation_property(ops, over_admit, host_blocks):
     """Randomized admit(+adopt)/commit(publish)/grow/truncate/finish
     sequences over the content-hash index — PLUS adapter-block-class ops
     (admit / pin / unpin / shed) over the same pool: refcounts must equal
@@ -451,11 +472,20 @@ def test_block_conservation_property(ops, over_admit):
     gather back byte-identical, and a full drain + flush must return the
     pool to pristine.  Prompts draw from a 3-symbol alphabet so hash
     chains collide often and adoption / publish-collision paths are
-    actually exercised."""
-    m = _mgr(capacity=6, n_blocks=13, s_max=96, bs=8, over_admit=over_admit)
+    actually exercised.
+
+    With a host tier in the mix (``host_blocks > 0``) the op set extends
+    to swap-out/restore/drop of preemption victims and demote/rehydrate
+    (which also ride shed and admit implicitly): host byte accounting
+    must track entries exactly, a content key must never be resident in
+    both tiers, and the drain must retire every outstanding swap set
+    before the pool can be pristine."""
+    m = _mgr(capacity=6, n_blocks=13, s_max=96, bs=8, over_admit=over_admit,
+             host_blocks=host_blocks)
     live: list = []
     payloads: dict = {}                    # name -> bytes we admitted
     pins: dict = {}                        # name -> our pin count
+    sids: list = []                        # outstanding swap-set ids
     rng = np.random.default_rng(0)
 
     def _adapters_ok():
@@ -467,9 +497,11 @@ def test_block_conservation_property(ops, over_admit):
     for kind, pick, amount in ops:
         pinned_resident = {n for n, c in pins.items()
                            if c > 0 and n in m.adapter_tables}
-        if kind == 0:                                     # admit (+ adopt)
+        if kind == 0:                            # admit (+ adopt/rehydrate)
             prompt = rng.integers(0, 3, 1 + amount % 40).astype(np.int32)
-            got = m.try_admit(prompt, max_new=amount % 48)
+            got = m.try_admit(prompt, max_new=amount % 48,
+                              priority=("interactive", "standard",
+                                        "batch")[amount % 3])
             if got is not None:
                 live.append(got[0])
         elif kind == 1 and live:                          # decode advance
@@ -509,13 +541,34 @@ def test_block_conservation_property(ops, over_admit):
             m.adapter_unpin(name)
             pins[name] -= 1
         elif kind == 9:                                   # explicit pressure
-            m._shed_any()
+            m._shed_any()                  # (demotes into the host tier
+            #                                when one is attached)
+        elif kind == 10 and live:                         # swap-out preempt
+            slot = live.pop(pick % len(live))
+            sid = m.swap_out(slot)         # engine order: gather THEN free
+            m.free(slot)
+            if sid is not None:
+                sids.append(sid)
+        elif kind == 11 and sids:                         # restore or drop
+            sid = sids.pop(pick % len(sids))
+            # the engine contract: restore lands in a FRESH admission
+            # (before any commit), never an arbitrary mid-life slot
+            got = (m.try_admit(rng.integers(0, 3, 1 + amount % 40)
+                               .astype(np.int32), max_new=amount % 48)
+                   if amount % 2 else None)
+            if got is not None:
+                live.append(got[0])
+                m.restore_swap(got[0], sid)
+            else:
+                m.drop_swap(sid)
         assert pinned_resident <= set(m.adapter_tables), \
             "a pinned adapter was shed"
         _adapters_ok()
         _check_conservation(m, over_admit)
     for slot in live:                                     # drain
         m.free(slot)
+    for sid in sids:                       # retire outstanding swap sets
+        m.drop_swap(sid)                   # (a failed victim's _drop_swap)
     _check_conservation(m, over_admit)
     for name, c in list(pins.items()):     # drop our pins: leftovers are
         for _ in range(c):                 # then pure cache...
@@ -523,7 +576,11 @@ def test_block_conservation_property(ops, over_admit):
     assert m.pristine
     m.flush_adapters()
     m.flush_index()                        # ...and flushing reclaims all
+    m.flush_host()
     assert m.allocator.n_free == m.allocator.usable
     assert m.reserved_debt == 0
     assert not m._index and not m._hashed
     assert not m.adapter_tables and not m._adapter_pins
+    if m.host_pool is not None:
+        assert m.host_pool.used_bytes == 0
+        assert m.host_pool.n_swap_sets == 0 and m.host_pool.n_demoted == 0

@@ -1,0 +1,407 @@
+"""Tiered KV memory: HostBlockPool byte accounting and pinning, the
+swap-vs-recompute decision rule, swap-out/restore round trips (byte-exact,
+CoW-safe around adopted shared blocks), index demote/rehydrate with
+two-tier disjointness, int8 host residency, per-class reservation lending,
+priority-class victim selection and scheduler tie-breaks, and engine-level
+byte-exactness of swap preemption against recompute preemption."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.core.lora import LoRAConfig
+from repro.core.virtualization import AdapterStore, MixedLoraModel
+from repro.errors import ConfigInvariantError
+from repro.models.schema import init_params
+from repro.serving.clock import CostModel
+from repro.serving.engine import EngineConfig, UnifiedEngine
+from repro.serving.kvcache import (STATE_KEYS, HostBlockPool,
+                                   PagedCacheManager, _blocks_write,
+                                   swap_beats_recompute)
+from repro.serving.request import (PRIORITY_CLASSES, Request, State,
+                                   priority_rank)
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+LCFG = LoRAConfig(n_slots=4, r=4)
+
+
+def _mgr(capacity=4, n_blocks=12, s_max=64, bs=8, **kw):
+    cfg = get_reduced("llama3-8b")
+    return PagedCacheManager(cfg, capacity, 2, s_max, block_size=bs,
+                             n_blocks=n_blocks, **kw)
+
+
+def _scribble(m, bids, seed=0):
+    """Fill ``bids`` with deterministic non-zero K/V so round trips compare
+    real payloads, not the zero-initialized pool.  Returns the written raw
+    payload (per-layer dicts, block axis second) — ``_raw_np`` layout."""
+    rng = np.random.default_rng(seed)
+    payload = tuple(
+        {k: jnp.asarray(rng.standard_normal(
+            (v.shape[0], len(bids)) + v.shape[2:]).astype(v.dtype))
+         for k, v in d.items() if k not in STATE_KEYS}
+        for d in m.cache["layers"])
+    m.cache = _blocks_write(m.cache, jnp.asarray(bids, jnp.int32), payload)
+    return tuple({k: np.asarray(v) for k, v in d.items()} for d in payload)
+
+
+def _raw_np(m, bids):
+    """Device-tier block payloads read straight off the pool (raw floats
+    regardless of host-tier quantization)."""
+    idx = jnp.asarray(bids, jnp.int32)
+    return tuple({k: np.asarray(v[:, idx]) for k, v in d.items()
+                  if k not in STATE_KEYS}
+                 for d in m.cache["layers"])
+
+
+def _payloads_equal(a, b, exact=True, tol=0.0):
+    for da, db in zip(a, b):
+        assert set(da) == set(db)
+        for k in da:
+            if exact:
+                np.testing.assert_array_equal(da[k], db[k])
+            else:
+                assert float(np.max(np.abs(da[k] - db[k]))) <= tol
+
+
+# ------------------------------------------------------------ HostBlockPool
+def test_host_pool_rejects_empty_budget():
+    with pytest.raises(ConfigInvariantError):
+        HostBlockPool(0)
+
+
+def test_host_pool_swap_sets_are_pinned_demoted_are_lru():
+    hp = HostBlockPool(100)
+    sid = hp.put_swap({"layers": (), "n": 2, "tokens": 16, "bytes": 60})
+    assert sid is not None and hp.used_bytes == 60
+    # demoted entries fill the rest, oldest evicted first under pressure
+    assert hp.put_demoted("a", {"layers": (), "n": 1, "bytes": 20})
+    assert hp.put_demoted("b", {"layers": (), "n": 1, "bytes": 20})
+    assert hp.free_bytes == 0
+    assert hp.put_demoted("c", {"layers": (), "n": 1, "bytes": 20})
+    assert hp.evictions == 1 and not hp.has_demoted("a")
+    assert hp.demoted_keys() == {"b", "c"}
+    # a swap set is NEVER evicted: a second set needing its bytes refuses
+    assert hp.put_swap({"layers": (), "n": 2, "bytes": 80}) is None
+    assert hp.n_swap_sets == 1 and hp.demoted_keys() == set()
+    assert hp.evictions == 3                  # the refusal flushed b and c
+    # re-putting an existing key refreshes in place, no double-charge
+    assert hp.put_demoted("d", {"layers": (), "n": 1, "bytes": 20})
+    assert hp.put_demoted("d", {"layers": (), "n": 1, "bytes": 20})
+    assert hp.used_bytes == 80 and hp.n_demoted == 1
+    assert hp.pop_swap(sid)["bytes"] == 60
+    with pytest.raises(Exception):
+        hp.pop_swap(sid)                      # unknown sid is loud...
+    assert hp.pop_swap(sid, missing_ok=True) is None   # ...unless opted out
+    assert hp.flush_demoted() == 1
+    assert hp.used_bytes == 0 and hp.peak_used_bytes == 100
+
+
+def test_swap_rule_is_strict_ties_recompute():
+    c = dataclasses.replace(CostModel(), d2h_per_byte=1.0, h2d_per_byte=1.0,
+                            prefill_per_tok=2.0)
+    assert not swap_beats_recompute(1, 1, c)      # 2 == 2: tie -> recompute
+    assert swap_beats_recompute(1, 2, c)          # 2 < 4: transfer wins
+    assert not swap_beats_recompute(2, 1, c)
+    # default cost model: one raw 16 KiB block beats 16 tokens of prefill
+    assert swap_beats_recompute(16384, 16, CostModel())
+
+
+# ------------------------------------------------------ swap-out / restore
+def test_swap_roundtrip_restores_bytes_and_depublishes():
+    m = _mgr(host_blocks=8)
+    prompt = np.arange(20, dtype=np.int32)        # 2 full blocks + tail
+    s, _ = m.try_admit(prompt, max_new=4)
+    m.commit_prefill([(0, s)], [20])
+    bids = list(m.tables[s])
+    before = _scribble(m, bids)
+    assert m.hash_blocks_resident == 2
+    sid = m.swap_out(s)
+    assert sid is not None and m.kv_swap_outs == 1
+    # this slot privately owned its published blocks (ref == 2): swap-out
+    # de-published them so the free actually reclaims the device tier
+    assert m.hash_blocks_resident == 0
+    m.free(s)
+    assert not m.pristine                         # a live swap set is debt
+    s2, reused = m.try_admit(prompt, max_new=4)
+    assert reused == 0                            # nothing index-resident
+    covered = m.restore_swap(s2, sid)
+    # stored 20 tokens clip to seq_len - 1 = 19: suffix prefill keeps a
+    # live query token, and 19 tokens still span all 3 payload blocks
+    assert covered == 19
+    assert m.host_pool.n_swap_sets == 0 and m.host_pool.used_bytes == 0
+    _payloads_equal(_raw_np(m, list(m.tables[s2])[:3]), before)
+    m.free(s2)
+    assert m.pristine
+    m.flush_index()
+    assert m.allocator.n_free == m.allocator.usable
+
+
+def test_restore_skips_adopted_shared_blocks():
+    """A re-admission that adopted index-resident blocks must NOT have its
+    restore write them: they may be CoW-shared with a live sibling, and
+    refcount adoption already guarantees their content."""
+    m = _mgr(host_blocks=8, n_blocks=16)
+    prompt = np.arange(20, dtype=np.int32)
+    sa, _ = m.try_admit(prompt, max_new=4)        # the surviving sibling
+    m.commit_prefill([(0, sa)], [20])
+    _scribble(m, list(m.tables[sa])[:2], seed=1)
+    sb, reused = m.try_admit(prompt, max_new=12)
+    assert reused == 16                           # adopted both full blocks
+    m.grow(sb, 28)
+    m.commit_tokens(sb, np.arange(8, dtype=np.int32))
+    shared_bids = list(m.tables[sb])[:2]
+    assert shared_bids == list(m.tables[sa])[:2]
+    sid = m.swap_out(sb)
+    assert sid is not None
+    # shared blocks have other holders -> still published for re-adoption
+    assert m.hash_blocks_resident >= 2
+    m.free(sb)
+    rolled = np.arange(28, dtype=np.int32)        # prompt + emitted tokens
+    rolled[:20] = prompt
+    sc, reused = m.try_admit(rolled, max_new=4)
+    assert reused == 16 and m.shared_count[sc] == 2
+    sibling_before = _raw_np(m, shared_bids)
+    b0 = m.kv_restore_bytes
+    covered = m.restore_swap(sc, sid)
+    assert covered == 27                          # 28-token store clips to 27
+    # only the blocks BEYOND the adopted run were written H2D...
+    assert m.kv_restore_bytes - b0 == 2 * m.host_block_bytes
+    # ...and the sibling's (shared) payload is bit-for-bit untouched
+    _payloads_equal(_raw_np(m, shared_bids), sibling_before)
+    m.free(sc)
+    m.free(sa)
+    assert m.pristine
+
+
+def test_drop_swap_is_idempotent():
+    m = _mgr(host_blocks=4)
+    s, _ = m.try_admit(np.arange(10, dtype=np.int32), max_new=4)
+    m.commit_prefill([(0, s)], [10])
+    sid = m.swap_out(s)
+    m.free(s)
+    assert m.drop_swap(sid) and m.kv_swap_drops == 1
+    assert not m.drop_swap(sid)                   # double-release is a no-op
+    assert not m.drop_swap(None)
+    assert m.pristine and m.host_pool.used_bytes == 0
+
+
+# ------------------------------------------------------ demote / rehydrate
+def _publish(m, prompt, max_new=4):
+    s, _ = m.try_admit(np.asarray(prompt, np.int32), max_new=max_new)
+    m.commit_prefill([(0, s)], [m._seq_len[s]])
+    payload = _scribble(m, list(m.tables[s])[:len(prompt) // m.block_size],
+                        seed=7)
+    m.free(s)
+    return payload
+
+
+def test_shed_demotes_and_admission_rehydrates_byte_identical():
+    m = _mgr(host_blocks=8)
+    prompt = np.arange(20, dtype=np.int32)
+    payload = _publish(m, prompt)
+    keys = [m._hashed[b] for b in
+            [m._index[k] for k in m._index]]      # snapshot published keys
+    assert len(keys) == 2
+    while m._shed_any():                          # pressure: shed everything
+        pass
+    assert m.hash_blocks_resident == 0 and m.kv_demotions == 2
+    # two-tier disjointness: the keys moved, they did not fork
+    assert set(keys) == m.host_pool.demoted_keys()
+    assert not (set(m._index) & m.host_pool.demoted_keys())
+    s, reused = m.try_admit(prompt, max_new=4)
+    assert reused == 16 and m.kv_rehydrations == 2
+    assert m.host_pool.n_demoted == 0             # moved back, not copied
+    _payloads_equal(_raw_np(m, list(m.tables[s])[:2]), payload)
+    m.free(s)
+    assert m.pristine
+    m.flush_index()
+    m.flush_host()
+    assert m.allocator.n_free == m.allocator.usable
+
+
+def test_import_block_drops_stale_demoted_twin():
+    """A key arriving on-device through ANY publish path must evict its
+    demoted host copy: one key, one tier."""
+    src = _mgr()
+    dst = _mgr(host_blocks=8)
+    prompt = np.arange(20, dtype=np.int32)
+    _publish(src, prompt)
+    _publish(dst, prompt)
+    while dst._shed_any():
+        pass
+    key = src.chain_keys(prompt)[0]
+    assert dst.host_pool.has_demoted(key)
+    bid = dst.import_block(key, src, src._index[key])
+    assert bid is not None
+    assert not dst.host_pool.has_demoted(key)
+    assert not (set(dst._index) & dst.host_pool.demoted_keys())
+
+
+# --------------------------------------------------- priority-class lending
+def test_class_debt_lending_order():
+    """``charged_debt`` lends from batch reservations first, then standard;
+    interactive debt is never lent — and all-standard traffic reduces to
+    the classless ``ceil(debt / over_admit)`` exactly."""
+    prompt = np.zeros((8,), np.int32)             # 4-block life: 1 held,
+    mk = lambda: _mgr(n_blocks=32, bs=16, over_admit=2.0)  # noqa: E731
+
+    m = mk()                                      # 3 debt per admit
+    m.try_admit(prompt, max_new=56, priority="interactive")
+    m.try_admit(prompt, max_new=56, priority="batch")
+    assert m.reserved_debt == 6
+    # lend = 6 - ceil(6/2) = 3, all of it from the batch request
+    assert m.charged_debt == 3
+
+    m = mk()
+    m.try_admit(prompt, max_new=56, priority="interactive")
+    m.try_admit(prompt, max_new=56, priority="interactive")
+    assert m.reserved_debt == 6
+    assert m.charged_debt == 6                    # interactive is never lent
+
+    m = mk()
+    s1, _ = m.try_admit(prompt, max_new=56)
+    m.try_admit(prompt, max_new=56)
+    assert m.charged_debt == 3                    # classless baseline
+    m.free(s1)                                    # debt retires with its class
+    assert m.reserved_debt == 3 and m.charged_debt == 2
+
+
+def test_pick_victim_prefers_batch_class():
+    cfg = get_reduced("llama3-8b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("serve", jax.random.PRNGKey(2))
+    eng = UnifiedEngine(MixedLoraModel(cfg, params, store), EngineConfig(
+        capacity=4, pf_capacity=4, s_max=64, virtual_time=True, paged=True,
+        block_size=16, n_blocks=40))
+    rng = np.random.default_rng(11)
+    # interactive arrives LAST: classless order would evict it first
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8)
+                    .astype(np.int32), adapter="serve", max_new_tokens=20,
+                    arrival=0.1 * i, priority_class=pc)
+            for i, pc in enumerate(("batch", "standard", "interactive"))]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(200):
+        eng.tick()
+        if all(r.state is State.DECODE for r in reqs):
+            break
+    assert all(r.state is State.DECODE for r in reqs)
+    assert eng.active[eng._pick_victim(frozenset())].priority_class \
+        == "batch"
+    # with the batch resident shielded, standard goes before interactive
+    batch_slot = reqs[0].dec_slot
+    assert eng.active[eng._pick_victim(frozenset([batch_slot]))] \
+        .priority_class == "standard"
+
+
+def test_scheduler_admits_interactive_first_on_score_ties():
+    sched = Scheduler(SchedulerConfig(), capacity=8)
+    rs = [Request(rid=i, prompt=np.zeros((8,), np.int32), adapter="",
+                  max_new_tokens=8, arrival=0.0, priority_class=pc)
+          for i, pc in enumerate(("batch", "standard", "interactive"))]
+    d = sched.decide(rs, 0, 8, 4, False, probe_fn=lambda r: 0, now=0.0)
+    assert [r.priority_class for r in d.admit] \
+        == ["interactive", "standard", "batch"]
+
+
+def test_unknown_priority_class_ranks_as_standard():
+    """A misspelled class must not silently become un-preemptable (rank
+    0) or permanently lendable (rank 2): it ranks as standard."""
+    assert PRIORITY_CLASSES == ("interactive", "standard", "batch")
+    assert priority_rank("urgent") == priority_rank("standard") == 1
+    m = _mgr(over_admit=2.0)
+    s, _ = m.try_admit(np.zeros((4,), np.int32), max_new=4,
+                       priority="urgent")
+    assert m._slot_rank[s] == 1
+
+
+# ------------------------------------------------------- int8 host tier
+def test_quant_host_tier_halves_block_bytes_and_roundtrips():
+    m = _mgr(host_blocks=4, host_quant=True)
+    raw = _mgr(host_blocks=4)
+    # same RAW byte budget, smaller per-entry footprint = more entries
+    assert m.host_pool.capacity_bytes == raw.host_pool.capacity_bytes
+    assert m.host_block_bytes < raw.host_block_bytes
+    prompt = np.arange(20, dtype=np.int32)
+    s, _ = m.try_admit(prompt, max_new=4)
+    m.commit_prefill([(0, s)], [20])
+    bids = list(m.tables[s])
+    before = _scribble(m, bids, seed=3)
+    sid = m.swap_out(s)
+    assert m.kv_swap_out_bytes == 3 * m.host_block_bytes
+    m.free(s)
+    s2, _ = m.try_admit(prompt, max_new=4)
+    assert m.restore_swap(s2, sid) == 19
+    # int8 residency is NOT bit-identical (that is the exactness-exempt
+    # deal): per-group symmetric quantization bounds the error at half a
+    # step of the per-(-2)-axis scale
+    tol = max(float(np.max(np.abs(v))) for d in before for v in d.values()) \
+        / 126.0
+    _payloads_equal(_raw_np(m, list(m.tables[s2])[:3]), before,
+                    exact=False, tol=tol)
+    m.free(s2)
+    assert m.pristine
+
+
+# ----------------------------------------------------- engine byte-exactness
+def _engine(cfg, **kw):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    store = AdapterStore(cfg, LCFG, jax.random.PRNGKey(1))
+    store.load_random("serve", jax.random.PRNGKey(2))
+    kw = {"capacity": 4, "pf_capacity": 2, "s_max": 64, "virtual_time": True,
+          "paged": True, "block_size": 16, **kw}
+    return UnifiedEngine(MixedLoraModel(cfg, params, store),
+                         EngineConfig(**kw))
+
+
+def test_swap_preemption_byte_identical_to_recompute():
+    """The tentpole contract end to end: with a host pool, preemption
+    swaps out and re-admission restores — and the outputs must be
+    byte-identical to recompute preemption, which itself matches the
+    conservative no-preemption gate."""
+    cfg = get_reduced("llama3-8b")
+    rng = np.random.default_rng(11)
+    mk_reqs = lambda: [Request(                    # noqa: E731
+        rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+        adapter="serve", max_new_tokens=40, arrival=0.1 * i)
+        for i in range(3)]
+    outs, engines = [], []
+    for kw in ({"n_blocks": 8},                            # conservative
+               {"n_blocks": 8, "over_admit": 2.0},         # recompute
+               {"n_blocks": 8, "over_admit": 2.0,          # swap-restore
+                "kv_host_blocks": 8}):
+        rng = np.random.default_rng(11)
+        eng = _engine(cfg, **kw)
+        for r in mk_reqs():
+            eng.submit(r)
+        eng.run(max_ticks=5000)
+        assert len(eng.finished) == 3
+        assert all(r.state is State.DONE for r in eng.finished)
+        outs.append({r.rid: r.output for r in eng.finished})
+        engines.append(eng)
+    assert outs[0] == outs[1] == outs[2]
+    recompute, swap = engines[1], engines[2]
+    assert recompute.metrics.preemptions >= 1
+    assert swap.metrics.preemptions >= 1
+    assert swap.metrics.kv_swap_outs >= 1
+    assert swap.metrics.kv_restores == swap.metrics.kv_swap_outs
+    assert swap.metrics.kv_restored_tokens > 0
+    # the restore displaced recompute: strictly fewer re-prefilled tokens
+    assert swap.metrics.preempted_tokens_recomputed \
+        < recompute.metrics.preempted_tokens_recomputed
+    # transfers were charged to the virtual clock, not modeled free
+    assert swap.metrics.host_bytes_peak > 0
+    for eng in engines:
+        mgr = eng.cachemgr
+        assert mgr.pristine
+        mgr.flush_index()
+        mgr.flush_host()
+        assert mgr.allocator.n_free == mgr.allocator.usable
+        assert mgr.reserved_debt == 0 and not mgr.tables
+        if mgr.host_pool is not None:
+            assert mgr.host_pool.used_bytes == 0
